@@ -1,0 +1,72 @@
+"""Benchmark helpers.
+
+The main benchmark process sees exactly ONE CPU device (per the brief).
+Multi-device measurements therefore run in subprocesses that set
+``--xla_force_host_platform_device_count`` before importing jax; each
+benchmark module doubles as that subprocess entry point (``--json`` mode).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Callable, Dict, List, Optional
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(module: str, devices: int = 8,
+                   args: Optional[List[str]] = None,
+                   timeout: int = 1200) -> List[Dict]:
+    """Run ``python -m benchmarks.<module> --json`` with N fake devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + os.path.dirname(SRC)
+    env["BENCH_DEVICES"] = str(devices)
+    r = subprocess.run(
+        [sys.executable, "-m", f"benchmarks.{module}", "--json"]
+        + (args or []),
+        capture_output=True, text=True, env=env, timeout=timeout,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"benchmarks.{module} failed:\n{r.stdout}\n{r.stderr}")
+    # last JSON line of stdout
+    for line in reversed(r.stdout.strip().splitlines()):
+        line = line.strip()
+        if line.startswith("[") or line.startswith("{"):
+            return json.loads(line)
+    raise RuntimeError(f"no JSON in output of {module}:\n{r.stdout}")
+
+
+def force_devices_from_env() -> None:
+    """Subprocess entry: honor BENCH_DEVICES before jax import."""
+    n = os.environ.get("BENCH_DEVICES")
+    if n and "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n}")
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds per call (after warmup, block_until_ready)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: List[Dict], as_json: bool) -> None:
+    if as_json:
+        print(json.dumps(rows))
+    else:
+        for r in rows:
+            print(f"{r['name']},{r.get('us_per_call', '')},"
+                  f"{r.get('derived', '')}")

@@ -1,0 +1,77 @@
+"""Paper Fig. 2: bulk communication dominates aggregation compute in a
+1-layer ring-forwarding GNN (the NCCL baseline pattern).
+
+We rebuild the paper's microbenchmark: every device holds a node-embedding
+shard; a "NCCL-style" layer all-gathers the full table, then aggregates.
+Reported: comm time, compute time, and their ratio (paper: >5× on reddit /
+enwiki with real NVLink; the CPU-backend ratio differs numerically but the
+structural comparison — and the roofline-term version computed from the
+plan — reproduce the paper's conclusion).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._common import emit, force_devices_from_env, timeit
+
+force_devices_from_env()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+import repro.core as C  # noqa: E402
+from repro.core.autotune import TPU_V5E  # noqa: E402
+from repro.dist import flat_ring_mesh  # noqa: E402
+
+
+def run(as_json: bool) -> list:
+    n_dev = len(jax.devices())
+    mesh = flat_ring_mesh(n_dev)
+    rows = []
+    for name in ("reddit", "enwiki"):
+        g, meta = C.paper_dataset(name, scale=0.5)
+        d = int(meta["dim"])
+        x = np.random.default_rng(0).normal(
+            size=(g.num_nodes, d)).astype(np.float32)
+        nbrs, mask, tgt, rpd = C.build_bulk_plan(g, n_dev, ps=16)
+        bounds = C.edge_balanced_node_split(g.indptr, n_dev)
+        xb = jnp.asarray(C.pad_table(bounds, rpd, x))
+
+        # comm only: all-gather the full table
+        gather = jax.jit(jax.shard_map(
+            lambda z: jax.lax.all_gather(z, "ring", axis=0, tiled=True),
+            mesh=mesh, in_specs=P("ring"), out_specs=P(None),
+            check_vma=False))
+        t_comm = timeit(gather, xb)
+
+        # compute only: aggregation against a local (already gathered) table
+        full = jnp.asarray(np.asarray(gather(xb)))
+        agg = jax.jit(lambda f: C.fetch_rows_aggregate(
+            f, np.arange(n_dev * rpd, dtype=np.int32)[None, :].repeat(
+                n_dev, 0), nbrs, mask, tgt, rpd))
+        t_comp = timeit(agg, full)
+
+        ratio = t_comm / t_comp
+        rows.append(dict(
+            name=f"fig2_{name}_comm", us_per_call=round(t_comm * 1e6, 1),
+            derived=f"ratio_comm_over_comp={ratio:.2f}"))
+        rows.append(dict(
+            name=f"fig2_{name}_comp", us_per_call=round(t_comp * 1e6, 1),
+            derived=""))
+        # roofline-term version on the paper's REAL sizes + target hardware
+        e = meta["real_edges"]
+        v = meta["real_nodes"]
+        bytes_comm = v * d * 4  # full table over the interconnect
+        bytes_comp = 2 * e * d * 4
+        t_comm_hw = bytes_comm / TPU_V5E.link_bw
+        t_comp_hw = bytes_comp / (n_dev * TPU_V5E.hbm_bw)
+        rows.append(dict(
+            name=f"fig2_{name}_modeled", us_per_call="",
+            derived=f"hw_ratio={t_comm_hw / t_comp_hw:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run("--json" in sys.argv), "--json" in sys.argv)

@@ -1,0 +1,104 @@
+"""Paper Fig. 8: MGG vs UVM-based design, GCN + GIN end-to-end, all five
+datasets (scaled stand-ins), 8-device ring.
+
+UVM analogue (per DESIGN.md): page-granular fetch-then-aggregate with no
+overlap — each device pulls whole "pages" of remote rows before computing
+(the §2.2 access pattern), vs MGG's pipelined ring.  We report wall-clock
+per aggregation epoch on the CPU backend plus the modeled TPU-term
+speedup; the paper measures 3.16× (GCN) / 4.15× (GIN) on A100s.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._common import emit, force_devices_from_env, timeit
+
+force_devices_from_env()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.core as C  # noqa: E402
+from repro.dist import flat_ring_mesh  # noqa: E402
+
+PAGE_ROWS = 16  # ≈64 KB pages / (dim · 4 B), the paper's migration granularity
+
+
+def _uvm_epoch(g, x, n_dev, layers):
+    fp = C.build_fetch_plan(g, n_dev, ps=16, page_rows=PAGE_ROWS)
+    bounds = C.edge_balanced_node_split(g.indptr, n_dev)
+    rows = fp["rows_per_dev"]
+    xb = jnp.asarray(C.pad_table(bounds, rows, x))
+
+    @jax.jit
+    def epoch(z):
+        for _ in range(layers):
+            out = C.fetch_rows_aggregate(
+                z, fp["fetch_rows"], fp["nbrs"], fp["mask"], fp["targets"],
+                rows)
+            z = out.reshape(z.shape)
+        return z
+
+    return timeit(epoch, xb), fp
+
+
+def _mgg_epoch(g, x, n_dev, mesh, layers, ps=16, dist=2):
+    plan = C.build_plan(g, n_dev, ps=ps, dist=dist)
+    xb = jnp.asarray(C.pad_embeddings(plan, x))
+
+    @jax.jit
+    def epoch(z):
+        for _ in range(layers):
+            z = C.mgg_aggregate(z, plan, mesh, interleave=True)
+        return z
+
+    return timeit(epoch, xb), plan
+
+
+def run(as_json: bool) -> list:
+    n_dev = len(jax.devices())
+    mesh = flat_ring_mesh(n_dev)
+    rows = []
+    for model, layers in (("gcn", 2), ("gin", 5)):
+        for name in ("reddit", "enwiki", "products", "proteins", "orkut"):
+            g, meta = C.paper_dataset(name, scale=0.35)
+            d = min(int(meta["dim"]), 128)
+            x = np.random.default_rng(0).normal(
+                size=(g.num_nodes, d)).astype(np.float32)
+            t_uvm, fp = _uvm_epoch(g, x, n_dev, layers)
+            t_mgg, plan = _mgg_epoch(g, x, n_dev, mesh, layers)
+            speed = t_uvm / t_mgg
+            # modeled fetch-volume ratio (the paper's mechanism: page waste)
+            exact = C.build_fetch_plan(g, n_dev, ps=16, page_rows=1)
+            waste = (np.mean(fp["fetched_rows_per_dev"])
+                     / max(1.0, np.mean(exact["fetched_rows_per_dev"])))
+            # modeled TPU-term speedup at the REAL dataset size: UVM has no
+            # overlap (comm + comp, with page-waste bytes); MGG overlaps
+            # (max(comm, comp) + fill).  The CPU wall-clock above CANNOT
+            # show overlap (one core serializes compute and "comm"), so the
+            # hardware terms carry the paper's actual claim.
+            from repro.core.autotune import TPU_V5E as HW
+            e, v = meta["real_edges"], meta["real_nodes"]
+            dim = int(meta["dim"])
+            comp = 2 * e * dim * 4 / n_dev / HW.hbm_bw
+            comm_mgg = v * dim * 4 / n_dev / HW.link_bw  # ring, exact rows
+            comm_uvm = waste * v * dim * 4 / n_dev / HW.link_bw
+            # UVM's dominant cost is page-FAULT handling, not bandwidth
+            # (paper Fig. 3: fault count/duration grow with GPU count);
+            # ~30 µs per 64 KB page migration, demand-paged.
+            pages = waste * v * dim * 4 / n_dev / 65536
+            t_fault = pages * 30e-6
+            t_mgg_hw = max(comm_mgg, comp) + comm_mgg / n_dev
+            t_uvm_hw = comm_uvm + comp + t_fault
+            rows.append(dict(
+                name=f"fig8_{model}_{name}",
+                us_per_call=round(t_mgg * 1e6, 1),
+                derived=(f"uvm_us={t_uvm*1e6:.1f};cpu_ratio={speed:.2f};"
+                         f"page_waste={waste:.2f}x;"
+                         f"modeled_tpu_speedup={t_uvm_hw/t_mgg_hw:.2f}")))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run("--json" in sys.argv), "--json" in sys.argv)

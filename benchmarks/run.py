@@ -1,0 +1,70 @@
+"""Benchmark harness entry point — one section per paper table/figure plus
+the roofline report.  Prints ``name,us_per_call,derived`` CSV.
+
+The main process sees ONE CPU device; modules needing a multi-device ring
+run as subprocesses with 8 forced host devices (benchmarks/_common.py).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks._common import run_subprocess
+
+MULTI_DEVICE_MODULES = [
+    "fig2_comm_compute",
+    "table1_direct_vs_batched",
+    "fig8_mgg_vs_uvm",
+    "table4_vs_dgcl",
+    "fig9_ablations",
+    "fig10_autotune",
+    "table5_sampling",
+]
+LOCAL_MODULES = ["gather_fraction", "roofline"]
+QUICK_SKIP = {"fig10_autotune", "table5_sampling"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--devices", type=int, default=8)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in MULTI_DEVICE_MODULES:
+        if only and mod not in only:
+            continue
+        if args.quick and mod in QUICK_SKIP:
+            continue
+        try:
+            for row in run_subprocess(mod, devices=args.devices):
+                print(f"{row['name']},{row.get('us_per_call', '')},"
+                      f"\"{row.get('derived', '')}\"")
+            sys.stdout.flush()
+        except Exception as e:
+            failures.append((mod, e))
+            print(f"{mod},ERROR,\"{e}\"", file=sys.stderr)
+    for mod in LOCAL_MODULES:
+        if only and mod not in only:
+            continue
+        try:
+            module = __import__(f"benchmarks.{mod}", fromlist=["run"])
+            for row in module.run(False):
+                print(f"{row['name']},{row.get('us_per_call', '')},"
+                      f"\"{row.get('derived', '')}\"")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((mod, e))
+    if failures:
+        print(f"# {len(failures)} benchmark module(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

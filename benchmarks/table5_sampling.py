@@ -1,0 +1,110 @@
+"""Paper Table 5: accuracy/latency tradeoff, full-graph vs sampled GNN.
+
+Synthetic node classification (class-dependent feature means + homophilous
+edges): train a 2-layer GCN (paper setting) full-graph and with
+neighbor-sampled aggregation (cap each node at k sampled neighbors), then
+compare test accuracy and epoch latency.  Paper: 2–5% accuracy advantage
+for full-graph at ~1.07–1.25× latency.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._common import emit, force_devices_from_env, timeit
+
+force_devices_from_env()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.core as C  # noqa: E402
+from repro.dist import flat_ring_mesh  # noqa: E402
+from repro.train.data import graph_features  # noqa: E402
+from repro.train.optimizer import (AdamWConfig, adamw_init,  # noqa: E402
+                                   adamw_update)
+
+
+def _homophilous(n, ncls, deg, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, ncls, n)
+    dst = np.repeat(np.arange(n), deg)
+    src = rng.integers(0, n, len(dst))
+    same = rng.random(len(dst)) < 0.7  # homophily: mostly same-class edges
+    pools = {c: np.where(labels == c)[0] for c in range(ncls)}
+    src_same = np.array([pools[labels[d]][rng.integers(len(pools[labels[d]]))]
+                         for d in dst])
+    src = np.where(same, src_same, src)
+    from repro.core.graph import _from_edges
+    return _from_edges(dst.astype(np.int64), src.astype(np.int64), n), labels
+
+
+def _sampled_graph(g, k, seed=0):
+    rng = np.random.default_rng(seed)
+    dst, src = [], []
+    for v in range(g.num_nodes):
+        nb = g.row(v)
+        if len(nb) > k:
+            nb = rng.choice(nb, size=k, replace=False)
+        dst.extend([v] * len(nb))
+        src.extend(nb.tolist())
+    from repro.core.graph import _from_edges
+    return _from_edges(np.asarray(dst, np.int64), np.asarray(src, np.int64),
+                       g.num_nodes)
+
+
+def _train(g, x, y, train_mask, mesh, epochs=40, ps=16):
+    eng = C.GNNEngine.build(g, mesh, ps=ps)
+    xp = eng.shard(eng.pad(x))
+    pad1 = lambda a: C.pad_table(eng.plan.bounds, eng.plan.rows_per_dev,
+                                 a[:, None])[:, 0]
+    yp = jnp.asarray(pad1(y.astype(np.int32)))
+    mp_train = jnp.asarray(pad1(train_mask.astype(np.float32)))
+    init, apply, kw = C.MODEL_ZOO["gcn"]
+    params = init(jax.random.key(0), x.shape[1], int(y.max()) + 1, **kw)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=epochs,
+                       weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt):
+        loss, grads = jax.value_and_grad(
+            lambda p: C.masked_cross_entropy(apply(p, eng, xp), yp, mp_train)
+        )(params)
+        params, opt, _ = adamw_update(grads, opt, params, ocfg)
+        return params, opt, loss
+
+    t = timeit(lambda: step(params, opt)[2], warmup=1, iters=3)
+    for _ in range(epochs):
+        params, opt, _ = step(params, opt)
+    logits = np.asarray(apply(params, eng, xp))
+    pred = C.unpad_embeddings(eng.plan, logits).argmax(-1)
+    test = ~train_mask
+    acc = float((pred[test] == y[test]).mean())
+    return acc, t
+
+
+def run(as_json: bool) -> list:
+    n_dev = len(jax.devices())
+    mesh = flat_ring_mesh(n_dev)
+    g, y = _homophilous(1600, ncls=6, deg=24)
+    x, _, train_mask = graph_features(g.num_nodes, 32, 6, seed=2)
+    # overwrite features to correlate with OUR labels
+    centers = np.random.default_rng(0).normal(size=(6, 32)).astype(np.float32)
+    x = centers[y] * 0.4 + np.random.default_rng(1).normal(
+        size=(g.num_nodes, 32)).astype(np.float32)
+    acc_full, t_full = _train(g, x, y, train_mask, mesh, ps=16)
+    gs = _sampled_graph(g, k=4)
+    # fair ps for the sampled graph (max degree 4): the autotuner's layout
+    # knob — ps=16 would pad 75% of every partition
+    acc_samp, t_samp = _train(gs, x, y, train_mask, mesh, ps=4)
+    return [dict(
+        name="table5_full_vs_sampled",
+        us_per_call=round(t_full * 1e6, 1),
+        derived=(f"acc_full={acc_full:.3f};acc_sampled={acc_samp:.3f};"
+                 f"acc_gain={(acc_full-acc_samp)*100:.1f}pp;"
+                 f"latency_ratio={t_full/t_samp:.2f}"))]
+
+
+if __name__ == "__main__":
+    emit(run("--json" in sys.argv), "--json" in sys.argv)

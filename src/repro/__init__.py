@@ -1,0 +1,3 @@
+"""repro: MGG (fine-grained communication-computation pipelining) on TPU —
+core GNN engine + assigned LM-architecture framework."""
+__version__ = "1.0.0"

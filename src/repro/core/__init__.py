@@ -1,0 +1,37 @@
+"""MGG core: the paper's contribution — pipeline-aware workload management,
+hybrid data placement, pipelined ring aggregation, analytical autotuning,
+and the full-graph GNN models built on top."""
+from .graph import CSRGraph, erdos_renyi, power_law, paper_dataset, PAPER_DATASETS
+from .partition import (
+    edge_balanced_node_split,
+    locality_edge_split,
+    neighbor_partitions,
+    NeighborPartitions,
+    VirtualGraphs,
+)
+from .placement import (
+    AggregationPlan,
+    build_plan,
+    build_bulk_plan,
+    build_fetch_plan,
+    pad_table,
+    unpad_table,
+    pad_embeddings,
+    unpad_embeddings,
+)
+from .pipeline import (
+    mgg_aggregate,
+    bulk_aggregate,
+    fetch_rows_aggregate,
+    reference_aggregate,
+    collective_bytes,
+)
+from .autotune import (
+    HardwareSpec,
+    TPU_V5E,
+    A100_NVSWITCH,
+    estimate_latency,
+    cross_iteration_optimize,
+    WorkloadShape,
+)
+from .gnn import GNNEngine, MODEL_ZOO, masked_cross_entropy

@@ -1,0 +1,231 @@
+"""Analytical modeling and cross-iteration design optimization (paper §4).
+
+The paper models two resources —
+
+    WPW  = 2 · ps · D · dist                  (work per warp)
+    SMEM = ps · wpb · IntS + 2 · wpb · D · FloatS   (shared mem per block)
+
+— and runs a greedy coordinate-descent search (``ps → dist → wpb``, with a
+"retreat" rule on ``ps`` and a stop-at-top-3 criterion), converging in ~10
+measurements (paper Fig. 10, up to 68% latency reduction vs. the initial
+configuration).
+
+TPU re-targeting (DESIGN.md §2):
+
+* ``ps``   — unchanged: neighbor-partition size (layout-time knob).
+* ``dist`` — ring tiles per shard: pipeline granularity (init-time knob).
+* ``wpb``  — Pallas partition-block height ``pb``: how many neighbor
+  partitions one kernel grid cell processes (runtime mapping knob).
+* ``SMEM ≤ 164 KB/SM`` becomes ``VMEM ≤ ~16 MB/core``: the ring double
+  buffer (2 tiles) plus the kernel block working set must fit VMEM.
+
+The latency model combines the three roofline terms of the ring schedule so
+the same machinery drives both the autotuner and the §Roofline analysis in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .graph import CSRGraph
+from .partition import edge_balanced_node_split, locality_edge_split
+
+__all__ = [
+    "HardwareSpec",
+    "TPU_V5E",
+    "A100_NVSWITCH",
+    "estimate_latency",
+    "vmem_bytes",
+    "cross_iteration_optimize",
+    "SearchResult",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip hardware constants for the analytical model."""
+
+    name: str
+    peak_flops: float        # FLOP/s (bf16 for TPU)
+    hbm_bw: float            # bytes/s
+    link_bw: float           # bytes/s per ICI link / NVLink direction
+    vmem_bytes: int          # VMEM (TPU) or SMEM-per-SM * SMs (GPU)
+    cores: int = 1
+
+
+# Target hardware for the roofline (per the brief): TPU v5e.
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    vmem_bytes=16 * 2**20,
+)
+
+# The paper's platform, used to sanity-check the model against paper numbers.
+A100_NVSWITCH = HardwareSpec(
+    name="a100_nvswitch",
+    peak_flops=312e12,
+    hbm_bw=1555e9,
+    link_bw=300e9,  # NVSwitch per-GPU uni-directional
+    vmem_bytes=164 * 1024 * 108,
+)
+
+
+def vmem_bytes(ps: int, pb: int, dim_block: int, tile_rows: int,
+               d_feat: int, itemsize: int = 4) -> int:
+    """VMEM working set: ring double buffer + one kernel block.
+
+    Paper SMEM analogue: ids (ps·pb·4) + partial results (pb·D) + staged
+    remote rows; the ring adds two tiles (current + in-flight).
+    """
+    kernel = ps * pb * 4 + pb * dim_block * itemsize + ps * dim_block * itemsize
+    ring = 2 * tile_rows * min(dim_block * 8, d_feat) * itemsize
+    return kernel + ring
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadShape:
+    """Aggregate statistics the latency model consumes (host-side, cheap)."""
+
+    n_dev: int
+    d_feat: int
+    rows_per_dev: int
+    local_edges_max: int    # max over devices
+    remote_edges_max: int
+    itemsize: int = 4
+
+    @staticmethod
+    def from_graph(graph: CSRGraph, n_dev: int, d_feat: int,
+                   itemsize: int = 4) -> "WorkloadShape":
+        bounds = edge_balanced_node_split(graph.indptr, n_dev)
+        le, re = 0, 0
+        for d in range(n_dev):
+            vg = locality_edge_split(graph, bounds, d)
+            le = max(le, vg.local.num_edges)
+            re = max(re, vg.remote.num_edges)
+        rows = int((bounds[1:] - bounds[:-1]).max())
+        return WorkloadShape(n_dev, d_feat, rows, le, re, itemsize)
+
+
+def estimate_latency(
+    w: WorkloadShape,
+    ps: int,
+    dist: int,
+    pb: int,
+    hw: HardwareSpec = TPU_V5E,
+    interleave: bool = True,
+) -> float:
+    """Modeled per-aggregation latency (seconds) for one device.
+
+    Ring schedule: S = (n-1)·dist steps.  Per step,
+      comm  = tile_bytes / link_bw
+      comp  = (remote gather+add bytes + interleaved local share) / hbm_bw
+    With overlap (interleave=True) a step costs max(comm, comp); without, the
+    local pass runs first and every step costs comm + remote-comp (paper
+    Fig. 7a vs 7b).  Padding inefficiency from partition granularity is
+    modeled by rounding edges up to multiples of ps per node — the same
+    waste the mask slots represent at runtime.
+    """
+    if w.n_dev == 1:
+        bytes_local = 2 * w.local_edges_max * w.d_feat * w.itemsize
+        return bytes_local / hw.hbm_bw
+    tile_rows = -(-w.rows_per_dev // dist)
+    steps = (w.n_dev - 1) * dist
+    tile_bytes = tile_rows * w.d_feat * w.itemsize
+    # partition-padding waste: ~ps/2 wasted slots per node on average; fold
+    # into an effective edge multiplier (calibrated vs. plan.stats()).
+    pad_mult = 1.0 + 0.5 * ps * w.n_dev / max(1, w.remote_edges_max)
+    re_bytes = 2 * w.remote_edges_max * pad_mult * w.d_feat * w.itemsize
+    lc_bytes = 2 * w.local_edges_max * w.d_feat * w.itemsize
+    t_comm = tile_bytes / hw.link_bw
+    t_remote = re_bytes / steps / hw.hbm_bw
+    t_local = lc_bytes / steps / hw.hbm_bw
+    # pb: block mapping efficiency — too small starves the VPU lanes, too big
+    # spills VMEM.  Modeled as a mild efficiency curve peaking at pb where the
+    # block fits VMEM (hard constraint checked by the caller).
+    eff = min(1.0, 0.55 + 0.15 * np.log2(max(1, pb)))
+    if interleave:
+        per_step = max(t_comm, (t_remote + t_local) / eff)
+        return steps * per_step + t_comm  # + pipeline fill
+    return lc_bytes / hw.hbm_bw / eff + steps * (t_comm + t_remote / eff)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: Dict[str, int]
+    best_latency: float
+    trajectory: List[Tuple[Dict[str, int], float]]
+    table: Dict[Tuple[int, int, int], float]
+
+    @property
+    def num_trials(self) -> int:
+        return len(self.trajectory)
+
+
+def cross_iteration_optimize(
+    measure: Callable[[int, int, int], float],
+    ps_space: Tuple[int, ...] = (1, 2, 4, 8, 16, 32),
+    dist_space: Tuple[int, ...] = (1, 2, 4, 8, 16),
+    pb_space: Tuple[int, ...] = (1, 2, 4, 8, 16),
+    vmem_check: Optional[Callable[[int, int, int], bool]] = None,
+) -> SearchResult:
+    """The paper's cross-iteration optimization (§4), verbatim logic.
+
+    ``measure(ps, dist, pb) -> latency``.  Parameters start at the smallest
+    value; each phase greedily increases one knob while latency improves:
+
+    1. increase ``ps`` until latency rises (layout),
+    2. increase ``dist`` likewise (pipeline),
+    3. increase ``pb``; if no pb improves, *retreat* ``ps`` one notch and
+       retry (the paper's "decrease ps to its second-highest value"),
+    stopping when further moves cannot beat the top-3 recorded latencies.
+    A lookup table memoizes every measured configuration.
+    """
+    table: Dict[Tuple[int, int, int], float] = {}
+    traj: List[Tuple[Dict[str, int], float]] = []
+
+    def mget(ps: int, dist: int, pb: int) -> float:
+        key = (ps, dist, pb)
+        if key not in table:
+            if vmem_check is not None and not vmem_check(ps, dist, pb):
+                table[key] = float("inf")
+            else:
+                table[key] = float(measure(ps, dist, pb))
+            traj.append((dict(ps=ps, dist=dist, pb=pb), table[key]))
+        return table[key]
+
+    def climb(values: Tuple[int, ...], cur: int, f: Callable[[int], float]) -> int:
+        best, best_lat = cur, f(cur)
+        for v in values:
+            if v <= cur:
+                continue
+            lat = f(v)
+            if lat < best_lat:
+                best, best_lat = v, lat
+            else:
+                break  # paper: stop the search once latency increases
+        return best
+
+    ps = climb(ps_space, ps_space[0], lambda v: mget(v, dist_space[0], pb_space[0]))
+    dist = climb(dist_space, dist_space[0], lambda v: mget(ps, v, pb_space[0]))
+    pb = climb(pb_space, pb_space[0], lambda v: mget(ps, dist, v))
+
+    # Retreat rule: if pb never improved, drop ps one notch and retry pb.
+    if pb == pb_space[0] and ps != ps_space[0]:
+        ps_retreat = ps_space[max(0, ps_space.index(ps) - 1)]
+        pb2 = climb(pb_space, pb_space[0], lambda v: mget(ps_retreat, dist, v))
+        if mget(ps_retreat, dist, pb2) < mget(ps, dist, pb):
+            ps, pb = ps_retreat, pb2
+
+    best_key = min(table, key=lambda k: table[k])
+    return SearchResult(
+        best=dict(ps=best_key[0], dist=best_key[1], pb=best_key[2]),
+        best_latency=table[best_key],
+        trajectory=traj,
+        table=table,
+    )

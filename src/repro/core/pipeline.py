@@ -1,0 +1,300 @@
+"""MGG pipelined aggregation: shard_map + ppermute ring, double-buffered.
+
+This is the paper's pipeline-centric kernel (§3.3–§3.4) re-expressed for TPU
+(DESIGN.md §2).  Per chip, neighbor aggregation is split into
+
+* a **local** pass over the chip's own embedding shard (paper: local virtual
+  graph, full-HBM-bandwidth), and
+* ``(n-1) · dist`` **ring steps**: each step aggregates one remote tile that
+  arrived over ICI while the *previous* step's compute was running.  The loop
+  body issues ``ppermute`` (tile *k+1*) and the gather+reduce for tile *k*
+  with no data dependence between them — exactly the independence XLA's
+  latency-hiding scheduler needs to overlap the DMA with compute.  This is
+  the paper's Fig. 7(b) (async GET double-buffering) at ring-tile granularity.
+
+The *interleave* flag reproduces §3.3's workload interleaving: local neighbor
+partitions are spread across ring steps so every step carries both
+latency-bound (remote) and compute-bound (local) work; ``interleave=False``
+is the paper's Fig. 9(b) baseline.
+
+Three baselines used throughout benchmarks:
+
+* :func:`bulk_aggregate` — all-gather the full embedding table, then a purely
+  local aggregation (the DGCL/NCCL pattern; paper §2.1, Table 4).
+* :func:`fetch_rows_aggregate` — gather an explicit row set first, aggregate
+  second, with a ``page_rows`` granularity knob.  ``page_rows=1`` models the
+  Direct-NVSHMEM baseline (exact rows, no overlap; Table 1); larger values
+  model UVM's page-granular migration with its wasted bandwidth (§2.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .placement import AggregationPlan
+
+__all__ = [
+    "mgg_aggregate",
+    "bulk_aggregate",
+    "fetch_rows_aggregate",
+    "plan_device_arrays",
+    "reference_aggregate",
+    "collective_bytes",
+]
+
+
+# ---------------------------------------------------------------------------
+# inner gather + reduce (the hot spot; Pallas kernel or jnp)
+# ---------------------------------------------------------------------------
+
+def _gather_sum(buf: jax.Array, nbrs: jax.Array, mask: jax.Array,
+                use_kernel: bool, acc_dtype) -> jax.Array:
+    """``out[p] = sum_j mask[p, j] * buf[nbrs[p, j]]`` → (P, D).
+
+    The paper's warp-level gather+reduce.  ``use_kernel`` routes to the
+    Pallas TPU kernel (kernels/neighbor_agg.py); the jnp path is the oracle
+    and the CPU execution path.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.neighbor_gather_sum(buf, nbrs, mask, acc_dtype=acc_dtype)
+    g = jnp.take(buf, nbrs, axis=0)  # (P, ps, D)
+    return jnp.sum(
+        g.astype(acc_dtype) * mask[..., None].astype(acc_dtype), axis=1
+    )
+
+
+def plan_device_arrays(plan: AggregationPlan) -> Dict[str, np.ndarray]:
+    """The device-resident pytree of an :class:`AggregationPlan`."""
+    return dict(
+        local_nbrs=plan.local_nbrs,
+        local_mask=plan.local_mask,
+        local_targets=plan.local_targets,
+        remote_nbrs=plan.remote_nbrs,
+        remote_mask=plan.remote_mask,
+        remote_targets=plan.remote_targets,
+    )
+
+
+def _plan_specs(axis_name: str) -> Dict[str, P]:
+    return {k: P(axis_name) for k in (
+        "local_nbrs", "local_mask", "local_targets",
+        "remote_nbrs", "remote_mask", "remote_targets")}
+
+
+# ---------------------------------------------------------------------------
+# MGG pipelined ring aggregation
+# ---------------------------------------------------------------------------
+
+def mgg_aggregate(
+    x: jax.Array,
+    plan: AggregationPlan,
+    mesh: Mesh,
+    *,
+    axis_name: str = "ring",
+    interleave: bool = True,
+    use_kernel: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Pipelined sum-aggregation: ``out[v] = Σ_{u ∈ N(v)} x[u]``.
+
+    ``x`` is the padded PGAS embedding table ``(n_dev · rows_per_dev, D)``
+    sharded by rows over ``axis_name`` (see placement.pad_embeddings); the
+    output has the same layout/sharding.
+    """
+    n_dev, dist, tile_rows = plan.n_dev, plan.dist, plan.tile_rows
+    arrays = jax.tree.map(jnp.asarray, plan_device_arrays(plan))
+
+    body = functools.partial(
+        _mgg_shard_body,
+        axis_name=axis_name,
+        n_dev=n_dev,
+        dist=dist,
+        tile_rows=tile_rows,
+        interleave=interleave,
+        use_kernel=use_kernel,
+        acc_dtype=acc_dtype,
+    )
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name), _plan_specs(axis_name)),
+        out_specs=P(axis_name),
+        # Pallas calls inside the body produce vma-less ShapeDtypeStructs;
+        # skip the varying-manual-axes check (correctness is oracle-tested).
+        check_vma=False,
+    )
+    return fn(x, arrays)
+
+
+def _mgg_shard_body(
+    x, arrays, *, axis_name, n_dev, dist, tile_rows, interleave, use_kernel,
+    acc_dtype,
+):
+    # Per-device blocks: squeeze the device-major axis.
+    l_nbrs = arrays["local_nbrs"][0]        # (PL, ps)
+    l_mask = arrays["local_mask"][0]
+    l_tgt = arrays["local_targets"][0]      # (PL,)
+    r_nbrs = arrays["remote_nbrs"][0]       # (S, PR, ps)
+    r_mask = arrays["remote_mask"][0]
+    r_tgt = arrays["remote_targets"][0]     # (S, PR)
+
+    rows, d_feat = x.shape
+    # Mark the accumulator as device-varying so it can be carried through the
+    # ring fori_loop (shard_map vma typing).
+    out = jnp.zeros((rows, d_feat), acc_dtype)
+    if hasattr(lax, "pcast"):
+        out = lax.pcast(out, (axis_name,), to="varying")
+    else:  # older jax
+        out = lax.pvary(out, (axis_name,))
+    n_steps = r_nbrs.shape[0] if n_dev > 1 else 0
+
+    # ---- local work scheduling (paper §3.3 interleaving) -------------------
+    if interleave and n_steps > 0:
+        pl_total = l_nbrs.shape[0]
+        ls = -(-pl_total // n_steps)  # ceil: local partitions per ring step
+        pad = ls * n_steps - pl_total
+        l_nbrs_s = jnp.pad(l_nbrs, ((0, pad), (0, 0))).reshape(n_steps, ls, -1)
+        l_mask_s = jnp.pad(l_mask, ((0, pad), (0, 0))).reshape(n_steps, ls, -1)
+        l_tgt_s = jnp.pad(l_tgt, ((0, pad),)).reshape(n_steps, ls)
+    else:
+        # Paper Fig. 9(b) baseline: all local partitions up front, then the
+        # (non-overlapped-with-local) remote rounds.
+        out = out.at[l_tgt].add(
+            _gather_sum(x, l_nbrs, l_mask, use_kernel, acc_dtype)
+        )
+
+    if n_dev == 1:
+        return out.astype(x.dtype)
+
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    tiles = x.reshape(dist, tile_rows, d_feat)
+
+    def step_work(out, cur, idx):
+        """Aggregate remote tile `cur` for ring step `idx` (+ its local slice)."""
+        nbrs = lax.dynamic_index_in_dim(r_nbrs, idx, 0, keepdims=False)
+        mask = lax.dynamic_index_in_dim(r_mask, idx, 0, keepdims=False)
+        tgt = lax.dynamic_index_in_dim(r_tgt, idx, 0, keepdims=False)
+        out = out.at[tgt].add(_gather_sum(cur, nbrs, mask, use_kernel, acc_dtype))
+        if interleave:
+            ln = lax.dynamic_index_in_dim(l_nbrs_s, idx, 0, keepdims=False)
+            lm = lax.dynamic_index_in_dim(l_mask_s, idx, 0, keepdims=False)
+            lt = lax.dynamic_index_in_dim(l_tgt_s, idx, 0, keepdims=False)
+            out = out.at[lt].add(_gather_sum(x, ln, lm, use_kernel, acc_dtype))
+        return out
+
+    # One double-buffered ring per tile chunk (chunk-major, so every chunk
+    # performs exactly n_dev - 1 permutes — no wasted trailing rotation).
+    for c in range(dist):
+        cur = lax.ppermute(tiles[c], axis_name, perm)  # rotation 1 (prologue)
+
+        def body(k, carry, c=c):
+            cur, out = carry
+            nxt = lax.ppermute(cur, axis_name, perm)  # rotation k+2 — no dep
+            out = step_work(out, cur, k * dist + c)   # on the aggregation ⇒
+            return (nxt, out)                          # XLA overlaps DMA+compute
+
+        cur, out = lax.fori_loop(0, n_dev - 2, body, (cur, out))
+        out = step_work(out, cur, (n_dev - 2) * dist + c)  # epilogue (drain)
+
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Baseline 1: bulk all-gather + local aggregation (DGCL / NCCL pattern)
+# ---------------------------------------------------------------------------
+
+def bulk_aggregate(
+    x: jax.Array,
+    bulk_nbrs: np.ndarray,   # (n_dev, P, ps) offsets into the padded table
+    bulk_mask: np.ndarray,
+    bulk_targets: np.ndarray,  # (n_dev, P)
+    rows_per_dev: int,
+    mesh: Mesh,
+    *,
+    axis_name: str = "ring",
+    use_kernel: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """All-gather the entire table first, aggregate second (no overlap)."""
+
+    def body(x, nbrs, mask, tgt):
+        full = lax.all_gather(x, axis_name, axis=0, tiled=True)
+        out = jnp.zeros((x.shape[0], x.shape[1]), acc_dtype)
+        out = out.at[tgt[0]].add(
+            _gather_sum(full, nbrs[0], mask[0], use_kernel, acc_dtype)
+        )
+        return out.astype(x.dtype)
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=P(axis_name),
+        check_vma=False,
+    )
+    return fn(x, jnp.asarray(bulk_nbrs), jnp.asarray(bulk_mask),
+              jnp.asarray(bulk_targets))
+
+
+# ---------------------------------------------------------------------------
+# Baseline 2: fetch-then-aggregate with a granularity knob (UVM / Direct)
+# ---------------------------------------------------------------------------
+
+def fetch_rows_aggregate(
+    x: jax.Array,
+    fetch_rows: np.ndarray,   # (n_dev, F) padded-global row ids to fetch
+    nbrs: np.ndarray,         # (n_dev, P, ps) offsets into the fetched buffer
+    mask: np.ndarray,
+    targets: np.ndarray,      # (n_dev, P)
+    out_rows: int,
+    *,
+    use_kernel: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Gather ``fetch_rows`` from the global table, then aggregate locally.
+
+    Cost-model baseline (single-program execution): with exact rows this is
+    the Direct-NVSHMEM pattern of Table 1; with page-expanded rows it is the
+    UVM pattern of §2.2 — the gather volume, not the aggregation math,
+    changes.  No communication/computation overlap by construction.
+    """
+
+    def per_dev(rows_ids, nb, mk, tg):
+        buf = jnp.take(x, rows_ids, axis=0)
+        partial = _gather_sum(buf, nb, mk, use_kernel, acc_dtype)
+        out = jnp.zeros((out_rows, x.shape[1]), acc_dtype)
+        return out.at[tg].add(partial).astype(x.dtype)
+
+    return jax.vmap(per_dev)(
+        jnp.asarray(fetch_rows), jnp.asarray(nbrs), jnp.asarray(mask),
+        jnp.asarray(targets),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Oracle + analytical terms
+# ---------------------------------------------------------------------------
+
+def reference_aggregate(indptr: np.ndarray, indices: np.ndarray,
+                        x: np.ndarray) -> np.ndarray:
+    """Dense oracle: ``out[v] = Σ_{u ∈ N(v)} x[u]`` (float64 accumulation)."""
+    out = np.zeros_like(x, dtype=np.float64)
+    deg = np.diff(indptr)
+    row_ids = np.repeat(np.arange(x.shape[0]), deg)
+    np.add.at(out, row_ids, x[indices].astype(np.float64))
+    return out.astype(x.dtype)
+
+
+def collective_bytes(plan: AggregationPlan, d_feat: int, itemsize: int = 4) -> int:
+    """ICI bytes per device per aggregation: (n-1) full shard rotations."""
+    if plan.n_dev <= 1:
+        return 0
+    return (plan.n_dev - 1) * plan.rows_per_dev * d_feat * itemsize

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU against the ref.py oracles):
+
+* neighbor_agg — the paper's warp-level gather+reduce (scalar-prefetch
+  pipelined + partition-blocked variants)
+* slstm_scan — fused sLSTM recurrence with VMEM-resident weights (§Perf)
+"""
+from . import neighbor_agg, ops, ref, slstm_scan
+from .ops import neighbor_gather_sum

@@ -1,0 +1,112 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles the messy edges so callers (core/pipeline.py) stay clean:
+  * feature-dim padding to lane multiples (128) and block-size selection,
+  * partition padding to ``pb`` multiples for the blocked variant,
+  * VMEM-budget-driven variant selection (the §4 model's hardware constraint),
+  * interpret-mode fallback on non-TPU backends (kernel body runs in Python
+    on CPU — the validation mode mandated for this repo),
+  * custom VJP: the backward of a masked gather-sum is a masked scatter-add,
+    expressed with the same jnp oracle so training works on every backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import neighbor_agg, ref
+
+__all__ = ["neighbor_gather_sum"]
+
+_LANE = 128
+_VMEM_BUDGET = 12 * 2**20  # leave headroom below the ~16 MB/core ceiling
+
+
+def _pick_db(d_pad: int) -> int:
+    """Largest lane-aligned column block ≤ 1024 dividing the padded dim."""
+    db = _LANE
+    while db * 2 <= min(d_pad, 1024) and d_pad % (db * 2) == 0:
+        db *= 2
+    return db
+
+
+def _pad_cols(x: jax.Array, d_pad: int) -> jax.Array:
+    d = x.shape[-1]
+    if d == d_pad:
+        return x
+    return jnp.pad(x, ((0, 0), (0, d_pad - d)))
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def _gather_sum(buf, nbrs, maski, acc_dtype, pb, db, interpret,
+                buf_rows, buf_dtype):
+    t, d = buf.shape
+    d_pad = -(-d // _LANE) * _LANE
+    bufp = _pad_cols(buf, d_pad)
+    if pb is None:
+        out = neighbor_agg.gather_sum_pipelined_call(
+            bufp, nbrs, maski, db=db, acc_dtype=acc_dtype, interpret=interpret
+        )
+    else:
+        p = nbrs.shape[0]
+        p_pad = -(-p // pb) * pb
+        nb = jnp.pad(nbrs, ((0, p_pad - p), (0, 0)))
+        mk = jnp.pad(maski, ((0, p_pad - p), (0, 0)))
+        out = neighbor_agg.gather_sum_blocked_call(
+            bufp, nb, mk, pb=pb, db=db, acc_dtype=acc_dtype,
+            interpret=interpret,
+        )[:p]
+    return out[:, :d]
+
+
+def _gather_sum_fwd(buf, nbrs, maski, acc_dtype, pb, db, interpret,
+                    buf_rows, buf_dtype):
+    out = _gather_sum(buf, nbrs, maski, acc_dtype, pb, db, interpret,
+                      buf_rows, buf_dtype)
+    return out, (nbrs, maski)
+
+
+def _gather_sum_bwd(acc_dtype, pb, db, interpret, buf_rows, buf_dtype,
+                    res, g):
+    (nbrs, maski) = res
+    # d buf = scatter-add of masked cotangents back to the gathered rows.
+    gm = g.astype(acc_dtype)[:, None, :] * maski[..., None].astype(acc_dtype)
+    dbuf = jnp.zeros((buf_rows, g.shape[-1]), acc_dtype).at[nbrs].add(gm)
+    return (dbuf.astype(jnp.dtype(buf_dtype)), None, None)
+
+
+_gather_sum.defvjp(_gather_sum_fwd, _gather_sum_bwd)
+
+
+def neighbor_gather_sum(
+    buf: jax.Array,
+    nbrs: jax.Array,
+    mask: jax.Array,
+    *,
+    acc_dtype=jnp.float32,
+    pb: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``out[p] = Σ_j mask[p, j] · buf[nbrs[p, j]]`` via Pallas.
+
+    ``pb=None`` selects the scalar-prefetch pipelined kernel; an integer
+    selects the partition-blocked kernel with that warps-per-block analogue.
+    The blocked variant is refused (falls back to pipelined) when its VMEM
+    stripe would exceed the budget — the §4 hardware constraint.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t, d = buf.shape
+    d_pad = -(-d // _LANE) * _LANE
+    db = _pick_db(d_pad)
+    if pb is not None and (t * db + pb * db) * 4 > _VMEM_BUDGET:
+        pb = None  # VMEM constraint: stripe does not fit — use pipelined
+    maski = mask.astype(jnp.int32)
+    return _gather_sum(buf, nbrs, maski, jnp.dtype(acc_dtype).name, pb, db,
+                       interpret, t, jnp.dtype(buf.dtype).name)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["neighbor_gather_sum_ref"]
+
+
+def neighbor_gather_sum_ref(buf: jax.Array, nbrs: jax.Array, mask: jax.Array,
+                            acc_dtype=jnp.float32) -> jax.Array:
+    """``out[p] = Σ_j mask[p, j] · buf[nbrs[p, j]]`` → (P, D).
+
+    The paper's warp-level gather + reduce over one neighbor partition
+    (partial_results in Listing 2), as a dense jnp program.
+    """
+    g = jnp.take(buf, nbrs, axis=0)  # (P, ps, D)
+    return jnp.sum(g.astype(acc_dtype) * mask[..., None].astype(acc_dtype),
+                   axis=1)

@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: fused sLSTM sequence scan with VMEM-resident state.
+
+Motivation (§Perf cell 3, xlstm-125m × train_4k): the XLA lowering of the
+sLSTM recurrence is a 4096-iteration while loop whose every step re-reads
+the recurrent weights ``wr (H, hd, 4·hd)`` (~2.4 MB) and round-trips the
+four state tensors through HBM — the memory roofline term blows up by the
+trip count.  ``wr`` + states fit comfortably in VMEM (~16 MB), so the MGG
+philosophy (explicit memory staging, §3.4) says: fuse the whole scan into
+one kernel, pin ``wr``/states in VMEM, and stream only ``x_proj`` in and
+``h`` out.
+
+Layout:
+  grid = (B/bt, S/st) with the sequence dimension iterated sequentially
+  (last grid dim) so the VMEM scratch states persist across sequence tiles
+  (standard Pallas revisiting pattern).
+  xp block   (bt, st, 4·D)  — streamed in (double-buffered by Pallas)
+  out block  (bt, st, D)    — streamed out
+  wr         (H, hd, 4·hd)  — full-array block, stays resident
+  states     4 × (bt, H·hd) — VMEM scratch (fp32)
+
+Validated against ``xlstm.slstm_apply`` in interpret mode
+(tests/test_kernels_slstm.py); the HBM-traffic win is quantified in
+EXPERIMENTS.md §Perf (modeled: this container cannot execute TPU VMEM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["slstm_scan_call"]
+
+
+def _kernel(xp_ref, wr_ref, h0_ref, c0_ref, n0_ref, m0_ref,
+            out_ref, hN_ref, cN_ref, nN_ref, mN_ref,
+            h_s, c_s, n_s, m_s, *, heads, hd, st):
+    sj = pl.program_id(1)
+
+    @pl.when(sj == 0)
+    def _load_initial_state():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+        c_s[...] = c0_ref[...].astype(jnp.float32)
+        n_s[...] = n0_ref[...].astype(jnp.float32)
+        m_s[...] = m0_ref[...].astype(jnp.float32)
+
+    wr = wr_ref[...].astype(jnp.float32)        # (H·hd, 4·H·hd) blockdiag-
+    bt = out_ref.shape[0]                        # expanded outside
+
+    def step(t, _):
+        h = h_s[...]                             # (bt, H·hd)
+        rec = jnp.dot(h, wr, preferred_element_type=jnp.float32)
+        gates = xp_ref[:, t, :].astype(jnp.float32) + rec  # (bt, 4·H·hd)
+        d = heads * hd
+        z = jnp.tanh(gates[:, 0 * d : 1 * d])
+        log_i = gates[:, 1 * d : 2 * d]
+        log_f = -jnp.logaddexp(0.0, -gates[:, 2 * d : 3 * d])  # log σ(x)
+        o = jax.nn.sigmoid(gates[:, 3 * d : 4 * d])
+        m_new = jnp.maximum(log_f + m_s[...], log_i)
+        i_p = jnp.exp(log_i - m_new)
+        f_p = jnp.exp(log_f + m_s[...] - m_new)
+        c = f_p * c_s[...] + i_p * z
+        n = f_p * n_s[...] + i_p
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        h_s[...] = h
+        c_s[...] = c
+        n_s[...] = n
+        m_s[...] = m_new
+        out_ref[:, t, :] = h.astype(out_ref.dtype)
+        return 0
+
+    lax.fori_loop(0, st, step, 0)
+    hN_ref[...] = h_s[...]
+    cN_ref[...] = c_s[...]
+    nN_ref[...] = n_s[...]
+    mN_ref[...] = m_s[...]
+
+
+def slstm_scan_call(
+    xp: jax.Array,      # (B, S, 4·D) precomputed Wx·x + b, gate-major
+    wr: jax.Array,      # (D, 4·D) block-diagonal-expanded recurrent weights
+    state: Dict[str, jax.Array],  # h/c/n/m: (B, D) fp32
+    *,
+    heads: int,
+    hd: int,
+    bt: int = 8,
+    st: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, s, d4 = xp.shape
+    d = heads * hd
+    assert d4 == 4 * d
+    bt = min(bt, b)
+    st = min(st, s)
+    if b % bt or s % st:
+        bt, st = 1, s  # smoke shapes
+    grid = (b // bt, s // st)
+    kernel = functools.partial(_kernel, heads=heads, hd=hd, st=st)
+    out, hN, cN, nN, mN = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, st, 4 * d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((d, 4 * d), lambda i, j: (0, 0)),  # resident
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, st, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), xp.dtype),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, d), jnp.float32),
+            pltpu.VMEM((bt, d), jnp.float32),
+            pltpu.VMEM((bt, d), jnp.float32),
+            pltpu.VMEM((bt, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, wr, state["h"], state["c"], state["n"], state["m"])
+    return out, dict(h=hN, c=cN, n=nN, m=mN)
+
+
+def expand_blockdiag(wr_heads: jax.Array) -> jax.Array:
+    """(H, hd, 4·hd) per-head recurrent weights → (H·hd, 4·H·hd) gate-major
+    block-diagonal matrix matching the kernel's fused dot.
+
+    Gate-major means output columns are ordered [z | i | f | o] with each
+    gate's block spanning all heads — the same layout the model's ``wx``
+    projection produces.
+    """
+    h, hd, hd4 = wr_heads.shape
+    assert hd4 == 4 * hd
+    d = h * hd
+    out = jnp.zeros((d, 4 * d), wr_heads.dtype)
+    for g in range(4):
+        blk = wr_heads[:, :, g * hd : (g + 1) * hd]  # (H, hd, hd)
+        # scatter into block-diagonal positions of gate g
+        for i in range(h):
+            out = out.at[i * hd : (i + 1) * hd,
+                         g * d + i * hd : g * d + (i + 1) * hd].set(blk[i])
+    return out

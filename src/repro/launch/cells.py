@@ -1,0 +1,192 @@
+"""(architecture × input-shape × mesh) cell builder for the dry-run.
+
+For every cell this produces:
+  * the step callable (train_step / prefill / decode_step per shape.kind),
+  * abstract arguments (ShapeDtypeStructs — weak-type-correct, shardable,
+    zero device allocation),
+  * in/out shardings derived from dist/sharding.py rules,
+so launch/dryrun.py can ``jit(...).lower(*args).compile()`` and
+benchmarks/roofline.py can reuse the identical lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import SHAPES, ModelConfig, ShapeSpec, shape_applicable
+from repro.dist import sharding as shd
+from repro.models import encdec, transformer
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+N_FRAMES = 1500  # whisper stub frontend output length
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Callable
+    args: Tuple[Any, ...]           # abstract ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    cfg: ModelConfig
+    meta: Dict[str, Any]
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = dict(tokens=_sds((b, s), jnp.int32),
+                     loss_mask=_sds((b, s), jnp.float32))
+        if cfg.family == "vlm":
+            batch["vis"] = _sds((b, cfg.n_vis_tokens, cfg.d_model),
+                                jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((b, N_FRAMES, cfg.d_model), jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        out = dict(tokens=_sds((b, s), jnp.int32))
+        if cfg.family == "vlm":
+            out["vis"] = _sds((b, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            out["frames"] = _sds((b, N_FRAMES, cfg.d_model), jnp.float32)
+        return out
+    return dict(token=_sds((b,), jnp.int32), pos=_sds((b,), jnp.int32))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               *, multi_pod: bool = False,
+               moe_pipeline_chunks: int = 1,
+               extra_cfg: Optional[dict] = None,
+               fsdp: bool = True,
+               shard_acts: bool = True,
+               seq_shard_acts: Optional[bool] = None) -> Cell:
+    cfg = configs.get_config(arch)
+    if extra_cfg:
+        cfg = dataclasses.replace(cfg, **extra_cfg)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} × {shape_name} skipped: {why}")
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    train = shape.kind == "train"
+    # serve uses bf16 parameters; train keeps fp32 masters (DESIGN.md §7)
+    if not train:
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    vocab_mult = mesh.shape["model"]
+    if seq_shard_acts is None:
+        # recurrent families reshard the sequence dim inside their scans —
+        # batch-only activation sharding for them (EXPERIMENTS.md §Perf)
+        seq_shard_acts = cfg.family not in ("xlstm", "hybrid")
+    ctx = transformer.DistCtx(
+        mesh=mesh, data_axes=data_axes,
+        moe_pipeline_chunks=moe_pipeline_chunks,
+        # batch must divide the data axes to shard activations on them
+        shard_activations=shard_acts and shape.global_batch % int(
+            np.prod([mesh.shape[a] for a in data_axes])) == 0,
+        seq_shard_acts=seq_shard_acts,
+    )
+    rules = shd.ShardingRules(mesh, data_axes=data_axes,
+                              train=train and fsdp)
+    init = (encdec.init_params if cfg.family == "encdec"
+            else transformer.init_params)
+    params_abs = jax.eval_shape(
+        functools.partial(init, cfg=cfg, vocab_multiple=vocab_mult),
+        jax.random.key(0))
+    p_specs = shd.param_specs(params_abs, rules, cfg.expert_mode)
+    p_shard = shd.to_shardings(p_specs, mesh)
+    meta = dict(arch=arch, shape=shape_name, kind=shape.kind,
+                multi_pod=multi_pod, params=cfg.param_count())
+
+    if train:
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        o_specs = dict(m=p_specs, v=p_specs, count=P())
+        o_shard = shd.to_shardings(o_specs, mesh)
+        batch_abs = input_specs(cfg, shape)
+        b_specs = shd.batch_specs(batch_abs, rules)
+        b_shard = shd.to_shardings(b_specs, mesh)
+        step = make_train_step(cfg, ctx, AdamWConfig())
+        return Cell(arch, shape, step, (params_abs, opt_abs, batch_abs),
+                    (p_shard, o_shard, b_shard), (0, 1), cfg, meta)
+
+    if shape.kind == "prefill":
+        inp = input_specs(cfg, shape)
+        if cfg.family == "encdec":
+            cache_abs = jax.eval_shape(
+                lambda: encdec.init_cache(cfg, shape.global_batch,
+                                          shape.seq_len, N_FRAMES))
+            fn = lambda p, frames, tokens, c: encdec.prefill(
+                p, cfg, frames, tokens, c, ctx=ctx)
+            args = (params_abs, inp["frames"], inp["tokens"], cache_abs)
+        else:
+            cache_abs = jax.eval_shape(
+                lambda: transformer.init_cache(cfg, shape.global_batch,
+                                               shape.seq_len))
+            if cfg.family == "vlm":
+                fn = lambda p, tokens, vis, c: transformer.prefill(
+                    p, cfg, tokens, c, ctx=ctx, vis=vis)
+                args = (params_abs, inp["tokens"], inp["vis"], cache_abs)
+            else:
+                fn = lambda p, tokens, c: transformer.prefill(
+                    p, cfg, tokens, c, ctx=ctx)
+                args = (params_abs, inp["tokens"], cache_abs)
+        c_specs = shd.cache_specs(cache_abs, rules, shape.global_batch)
+        c_shard = shd.to_shardings(c_specs, mesh)
+        in_sh = [p_shard] + [
+            shd.to_shardings(shd.batch_specs(a, rules), mesh)
+            for a in args[1:-1]
+        ] + [c_shard]
+        return Cell(arch, shape, fn, args, tuple(in_sh),
+                    (len(args) - 1,), cfg, meta)
+
+    # decode
+    inp = input_specs(cfg, shape)
+    if cfg.family == "encdec":
+        cache_abs = jax.eval_shape(
+            lambda: encdec.init_cache(cfg, shape.global_batch,
+                                      shape.seq_len, N_FRAMES))
+        fn = lambda p, t, pos, c: encdec.decode_step(p, cfg, t, pos, c,
+                                                     ctx=ctx)
+    else:
+        cache_abs = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, shape.global_batch,
+                                           shape.seq_len))
+        fn = lambda p, t, pos, c: transformer.decode_step(
+            p, cfg, t, pos, c, ctx=ctx)
+    args = (params_abs, inp["token"], inp["pos"], cache_abs)
+    c_specs = shd.cache_specs(cache_abs, rules, shape.global_batch)
+    in_sh = (p_shard,
+             shd.to_shardings(shd.batch_specs(inp["token"], rules), mesh),
+             shd.to_shardings(shd.batch_specs(inp["pos"], rules), mesh),
+             shd.to_shardings(c_specs, mesh))
+    return Cell(arch, shape, fn, args, in_sh, (3,), cfg, meta)
+
+
+def all_cells() -> list:
+    """Every runnable (arch × shape) pair + the documented skips."""
+    run, skipped = [], []
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            (run if ok else skipped).append(
+                (arch, sname) if ok else (arch, sname, why))
+    return run, skipped

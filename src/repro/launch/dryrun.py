@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  512 placeholder host devices back both the single-pod (16×16)
+# and the multi-pod (2×16×16) production meshes.  Do NOT set this globally:
+# smoke tests and benches must see 1 device.
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.launch.cells import build_cell, all_cells
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+SPMD-partitions, and compiles on the production topology, and extract the
+artifacts (FLOPs, bytes, per-device collective traffic, memory analysis)
+that feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+"""
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s/#:]+?)\s+"
+    r"([\w\-]+)\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective traffic from the partitioned HLO.
+
+    Sums *operand* bytes of every collective op (the data each device
+    injects into the interconnect).  ``-start`` async forms are counted;
+    their ``-done`` halves are skipped (same transfer).
+    """
+    defs: Dict[str, int] = {}
+    per_op: Dict[str, Dict[str, float]] = {}
+    n_async = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, operands = m.groups()
+        defs[name] = _shape_bytes(type_str)
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        if op.endswith("-start"):
+            n_async += 1
+        # operand bytes: resolve %name refs against prior defs
+        op_bytes = 0
+        for ref in re.findall(r"%?([\w.\-]+)", operands):
+            if ref in defs:
+                op_bytes += defs[ref]
+        if op_bytes == 0:  # fallback: estimate from result size
+            res = _shape_bytes(type_str)
+            op_bytes = res
+        d = per_op.setdefault(base, dict(bytes=0.0, count=0))
+        d["bytes"] += op_bytes
+        d["count"] += 1
+    total = sum(d["bytes"] for d in per_op.values())
+    return dict(per_op=per_op, total_bytes=total, n_async=n_async)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             out_dir: Optional[str] = None,
+             moe_pipeline_chunks: int = 1,
+             extra_cfg: Optional[dict] = None,
+             tag: str = "",
+             fsdp: bool = True,
+             shard_acts: bool = True,
+             seq_shard_acts: Optional[bool] = None) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, multi_pod=multi_pod,
+                      moe_pipeline_chunks=moe_pipeline_chunks,
+                      extra_cfg=extra_cfg, fsdp=fsdp, shard_acts=shard_acts,
+                      seq_shard_acts=seq_shard_acts)
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = dict(
+            argument_size=getattr(mem, "argument_size_in_bytes", None),
+            output_size=getattr(mem, "output_size_in_bytes", None),
+            temp_size=getattr(mem, "temp_size_in_bytes", None),
+            generated_code_size=getattr(mem, "generated_code_size_in_bytes",
+                                        None),
+        )
+    except Exception as e:
+        mem_info = dict(error=str(e))
+    try:
+        cost = compiled.cost_analysis()
+        cost_info = {k: float(v) for k, v in cost.items()
+                     if isinstance(v, (int, float)) and (
+                         "flops" in k or "bytes accessed" in k
+                         or k in ("utilization", "optimal_seconds"))}
+        flops = float(cost.get("flops", 0.0))
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:
+        cost_info, flops, bytes_accessed = dict(error=str(e)), 0.0, 0.0
+    hlo_text = compiled.as_text()
+    coll = parse_collectives(hlo_text)
+    # Trip-count-aware reanalysis: XLA's cost_analysis counts while bodies
+    # once; every scanned layer/chunk loop must be multiplied out
+    # (launch/hlo_cost.py, oracle-tested).  These corrected numbers are the
+    # roofline numerators; the raw XLA values are kept for reference.
+    tc = hlo_analyze(hlo_text)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    result = dict(
+        arch=arch, shape=shape, mesh="multi_pod" if multi_pod else
+        "single_pod", n_chips=n_chips, kind=cell.shape.kind,
+        model_params=cell.meta["params"],
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        flops=tc.dot_flops, bytes_accessed=tc.bytes_accessed,
+        collectives=tc.as_dict(),
+        xla_raw=dict(flops=flops, bytes_accessed=bytes_accessed,
+                     cost=cost_info, collectives=coll),
+        memory=mem_info,
+        moe_pipeline_chunks=moe_pipeline_chunks, tag=tag,
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = os.path.join(
+            out_dir, f"{arch}_{shape}_{result['mesh']}{suffix}.json")
+        with open(fname, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=False)
+    ap.add_argument("--shape", required=False)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--moe-pipeline-chunks", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-shard-acts", action="store_true")
+    ap.add_argument("--seq-shard-acts", default="auto",
+                    choices=["auto", "on", "off"])
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--param-dtype", default="")
+    args = ap.parse_args()
+    knobs = dict(
+        fsdp=not args.no_fsdp, shard_acts=not args.no_shard_acts,
+        seq_shard_acts={"auto": None, "on": True, "off": False}[
+            args.seq_shard_acts])
+    extra = {}
+    if args.capacity_factor:
+        extra["moe_capacity_factor"] = args.capacity_factor
+    if args.param_dtype:
+        extra["param_dtype"] = args.param_dtype
+
+    if args.all:
+        run, skipped = all_cells()
+        for arch, shape in run:
+            for mp in ((False, True) if args.both_meshes
+                       else (args.multi_pod,)):
+                r = run_cell(arch, shape, mp, args.out,
+                             args.moe_pipeline_chunks, extra_cfg=extra or None,
+                             tag=args.tag, **knobs)
+                print(f"{arch} × {shape} × {r['mesh']}: OK "
+                      f"flops={r['flops']:.3e} "
+                      f"coll={r['collectives']['total_bytes']:.3e}B "
+                      f"compile={r['compile_s']}s")
+        for arch, shape, why in skipped:
+            print(f"{arch} × {shape}: SKIP ({why})")
+        return
+
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for mp in meshes:
+        r = run_cell(args.arch, args.shape, mp, args.out,
+                     args.moe_pipeline_chunks, extra_cfg=extra or None,
+                     tag=args.tag, **knobs)
+        print(json.dumps(
+            {k: r[k] for k in ("arch", "shape", "mesh", "n_chips", "flops",
+                               "bytes_accessed", "lower_s", "compile_s")},
+            indent=1))
+        print("memory:", r["memory"])
+        print("collectives:", json.dumps(r["collectives"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+scan-over-layers model (ours: every assigned arch) under-reports FLOPs,
+bytes, and — critically for MGG — the collective traffic of loops like the
+ppermute ring or the per-layer MoE all-to-all.  (Verified: an 8-step scanned
+matmul chain reports 1/8 the unrolled FLOPs.)
+
+This module re-derives the three roofline numerators from the *partitioned*
+HLO text with loop multiplicities:
+
+1. parse computations (name → {op defs, param shapes});
+2. build the call graph: ``while`` edges carry their trip count (read from
+   the loop-condition computation's s32 ``constant``), ``calls=`` /
+   ``to_apply=`` / ``condition=`` edges carry ×1;
+3. propagate multipliers from ENTRY and accumulate per-computation:
+   * **dot FLOPs** — 2 · numel(result) · contraction size (the MXU term;
+     elementwise flops are ignored, they are never roofline-critical),
+   * **bytes** — Σ over ops (operand bytes + result bytes), an HBM-traffic
+     upper bound (fusion on real TPUs reduces it; stated in EXPERIMENTS.md),
+   * **collectives** — operand bytes per op type, trip-multiplied, with
+     async ``-start`` counting.
+
+The analyzer is oracle-tested against unrolled references in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze", "HLOCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\],{}]+))")
+_CALL_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|true_computation|false_computation)"
+    r"=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # operand list + attributes
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    params: Dict[str, str]
+    ops: List[_Op]
+    shapes: Dict[str, str]  # def/param name → type string
+
+
+@dataclasses.dataclass
+class HLOCost:
+    dot_flops: float
+    bytes_accessed: float
+    collectives: Dict[str, Dict[str, float]]
+    total_collective_bytes: float
+    n_async: int
+    while_trips: Dict[str, int]
+
+    def as_dict(self) -> Dict:
+        return dict(
+            dot_flops=self.dot_flops, bytes_accessed=self.bytes_accessed,
+            per_op=self.collectives,
+            total_bytes=self.total_collective_bytes, n_async=self.n_async,
+            while_trips=self.while_trips,
+        )
+
+
+def _parse_computations(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.endswith("{"):
+                name, params_str = m.group(1), m.group(2)
+                params = {p: t for p, t in _PARAM_RE.findall(params_str)}
+                cur = _Comp(name, params, [], dict(params))
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = _Op(*m.groups())
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.type_str
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands live before the closing paren of the op call
+    depth, end = 1, len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", rest[:end])
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    result = 1
+    for _, dims in _shape_dims(op.type_str):
+        for d in dims:
+            result *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if m:
+        ops = _operand_names(op.rest)
+        if ops:
+            lhs_type = comp.shapes.get(ops[0], "")
+            dims_list = _shape_dims(lhs_type)
+            if dims_list:
+                lhs_dims = dims_list[0][1]
+                for idx in (int(i) for i in m.group(1).split(",") if i):
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+    return 2.0 * result * contract
+
+
+def _trip_count(cond: _Comp, comps: Dict[str, _Comp]) -> int:
+    """Largest s32 constant reachable in the condition computation."""
+    best = 1
+    stack, seen = [cond.name], set()
+    while stack:
+        cname = stack.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        for op in comps[cname].ops:
+            if op.op == "constant" and op.type_str.strip().startswith("s32"):
+                m = re.search(r"constant\((-?\d+)\)", f"constant({op.rest}")
+                if m:
+                    best = max(best, int(m.group(1).rstrip(")")))
+            for callee in _CALL_RE.findall(op.rest):
+                stack.append(callee)
+    return max(best, 1)
+
+
+def analyze(text: str, entry: Optional[str] = None) -> HLOCost:
+    comps = _parse_computations(text)
+    if not comps:
+        return HLOCost(0.0, 0.0, {}, 0.0, 0, {})
+    # entry = computation that no one calls, or explicit
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            for callee in _CALL_RE.findall(op.rest):
+                called.add(callee)
+            m = _BRANCHES_RE.search(op.rest)
+            if m:
+                called.update(re.findall(r"%?([\w.\-]+)", m.group(1)))
+    entries = [n for n in comps if n not in called]
+    root = entry or (entries[-1] if entries else next(iter(comps)))
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll: Dict[str, Dict[str, float]] = {}
+    n_async = 0
+    trips: Dict[str, int] = {}
+    visited_stack = set()
+
+    def visit(cname: str, mult: float, count_bytes: bool = True) -> None:
+        nonlocal flops, bytes_acc, n_async
+        if cname not in comps or cname in visited_stack:
+            return
+        visited_stack.add(cname)
+        comp = comps[cname]
+        for op in comp.ops:
+            res_bytes = _shape_bytes(op.type_str)
+            opd_bytes = sum(_shape_bytes(comp.shapes.get(o, ""))
+                            for o in _operand_names(op.rest))
+            if count_bytes and op.op not in (
+                    "parameter", "constant", "tuple",
+                    "get-tuple-element", "bitcast"):
+                # fusion ops count at their boundary (operands + result);
+                # their internals model registers/VMEM, not HBM traffic
+                bytes_acc += mult * (res_bytes + opd_bytes)
+            if op.op in ("dot", "dot_general"):
+                flops += mult * _dot_flops(op, comp)
+            base = op.op[:-6] if op.op.endswith("-start") else op.op
+            if base in _COLLECTIVES and not op.op.endswith("-done"):
+                if op.op.endswith("-start"):
+                    n_async += int(mult)
+                d = coll.setdefault(base, dict(bytes=0.0, count=0.0))
+                d["bytes"] += mult * (opd_bytes or res_bytes)
+                d["count"] += mult
+            # traverse callees
+            if op.op == "while":
+                m_body = re.search(r"body=%?([\w.\-]+)", op.rest)
+                m_cond = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                trip = 1
+                if m_cond and m_cond.group(1) in comps:
+                    trip = _trip_count(comps[m_cond.group(1)], comps)
+                    trips[m_body.group(1) if m_body else op.name] = trip
+                    visit(m_cond.group(1), mult * trip, count_bytes)
+                if m_body:
+                    visit(m_body.group(1), mult * trip, count_bytes)
+            elif op.op == "conditional":
+                m = _BRANCHES_RE.search(op.rest)
+                branches = (re.findall(r"%?([\w.\-]+)", m.group(1))
+                            if m else _CALL_RE.findall(op.rest))
+                for b2 in branches:
+                    visit(b2, mult, count_bytes)
+            elif op.op == "fusion":
+                # dots/collectives inside fusions still count (flops);
+                # bytes stop at the fusion boundary
+                for callee in _CALL_RE.findall(op.rest):
+                    visit(callee, mult, False)
+            else:
+                for callee in _CALL_RE.findall(op.rest):
+                    visit(callee, mult, count_bytes)
+        visited_stack.discard(cname)
+
+    visit(root, 1.0)
+    total = sum(d["bytes"] for d in coll.values())
+    return HLOCost(flops, bytes_acc, coll, total, n_async, trips)

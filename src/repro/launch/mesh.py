@@ -1,0 +1,22 @@
+"""Production mesh definition (a FUNCTION so importing never touches jax
+device state — required for the dry-run's forced 512-device config)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
+
+SINGLE_POD_SHAPE = (16, 16)            # 256 chips: ("data", "model")
+MULTI_POD_SHAPE = (2, 16, 16)          # 512 chips: ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,85 @@
+"""Production-style training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+        --steps 100 --seq 256 --batch 8 [--devices 8] [--smoke] \
+        [--workdir /tmp/ckpt] [--accum 2] [--moe-pipeline-chunks 4]
+
+``--devices N`` forces N host devices (set BEFORE jax import) and lays a
+(data=N, model=1) mesh; on real TPU pods, omit it and the mesh comes from
+launch/mesh.make_production_mesh.
+"""
+import os
+import sys
+
+# device forcing must precede the jax import
+if "--devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.dist import make_mesh
+from repro.models import transformer as T
+from repro.train import (AdamWConfig, LMDataConfig, Trainer, TrainState,
+                         adamw_init, lm_batch, make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--workdir", default="")
+    ap.add_argument("--moe-pipeline-chunks", type=int, default=1)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    cfg = dataclasses.replace(cfg, ssm_chunk=min(cfg.ssm_chunk, args.seq))
+    n_dev = len(jax.devices())
+    mesh = make_mesh((n_dev, 1), ("data", "model")) if n_dev > 1 else None
+    ctx = (T.DistCtx(mesh=mesh,
+                     moe_pipeline_chunks=args.moe_pipeline_chunks,
+                     seq_shard_acts=cfg.family not in ("xlstm", "hybrid"))
+           if mesh else T.DistCtx())
+    print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
+          f"devices={n_dev} seq={args.seq} batch={args.batch}")
+    params = T.init_params(jax.random.key(0), cfg, vocab_multiple=16)
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(
+        cfg, ctx, AdamWConfig(lr=args.lr, warmup_steps=20,
+                              total_steps=args.steps),
+        accum_steps=args.accum), donate_argnums=(0, 1))
+    dcfg = LMDataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                        global_batch=args.batch, doc_len=args.seq)
+
+    def data_it():
+        s = 0
+        while True:
+            b = lm_batch(dcfg, s,
+                         n_vis=cfg.n_vis_tokens if cfg.family == "vlm" else 0,
+                         d_model=cfg.d_model)
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+            s += 1
+
+    tr = Trainer(step_fn, data_it(), TrainState(params, opt),
+                 workdir=args.workdir or None, ckpt_every=args.ckpt_every)
+    tr.maybe_restore()
+    losses = tr.run(args.steps)
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"stragglers={tr.stragglers} restarts={tr.restarts}")
+
+
+if __name__ == "__main__":
+    main()

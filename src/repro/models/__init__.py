@@ -1,0 +1,5 @@
+"""LM-architecture substrate: layer library + family assemblies."""
+from . import encdec, layers, moe, ssm, transformer, xlstm
+from .transformer import (
+    DistCtx, decode_step, forward, init_cache, init_params, loss_fn, prefill,
+)

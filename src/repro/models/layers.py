@@ -1,0 +1,336 @@
+"""Shared transformer layer library (no flax — plain pytrees + functions).
+
+Covers every mixer the assigned architecture pool needs:
+  * RMSNorm / LayerNorm
+  * rotary embeddings (configurable theta; per-head qk_norm for qwen3)
+  * GQA attention with: causal masking, sliding windows (mixtral, zamba2
+    long-context), chunked "flash-style" softmax (O(S·chunk) memory — a 32k
+    prefill never materializes the S×S score matrix), ring-buffer KV caches
+    for decode (window-bounded for SWA archs)
+  * SwiGLU and GELU MLPs
+  * padded vocab embedding / logits (vocab rows padded to the model-axis
+    multiple; pad logits are masked to −inf)
+
+Dtype policy: parameters are stored in ``cfg.param_dtype`` and compute runs
+in ``cfg.compute_dtype`` (bf16 on TPU); softmax/normalization accumulate in
+fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope_frequencies", "apply_rope",
+    "attention_init", "attention_apply", "mlp_init", "mlp_apply",
+    "embed_init", "embed_lookup", "unembed_logits", "dense_init",
+    "KVCache", "kv_cache_init", "padded_vocab",
+]
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    scale = lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layer_norm(x: Array, w: Array, b: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding primitives
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, fan_out: int, dtype) -> Dict[str, Array]:
+    scale = (2.0 / (fan_in + fan_out)) ** 0.5
+    return dict(w=(jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+                   * scale).astype(dtype))
+
+
+def padded_vocab(vocab: int, multiple: int) -> int:
+    return -(-vocab // multiple) * multiple
+
+
+def embed_init(key, vocab: int, d_model: int, dtype, multiple: int = 16):
+    vp = padded_vocab(vocab, multiple)
+    w = jax.random.normal(key, (vp, d_model), jnp.float32) * (d_model ** -0.5)
+    return dict(w=w.astype(dtype))
+
+
+def embed_lookup(emb: Dict[str, Array], tokens: Array, compute_dtype) -> Array:
+    return jnp.take(emb["w"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed_logits(emb: Dict[str, Array], h: Array, vocab: int) -> Array:
+    """Tied unembedding; pad logits masked to −inf (fp32)."""
+    logits = jnp.einsum(
+        "bsd,vd->bsv", h.astype(jnp.float32), emb["w"].astype(jnp.float32)
+    )
+    vp = emb["w"].shape[0]
+    if vp != vocab:
+        neg = jnp.full((vp - vocab,), -1e30, jnp.float32)
+        logits = logits.at[..., vocab:].set(neg)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + RoPE + qk_norm + sliding window + chunked softmax)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg) -> Dict[str, Any]:
+    hd = cfg.head_dim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = dict(
+        wq=dense_init(k1, cfg.d_model, cfg.n_heads * hd, cfg.param_dtype),
+        wk=dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd, cfg.param_dtype),
+        wv=dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd, cfg.param_dtype),
+        wo=dense_init(k4, cfg.n_heads * hd, cfg.d_model, cfg.param_dtype),
+    )
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.param_dtype)
+    return p
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Ring-buffer KV cache: ``size`` slots (= sliding window when set).
+
+    ``k``/``v``: (B, size, KV, hd).  ``key_pos``: (B, size) absolute position
+    held in each slot (−1 ⇒ empty).  Slot for position p is ``p % size``.
+    """
+
+    k: Array
+    v: Array
+    key_pos: Array
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.key_pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    KVCache, KVCache.tree_flatten, KVCache.tree_unflatten
+)
+
+
+def kv_cache_init(cfg, batch: int, size: int, dtype) -> KVCache:
+    hd = cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        key_pos=jnp.full((batch, size), -1, jnp.int32),
+    )
+
+
+def _chunked_softmax_attention(
+    q: Array,        # (B, S, H, hd)
+    k: Array,        # (B, T, KV, hd)
+    v: Array,        # (B, T, KV, hd)
+    q_pos: Array,    # (B, S)
+    k_pos: Array,    # (B, T)  (−1 ⇒ masked slot)
+    window: int,     # 0 ⇒ full causal
+    chunk: int,
+) -> Array:
+    """Streaming-softmax attention over key chunks (flash-attention dataflow).
+
+    Never materializes the (S, T) score matrix: ``T`` is consumed in chunks
+    with running max/denominator carries, so a 32k-prefill activation
+    footprint is O(S · chunk) per head.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    rep = h // kv
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    n_chunks = -(-t // chunk)
+    t_pad = n_chunks * chunk
+    if t_pad != t:
+        pad = ((0, 0), (0, t_pad - t), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, t_pad - t)), constant_values=-1)
+    kc = k.reshape(b, n_chunks, chunk, kv, hd)
+    vc = v.reshape(b, n_chunks, chunk, kv, hd)
+    pc = k_pos.reshape(b, n_chunks, chunk)
+
+    def body(carry, inp):
+        acc, m, l = carry                  # (B,S,H,hd), (B,S,H), (B,S,H)
+        kb, vb, pb = inp                   # (B,c,KV,hd), (B,c,KV,hd), (B,c)
+        kb = jnp.repeat(kb, rep, axis=2).astype(jnp.float32)  # (B,c,H,hd)
+        vb = jnp.repeat(vb, rep, axis=2).astype(jnp.float32)
+        logits = jnp.einsum("bshd,bchd->bshc", qf, kb)         # (B,S,H,c)
+        causal = pb[:, None, :] <= q_pos[:, :, None]           # (B,S,c)
+        valid = pb[:, None, :] >= 0
+        ok = causal & valid
+        if window > 0:
+            ok &= (q_pos[:, :, None] - pb[:, None, :]) < window
+        logits = jnp.where(ok[:, :, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bshc,bchd->bshd", p, vb)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, s, h, hd), jnp.float32)
+    m0 = jnp.full((b, s, h), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, s, h), jnp.float32)
+    (acc, m, l), _ = lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0)),
+    )
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def attention_apply(
+    p: Dict[str, Any],
+    x: Array,                       # (B, S, D)
+    cfg,
+    positions: Array,               # (B, S)
+    cache: Optional[KVCache] = None,
+    *,
+    causal: bool = True,
+    kv_override: Optional[Tuple[Array, Array, Array]] = None,
+    chunk: int = 1024,
+) -> Tuple[Array, Optional[KVCache]]:
+    """GQA attention.  Three modes:
+
+    * train / prefill: ``cache=None`` (or a fresh cache to fill) — attends
+      over the sequence itself.
+    * decode: ``cache`` holds past KV; S is typically 1; the new KV are
+      written at ``positions % cache.size`` (ring buffer).
+    * cross-attention (whisper decoder): ``kv_override=(k, v, k_pos)``;
+      ``causal=False`` and the cache machinery is bypassed.
+    """
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]["w"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    if kv_override is None:
+        k = (x @ p["wk"]["w"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (x @ p["wv"]["w"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    else:
+        k, v, kv_pos = kv_override
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if kv_override is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0 and kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    window = cfg.sliding_window or 0
+    new_cache = None
+    if kv_override is not None:
+        out = _chunked_softmax_attention(
+            q, k, v, positions, kv_pos, 0 if not causal else window, chunk
+        ) if causal else _chunked_softmax_attention(
+            q, k, v, jnp.full_like(positions, 2**30), kv_pos, 0, chunk
+        )
+    elif cache is None:
+        if getattr(cfg, "use_flash_attention", False):
+            from repro.kernels.flash_attention import flash_attention
+            out = flash_attention(q, k, v, causal=causal, window=window)
+        else:
+            out = _chunked_softmax_attention(
+                q, k, v, positions, positions, window, chunk
+            )
+    elif s == 1:
+        # decode: attend over the ring buffer after inserting the new KV
+        size = cache.k.shape[1]
+        slots = positions % size  # (B, 1)
+        bidx = jnp.arange(b)[:, None]
+        ck = cache.k.at[bidx, slots].set(k)
+        cv = cache.v.at[bidx, slots].set(v)
+        cp = cache.key_pos.at[bidx, slots].set(positions)
+        new_cache = KVCache(k=ck, v=cv, key_pos=cp)
+        out = _chunked_softmax_attention(
+            q, ck, cv, positions, cp, window, chunk
+        )
+    else:
+        # prefill: full (windowed) self-attention; then write the *tail*
+        # min(S, size) KVs into the ring (consecutive positions ⇒ unique
+        # slots; a ring cache never needs more than its own size).
+        out = _chunked_softmax_attention(
+            q, k, v, positions, positions, window, chunk
+        )
+        size = cache.k.shape[1]
+        tail = min(s, size)
+        kt, vt, pt = k[:, -tail:], v[:, -tail:], positions[:, -tail:]
+        slots = pt % size
+        bidx = jnp.arange(b)[:, None]
+        new_cache = KVCache(
+            k=cache.k.at[bidx, slots].set(kt),
+            v=cache.v.at[bidx, slots].set(vt),
+            key_pos=cache.key_pos.at[bidx, slots].set(pt),
+        )
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return out @ p["wo"]["w"].astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return dict(
+            gate=dense_init(k1, cfg.d_model, d_ff, cfg.param_dtype),
+            up=dense_init(k2, cfg.d_model, d_ff, cfg.param_dtype),
+            down=dense_init(k3, d_ff, cfg.d_model, cfg.param_dtype),
+        )
+    return dict(
+        up=dense_init(k1, cfg.d_model, d_ff, cfg.param_dtype),
+        down=dense_init(k2, d_ff, cfg.d_model, cfg.param_dtype),
+    )
+
+
+def mlp_apply(p: Dict[str, Any], x: Array, cfg) -> Array:
+    if "gate" in p:
+        g = jax.nn.silu(x @ p["gate"]["w"].astype(x.dtype))
+        u = x @ p["up"]["w"].astype(x.dtype)
+        return (g * u) @ p["down"]["w"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["up"]["w"].astype(x.dtype))
+    return h @ p["down"]["w"].astype(x.dtype)

@@ -1,0 +1,227 @@
+"""Mixture-of-Experts with MGG-style pipelined expert dispatch.
+
+Expert dispatch is the LM-side incarnation of the paper's problem: tokens
+(= graph nodes) need embeddings processed by experts living on *other* chips
+(= remote neighbors).  The paper's §6 generalization (DLRM embedding gather
+overlapped with associative interaction) maps 1:1 onto expert-parallel MoE:
+
+* **sort-based dispatch** (this module): tokens are bucketed per expert into
+  an ``(E, C, d)`` capacity buffer — the analogue of MGG's fixed-size
+  neighbor partitions (uniform work units, imbalance amortized by capacity).
+* **EP mode**: the buffer is exchanged with ``all_to_all`` over the model
+  axis so each chip holds *its* experts' tokens from all chips.
+  ``pipeline_chunks > 1`` splits the capacity axis and double-buffers the
+  exchange: the FFN of chunk *k* overlaps the all-to-all of chunk *k+1* —
+  the same fori/double-buffer schedule as ``core/pipeline.py``.
+* **TP mode** (mixtral: 8 experts < 16-way model axis): experts are
+  replicated, ``d_ff`` is sharded over the model axis; no dispatch comm.
+
+Token overflow beyond capacity is dropped (standard capacity-factor
+routing); the residual connection preserves those tokens' values.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .layers import dense_init
+
+__all__ = ["moe_init", "moe_apply", "moe_apply_ep_shard"]
+
+
+def moe_init(key, cfg) -> Dict[str, Any]:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = (2.0 / (d + f)) ** 0.5
+    p = dict(
+        router=dense_init(k1, d, e, cfg.param_dtype),
+        w_up=(jax.random.normal(k2, (e, d, f), jnp.float32) * scale
+              ).astype(cfg.param_dtype),
+        w_down=(jax.random.normal(k3, (e, f, d), jnp.float32) * scale
+                ).astype(cfg.param_dtype),
+    )
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = (jax.random.normal(k4, (e, d, f), jnp.float32) * scale
+                       ).astype(cfg.param_dtype)
+    return p
+
+
+def _route(p, x2d, cfg):
+    """Top-k routing. Returns (gates (T,k), experts (T,k))."""
+    logits = (x2d @ p["router"]["w"].astype(x2d.dtype)).astype(jnp.float32)
+    topv, tope = lax.top_k(logits, cfg.top_k)
+    gates = jax.nn.softmax(topv, axis=-1)  # renormalized over selected
+    return gates, tope
+
+
+def _dispatch_indices(tope, n_experts: int, capacity: int):
+    """Sort-based capacity dispatch (no (T,E,C) one-hot tensor).
+
+    Returns per-slot token ids (E·C,), per-slot validity, and for each
+    (token, k) pair its (expert, slot) position + keep flag.
+    """
+    t, k = tope.shape
+    flat_e = tope.reshape(-1)                      # (T·k,)
+    order = jnp.argsort(flat_e, stable=True)       # pairs grouped by expert
+    inv = jnp.argsort(order, stable=True)          # pair → rank in sorted
+    start = jnp.searchsorted(flat_e[order], jnp.arange(n_experts))  # (E,)
+    # slot s of expert e ← pair order[start[e] + s]
+    slot_pair = start[:, None] + jnp.arange(capacity)[None, :]      # (E, C)
+    slot_valid = slot_pair < jnp.searchsorted(
+        flat_e[order], jnp.arange(n_experts) + 1
+    )[:, None]
+    slot_pair = jnp.clip(slot_pair, 0, t * k - 1)
+    pair_id = jnp.take(order, slot_pair)           # (E, C) index into T·k
+    slot_token = pair_id // k
+    # reverse map: pair (t,k) → its capacity slot
+    pair_rank = inv - jnp.take(start, flat_e)      # rank within expert
+    pair_kept = pair_rank < capacity
+    return slot_token, slot_valid, pair_rank.reshape(t, k), pair_kept.reshape(t, k)
+
+
+def _expert_ffn(p, xe, cfg):
+    """xe: (E, C, d) → (E, C, d); per-expert SwiGLU/GELU FFN."""
+    w_up = p["w_up"].astype(xe.dtype)
+    w_down = p["w_down"].astype(xe.dtype)
+    if "w_gate" in p:
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(xe.dtype)))
+        u = jnp.einsum("ecd,edf->ecf", xe, w_up)
+        return jnp.einsum("ecf,efd->ecd", g * u, w_down)
+    h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, w_up))
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_apply(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, S, D)
+    cfg,
+    *,
+    capacity_factor: Optional[float] = None,
+    expert_fn=None,
+    ctx=None,
+) -> jax.Array:
+    """Single-program MoE (TP mode / smoke tests): full dispatch→FFN→combine.
+
+    Under GSPMD, ``w_up/w_gate/w_down`` carry a model-axis sharding on the
+    ``f`` dimension (TP inside each expert), so this path needs no explicit
+    collectives.  ``expert_fn`` lets the EP path reuse dispatch/combine.
+
+    ``ctx`` (transformer.DistCtx): when given, the (E, C, d) dispatch and
+    output buffers are sharding-constrained with capacity over the data
+    axes.  Without the anchor GSPMD tends to REPLICATE the gathered buffer
+    across the model axis and run every expert FFN redundantly on all
+    model ranks (caught by the §Roofline useful-FLOPs ratio on
+    mixtral × prefill_32k: 18× redundant dot FLOPs).
+    """
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    gates, tope = _route(p, x2d, cfg)
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    capacity = max(1, int(t * cfg.top_k / cfg.n_experts * capacity_factor))
+    slot_token, slot_valid, pair_slot, pair_kept = _dispatch_indices(
+        tope, cfg.n_experts, capacity
+    )
+    xe = jnp.take(x2d, slot_token, axis=0) * slot_valid[..., None].astype(x.dtype)
+    if ctx is not None and ctx.mesh is not None:
+        spec = P(None, ctx.data_axes, None)
+        xe = lax.with_sharding_constraint(
+            xe, jax.sharding.NamedSharding(ctx.mesh, spec))
+    ye = (expert_fn or _expert_ffn)(p, xe, cfg)      # (E, C, d)
+    if ctx is not None and ctx.mesh is not None:
+        ye = lax.with_sharding_constraint(
+            ye, jax.sharding.NamedSharding(ctx.mesh, P(None, ctx.data_axes, None)))
+    # combine: token t's k-th pair reads (expert, slot) if kept
+    flat = ye.reshape(cfg.n_experts * capacity, d)
+    pair_idx = tope * capacity + jnp.clip(pair_slot, 0, capacity - 1)
+    y_pairs = jnp.take(flat, pair_idx.reshape(-1), axis=0).reshape(t, cfg.top_k, d)
+    w = (gates * pair_kept).astype(x.dtype)
+    return jnp.einsum("tkd,tk->td", y_pairs, w).reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel path: all_to_all over the model axis, optionally pipelined
+# ---------------------------------------------------------------------------
+
+def moe_apply_ep_shard(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg,
+    mesh: Mesh,
+    *,
+    data_axes=("data",),
+    model_axis: str = "model",
+    capacity_factor: Optional[float] = None,
+    pipeline_chunks: int = 1,
+) -> jax.Array:
+    """EP MoE under shard_map: experts sharded over ``model_axis``.
+
+    The dispatch buffer (E, C, d) is exchanged with all_to_all; with
+    ``pipeline_chunks > 1`` the capacity axis is chunked and the exchange of
+    chunk *k+1* is issued before the expert FFN of chunk *k* consumes its
+    buffer — MGG's communication-computation overlap (paper Fig. 7b).
+    """
+    ep = mesh.shape[model_axis]
+    assert cfg.n_experts % ep == 0, (cfg.n_experts, ep)
+
+    def body(p, x):
+        # x block: (B_local, S, D); expert weights block: (E/ep, d, f)
+        def expert_fn(p_blk, xe, cfg):
+            # xe: (E, C, d) local dispatch buffer → exchange → local experts
+            e, c, d = xe.shape
+            chunks = min(pipeline_chunks, c)
+            if c % chunks:
+                chunks = 1
+            xc = xe.reshape(e, chunks, c // chunks, d)
+
+            def exchange(z):  # (E, c', d) → (E/ep, c'·ep, d)
+                return lax.all_to_all(
+                    z, model_axis, split_axis=0, concat_axis=1, tiled=True
+                )
+
+            def exchange_back(z):
+                return lax.all_to_all(
+                    z, model_axis, split_axis=1, concat_axis=0, tiled=True
+                )
+
+            outs = []
+            cur = exchange(xc[:, 0])
+            for i in range(chunks):
+                nxt = exchange(xc[:, i + 1]) if i + 1 < chunks else None
+                y = _expert_ffn(p_blk, cur, cfg)      # overlaps nxt's A2A
+                outs.append(exchange_back(y))
+                if nxt is not None:
+                    cur = nxt
+            return jnp.concatenate(outs, axis=1)
+
+        p_local = dict(p)  # router replicated; experts sharded on E
+        return moe_apply(
+            p_local, x, cfg, capacity_factor=capacity_factor,
+            expert_fn=expert_fn,
+        )
+
+    pspec = dict(
+        router=dict(w=P()),
+        w_up=P(model_axis, None, None),
+        w_down=P(model_axis, None, None),
+    )
+    if "w_gate" in p:
+        pspec["w_gate"] = P(model_axis, None, None)
+    # Tokens are sharded over the model axis too (sequence split): every
+    # chip routes a DISTINCT token slice.  Replicating tokens over the
+    # model axis would make each chip compute identical dispatch buffers —
+    # an ep-fold redundancy (caught by the §Roofline useful-FLOPs ratio).
+    seq_shardable = x.shape[1] % ep == 0 and x.shape[1] >= ep
+    x_spec = P(data_axes, model_axis if seq_shardable else None, None)
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=(pspec, x_spec), out_specs=x_spec,
+        check_vma=False,
+    )
+    return fn(p, x)

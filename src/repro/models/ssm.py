@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) mixer for the zamba2 hybrid architecture.
+
+Implements the chunked state-space-dual algorithm: the sequence is processed
+in chunks of ``cfg.ssm_chunk``; within a chunk the token-token interactions
+are computed in parallel (an MXU-friendly masked matmul — this is what makes
+SSD a TPU-native formulation), while the O(1) recurrent state ``h`` of shape
+``(B, H, hd, N)`` is carried across chunks with ``lax.scan``.
+
+Recurrence (per head, discretized):
+    h_t = exp(a·dt_t) · h_{t-1} + dt_t · x_t ⊗ B_t
+    y_t = C_t · h_t + D · x_t
+
+Decode is the single-step form (``ssm_step``) — O(1) state, which is what
+makes the ``long_500k`` cell feasible for this family (DESIGN.md).
+
+Simplifications vs. the reference CUDA implementation (noted per the brief):
+single B/C group (n_groups=1), no dt bias clamping schedule; depthwise
+causal conv of width 4 kept.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import dense_init, rms_norm
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_step", "ssm_state_init"]
+
+_CONV_K = 4
+
+
+def _dims(cfg):
+    d_in = cfg.d_model * cfg.ssm_expand
+    heads = d_in // cfg.ssm_headdim
+    return d_in, heads, cfg.ssm_state
+
+
+def ssm_init(key, cfg) -> Dict[str, Any]:
+    d, (d_in, heads, n) = cfg.d_model, _dims(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj → [z (d_in), x (d_in), B (n), C (n), dt (heads)]
+    zxbcdt = 2 * d_in + 2 * n + heads
+    return dict(
+        in_proj=dense_init(ks[0], d, zxbcdt, cfg.param_dtype),
+        conv_w=(jax.random.normal(ks[1], (_CONV_K, d_in + 2 * n), jnp.float32)
+                * 0.1).astype(cfg.param_dtype),
+        a_log=jnp.zeros((heads,), jnp.float32),            # a = -exp(a_log)
+        d_skip=jnp.ones((heads,), jnp.float32),
+        dt_bias=jnp.zeros((heads,), jnp.float32),
+        norm_w=jnp.ones((d_in,), cfg.param_dtype),
+        out_proj=dense_init(ks[2], d_in, d, cfg.param_dtype),
+    )
+
+
+def ssm_state_init(cfg, batch: int, dtype=jnp.float32):
+    d_in, heads, n = _dims(cfg)
+    return dict(
+        h=jnp.zeros((batch, heads, cfg.ssm_headdim, n), dtype),
+        conv=jnp.zeros((batch, _CONV_K - 1, d_in + 2 * n), dtype),
+    )
+
+
+def _split_proj(p, x, cfg):
+    d_in, heads, n = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]["w"].astype(x.dtype)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv width-4; returns (out, new_conv_state)."""
+    b, s, c = xbc.shape
+    hist = state if state is not None else jnp.zeros(
+        (b, _CONV_K - 1, c), xbc.dtype
+    )
+    full = jnp.concatenate([hist, xbc], axis=1)  # (B, S+3, C)
+    out = sum(
+        full[:, i : i + s] * w[i][None, None].astype(xbc.dtype)
+        for i in range(_CONV_K)
+    )
+    return jax.nn.silu(out), full[:, -(_CONV_K - 1) :]
+
+
+def ssm_apply(
+    p: Dict[str, Any], x: jax.Array, cfg,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Chunked SSD over a full sequence. x: (B, S, D)."""
+    b, s, d = x.shape
+    d_in, heads, n = _dims(cfg)
+    hd = cfg.ssm_headdim
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    conv_in_state = state["conv"] if state is not None else None
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv_in_state)
+    xs = xbc[..., :d_in].reshape(b, s, heads, hd)
+    bmat = xbc[..., d_in : d_in + n]            # (B, S, N)
+    cmat = xbc[..., d_in + n :]                 # (B, S, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])        # (B, S, H)
+    a = -jnp.exp(p["a_log"])                                 # (H,)
+
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk:
+        chunk = s  # smoke shapes; production shapes divide evenly
+    n_ch = s // chunk
+    xs_c = xs.reshape(b, n_ch, chunk, heads, hd)
+    b_c = bmat.reshape(b, n_ch, chunk, n)
+    c_c = cmat.reshape(b, n_ch, chunk, n)
+    dt_c = dt.reshape(b, n_ch, chunk, heads)
+
+    h0 = (state["h"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, heads, hd, n), jnp.float32))
+
+    def chunk_body(h, inp):
+        xk, bk, ck, dtk = inp       # (B,c,H,hd), (B,c,N), (B,c,N), (B,c,H)
+        la = dtk * a[None, None]                      # log decay (B,c,H) ≤ 0
+        cum = jnp.cumsum(la, axis=1)                  # (B,c,H)
+        # intra-chunk: scores[i,j] = (C_i·B_j) exp(cum_i − cum_j) dt_j, j ≤ i
+        cb = jnp.einsum("bin,bjn->bij", ck.astype(jnp.float32),
+                        bk.astype(jnp.float32))       # (B,c,c)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]      # (B,c,c,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        w = w * (cb[..., None] * dtk[:, None, :, :])
+        y = jnp.einsum("bijh,bjhp->bihp", w, xk.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        y += jnp.einsum("bin,bhpn,bih->bihp", ck.astype(jnp.float32), h,
+                        jnp.exp(cum))
+        # next state: h' = h·exp(cum_last) + Σ_j exp(cum_last−cum_j) dt_j x_j⊗B_j
+        wlast = jnp.exp(cum[:, -1:, :] - cum) * dtk          # (B,c,H)
+        dh = jnp.einsum("bjh,bjhp,bjn->bhpn", wlast,
+                        xk.astype(jnp.float32), bk.astype(jnp.float32))
+        h = h * jnp.exp(cum[:, -1])[:, :, None, None] + dh
+        return h, y
+
+    h, ys = lax.scan(
+        chunk_body, h0,
+        (jnp.moveaxis(xs_c, 1, 0), jnp.moveaxis(b_c, 1, 0),
+         jnp.moveaxis(c_c, 1, 0), jnp.moveaxis(dt_c, 1, 0)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, heads, hd)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = dict(h=h.astype(state["h"].dtype), conv=conv_state)
+    return out, new_state
+
+
+def ssm_step(
+    p: Dict[str, Any], x: jax.Array, cfg, state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode step. x: (B, 1, D); O(1) state update."""
+    b = x.shape[0]
+    d_in, heads, n = _dims(cfg)
+    hd = cfg.ssm_headdim
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], state["conv"])
+    xs = xbc[:, 0, :d_in].reshape(b, heads, hd)
+    bmat = xbc[:, 0, d_in : d_in + n]  # (B, N)
+    cmat = xbc[:, 0, d_in + n :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    h = state["h"].astype(jnp.float32)
+    decay = jnp.exp(dt * a[None])                 # (B, H)
+    h = h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32), bmat.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cmat.astype(jnp.float32), h)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    return out, dict(h=h.astype(state["h"].dtype), conv=conv_state)

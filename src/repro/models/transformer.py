@@ -1,0 +1,466 @@
+"""Decoder-only LM assembly for the assigned architecture pool.
+
+One parameter/pytree layout + three entry points per architecture family:
+
+* ``loss_fn``  — training forward + next-token CE (the ``train_step`` body)
+* ``prefill``  — run the prompt, fill decode caches, return last-pos logits
+* ``decode_step`` — one token with O(1)/ring-buffer caches
+
+Families (cfg.family):
+  dense   — GQA transformer (codeqwen / nemo / qwen3 / starcoder2)
+  moe     — dense attention + MoE FFN (mixtral, granite)
+  vlm     — dense backbone with stub visual-token prefix (internvl2)
+  hybrid  — Mamba2 stack with a *shared* attention block every
+            ``attn_every`` layers (zamba2)
+  xlstm   — alternating mLSTM/sLSTM groups (xlstm-125m)
+(whisper's encoder-decoder lives in encdec.py.)
+
+Layers are stacked and driven by ``lax.scan`` (one traced block per family
+⇒ O(1) HLO size for 80-layer models) with per-layer ``jax.checkpoint``
+(remat) in training.  Activation sharding is anchored by
+``with_sharding_constraint`` using the DistCtx's logical rules: residual
+stream is (batch=data, seq=model, d) — Megatron-style sequence parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from . import xlstm as xlstm_lib
+from .layers import (
+    KVCache, attention_apply, attention_init, embed_init, embed_lookup,
+    kv_cache_init, layer_norm, mlp_apply, mlp_init, rms_norm, unembed_logits,
+)
+
+__all__ = ["DistCtx", "init_params", "loss_fn", "forward", "prefill",
+           "decode_step", "init_cache", "cache_length"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    """Distribution context threaded through the model (None ⇒ single chip)."""
+
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    moe_pipeline_chunks: int = 1   # MGG pipelining depth for EP dispatch
+    shard_activations: bool = True
+    # Megatron-style sequence-parallel residual stream.  WRONG for
+    # recurrent families (xlstm/hybrid): their per-timestep/per-chunk scans
+    # would reshard the sequence dim every iteration (measured: 24,604
+    # all-reduces for xlstm-125m × train_4k) — launch/cells.py turns it off
+    # for those families.
+    seq_shard_acts: bool = True
+
+    def constrain(self, h: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None or not self.shard_activations:
+            return h
+        return lax.with_sharding_constraint(h, NamedSharding(self.mesh, spec))
+
+    def act_spec(self, seq_sharded: bool = True) -> P:
+        seq = seq_sharded and self.seq_shard_acts
+        return P(self.data_axes, self.model_axis if seq else None, None)
+
+
+def _norm(h, w, cfg):
+    if cfg.norm == "ln":
+        return layer_norm(h, w["scale"], w["bias"], cfg.norm_eps)
+    return rms_norm(h, w["scale"], cfg.norm_eps)
+
+
+def _norm_init(cfg):
+    w = dict(scale=jnp.ones((cfg.d_model,), cfg.param_dtype))
+    if cfg.norm == "ln":
+        w["bias"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# per-family block init / apply
+# ---------------------------------------------------------------------------
+
+def _dense_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return dict(ln1=_norm_init(cfg), attn=attention_init(k1, cfg),
+                ln2=_norm_init(cfg), mlp=mlp_init(k2, cfg))
+
+
+def _moe_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return dict(ln1=_norm_init(cfg), attn=attention_init(k1, cfg),
+                ln2=_norm_init(cfg), moe=moe_lib.moe_init(k2, cfg))
+
+
+def _attn_sub(bp, h, cfg, positions, cache, ctx):
+    a, new_cache = attention_apply(
+        bp["attn"], _norm(h, bp["ln1"], cfg), cfg, positions, cache
+    )
+    return h + a, new_cache
+
+
+def _dense_block(bp, h, cfg, positions, cache, ctx):
+    h, new_cache = _attn_sub(bp, h, cfg, positions, cache, ctx)
+    h = h + mlp_apply(bp["mlp"], _norm(h, bp["ln2"], cfg), cfg)
+    return ctx.constrain(h, ctx.act_spec()), new_cache
+
+
+def _moe_block(bp, h, cfg, positions, cache, ctx):
+    h, new_cache = _attn_sub(bp, h, cfg, positions, cache, ctx)
+    z = _norm(h, bp["ln2"], cfg)
+    if (cfg.expert_mode == "ep" and ctx.mesh is not None
+            and cfg.n_experts % ctx.mesh.shape[ctx.model_axis] == 0):
+        y = moe_lib.moe_apply_ep_shard(
+            bp["moe"], z, cfg, ctx.mesh,
+            data_axes=ctx.data_axes, model_axis=ctx.model_axis,
+            pipeline_chunks=ctx.moe_pipeline_chunks,
+        )
+    else:
+        y = moe_lib.moe_apply(bp["moe"], z, cfg, ctx=ctx)
+    return ctx.constrain(h + y, ctx.act_spec()), new_cache
+
+
+def _mamba_block_init(key, cfg):
+    return dict(ln=_norm_init(cfg), ssm=ssm_lib.ssm_init(key, cfg))
+
+
+def _mamba_block(bp, h, cfg, positions, state, ctx, *, step: bool):
+    z = _norm(h, bp["ln"], cfg)
+    if step:
+        y, new_state = ssm_lib.ssm_step(bp["ssm"], z, cfg, state)
+    else:
+        y, new_state = ssm_lib.ssm_apply(bp["ssm"], z, cfg, state)
+    return ctx.constrain(h + y, ctx.act_spec()), new_state
+
+
+def _xlstm_block_init(key, cfg, kind: str):
+    if kind == "m":
+        return dict(ln=_norm_init(cfg), mix=xlstm_lib.mlstm_init(key, cfg))
+    return dict(ln=_norm_init(cfg), mix=xlstm_lib.slstm_init(key, cfg))
+
+
+def _xlstm_block(bp, h, cfg, kind, state, ctx):
+    z = _norm(h, bp["ln"], cfg)
+    fn = xlstm_lib.mlstm_apply if kind == "m" else xlstm_lib.slstm_apply
+    y, new_state = fn(bp["mix"], z, cfg, state=state)
+    return ctx.constrain(h + y, ctx.act_spec()), new_state
+
+
+def _stack(key, n: int, init_fn):
+    ps = [init_fn(k) for k in jax.random.split(key, n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _hybrid_layout(cfg) -> Tuple[int, int, int]:
+    """(n_groups, group_size, tail) for the hybrid family."""
+    gs = max(1, cfg.attn_every)
+    n_groups = cfg.n_layers // gs
+    tail = cfg.n_layers - n_groups * gs
+    return n_groups, gs, tail
+
+
+def init_params(key, cfg, vocab_multiple: int = 16) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = dict(
+        embed=embed_init(keys[0], cfg.vocab, cfg.d_model, cfg.param_dtype,
+                         vocab_multiple),
+        final_norm=_norm_init(cfg),
+    )
+    if not cfg.tie_embeddings:
+        from .layers import dense_init
+        params["lm_head"] = dense_init(
+            keys[6], cfg.d_model,
+            -(-cfg.vocab // vocab_multiple) * vocab_multiple, cfg.param_dtype)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = _stack(
+            keys[1], cfg.n_layers, lambda k: _dense_block_init(k, cfg))
+        if fam == "vlm":
+            from .layers import dense_init
+            params["vis_proj"] = dense_init(
+                keys[2], cfg.d_model, cfg.d_model, cfg.param_dtype)
+    elif fam == "moe":
+        params["blocks"] = _stack(
+            keys[1], cfg.n_layers, lambda k: _moe_block_init(k, cfg))
+    elif fam == "hybrid":
+        n_groups, gs, tail = _hybrid_layout(cfg)
+        params["mamba_main"] = _stack(
+            keys[1], n_groups * gs, lambda k: _mamba_block_init(k, cfg))
+        if tail:
+            params["mamba_tail"] = _stack(
+                keys[2], tail, lambda k: _mamba_block_init(k, cfg))
+        # zamba2's shared transformer block = attention + MLP (d_ff),
+        # ONE param set reused at every application (the arch's trick)
+        params["shared_attn"] = _dense_block_init(keys[3], cfg)
+    elif fam == "xlstm":
+        pat = cfg.xlstm_pattern or ("m", "s")
+        n_groups = cfg.n_layers // len(pat)
+        for i, kind in enumerate(pat):
+            params[f"xl_{i}_{kind}"] = _stack(
+                keys[1 + i], n_groups,
+                lambda k, kind=kind: _xlstm_block_init(k, cfg, kind))
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_length(cfg, seq_len: int) -> int:
+    """Ring-buffer size: the sliding window bounds it when set."""
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Decode caches for a maximum context of ``seq_len`` tokens."""
+    size = cache_length(cfg, seq_len)
+    fam = cfg.family
+
+    def kv(n):
+        c = kv_cache_init(cfg, batch, size, dtype)
+        return KVCache(
+            k=jnp.broadcast_to(c.k, (n,) + c.k.shape),
+            v=jnp.broadcast_to(c.v, (n,) + c.v.shape),
+            key_pos=jnp.broadcast_to(c.key_pos, (n,) + c.key_pos.shape),
+        )
+
+    if fam in ("dense", "vlm", "moe"):
+        return dict(kv=kv(cfg.n_layers))
+    if fam == "hybrid":
+        n_groups, gs, tail = _hybrid_layout(cfg)
+        st = ssm_lib.ssm_state_init(cfg, batch)
+        stack = lambda t, n: jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape), t)
+        out = dict(ssm_main=stack(st, n_groups * gs), attn=kv(n_groups))
+        if tail:
+            out["ssm_tail"] = stack(st, tail)
+        return out
+    if fam == "xlstm":
+        pat = cfg.xlstm_pattern or ("m", "s")
+        n_groups = cfg.n_layers // len(pat)
+        out = {}
+        for i, kind in enumerate(pat):
+            st = (xlstm_lib.mlstm_state_init(cfg, batch) if kind == "m"
+                  else xlstm_lib.slstm_state_init(cfg, batch))
+            out[f"xl_{i}_{kind}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), st)
+        return out
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(blocks, h, fn, cache=None, remat: bool = False):
+    """Scan ``fn(bp, h, cache_slice) -> (h, new_cache_slice)`` over layers."""
+
+    def body(h, xs):
+        bp, c = xs
+        h, new_c = fn(bp, h, c)
+        return h, new_c
+
+    if remat:
+        body = jax.checkpoint(body)
+    if cache is None:
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        h, _ = lax.scan(body, h, (blocks, None), length=n)
+        return h, None
+    return lax.scan(body, h, (blocks, cache))
+
+
+def forward(
+    params: Dict[str, Any],
+    cfg,
+    tokens: jax.Array,                 # (B, S)
+    *,
+    ctx: DistCtx = DistCtx(),
+    positions: Optional[jax.Array] = None,
+    cache=None,
+    vis: Optional[jax.Array] = None,   # vlm: (B, n_vis, d_model)
+    remat: Optional[bool] = None,
+    step: bool = False,                # decode single-step mode
+):
+    """Returns (logits, new_cache)."""
+    b, s = tokens.shape
+    remat = cfg.remat if remat is None else remat
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = embed_lookup(params["embed"], tokens, cfg.cdtype)
+    n_vis = 0
+    if cfg.family == "vlm" and vis is not None:
+        hv = vis.astype(cfg.cdtype) @ params["vis_proj"]["w"].astype(cfg.cdtype)
+        h = jnp.concatenate([hv, h], axis=1)
+        n_vis = vis.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(s + n_vis, dtype=jnp.int32), (b, s + n_vis))
+    h = ctx.constrain(h, ctx.act_spec(seq_sharded=not step))
+
+    fam = cfg.family
+    new_cache = None
+    if fam in ("dense", "vlm", "moe"):
+        block = _dense_block if fam in ("dense", "vlm") else _moe_block
+
+        def fn(bp, h, c):
+            return block(bp, h, cfg, positions,
+                         None if c is None else c, ctx)
+
+        h, kv_new = _scan_blocks(params["blocks"], h, fn,
+                                 None if cache is None else cache["kv"],
+                                 remat)
+        if cache is not None:
+            new_cache = dict(kv=kv_new)
+    elif fam == "hybrid":
+        n_groups, gs, tail = _hybrid_layout(cfg)
+        mm = params["mamba_main"]
+        # reshape the stacked mamba params into (n_groups, gs, ...)
+        mm_g = jax.tree.map(
+            lambda x: x.reshape((n_groups, gs) + x.shape[1:]), mm)
+        c_main = None if cache is None else jax.tree.map(
+            lambda x: x.reshape((n_groups, gs) + x.shape[1:]),
+            cache["ssm_main"])
+        c_attn = None if cache is None else cache["attn"]
+
+        def group_fn(h, xs):
+            gp, c_ssm, c_kv = xs
+
+            def inner(h, ys):
+                bp, c = ys
+                return _mamba_block(bp, h, cfg, positions, c, ctx, step=step)
+
+            h, new_ssm = lax.scan(inner, h, (gp, c_ssm))
+            h, new_kv = _dense_block(params["shared_attn"], h, cfg,
+                                     positions, c_kv, ctx)
+            return h, (new_ssm, new_kv)
+
+        if remat:
+            group_fn = jax.checkpoint(group_fn)
+        if cache is None:
+            def group_fn_nc(h, gp):
+                def inner(h, bp):
+                    h, _ = _mamba_block(bp, h, cfg, positions, None, ctx,
+                                        step=False)
+                    return h, None
+                h, _ = lax.scan(inner, h, gp)
+                h, _ = _dense_block(params["shared_attn"], h, cfg,
+                                    positions, None, ctx)
+                return h, None
+            if remat:
+                group_fn_nc = jax.checkpoint(group_fn_nc)
+            h, _ = lax.scan(group_fn_nc, h, mm_g)
+        else:
+            h, (new_ssm, new_kv) = lax.scan(
+                group_fn, h, (mm_g, c_main, c_attn))
+            new_cache = dict(
+                ssm_main=jax.tree.map(
+                    lambda x: x.reshape((n_groups * gs,) + x.shape[2:]),
+                    new_ssm),
+                attn=new_kv,
+            )
+        if tail:
+            def tail_fn(h, xs):
+                bp, c = xs
+                return _mamba_block(bp, h, cfg, positions, c, ctx, step=step)
+            if cache is None:
+                def tail_fn_nc(h, bp):
+                    h, _ = _mamba_block(bp, h, cfg, positions, None, ctx,
+                                        step=False)
+                    return h, None
+                h, _ = lax.scan(tail_fn_nc, h, params["mamba_tail"])
+            else:
+                h, new_tail = lax.scan(
+                    tail_fn, h, (params["mamba_tail"], cache["ssm_tail"]))
+                new_cache["ssm_tail"] = new_tail
+    elif fam == "xlstm":
+        pat = cfg.xlstm_pattern or ("m", "s")
+        n_groups = cfg.n_layers // len(pat)
+        stacks = [(f"xl_{i}_{kind}", kind) for i, kind in enumerate(pat)]
+        new_cache = {} if cache is not None else None
+
+        def group_fn(h, xs):
+            # xs: tuple of (bp, c) per pattern element
+            new_cs = []
+            for (name, kind), (bp, c) in zip(stacks, xs):
+                h, nc = _xlstm_block(bp, h, cfg, kind, c, ctx)
+                new_cs.append(nc)
+            return h, tuple(new_cs)
+
+        if remat:
+            group_fn = jax.checkpoint(group_fn)
+        xs = tuple(
+            (params[name], None if cache is None else cache[name])
+            for name, _ in stacks
+        )
+        if cache is None:
+            def group_fn_nc(h, xs):
+                for (name, kind), bp in zip(stacks, xs):
+                    h, _ = _xlstm_block(bp, h, cfg, kind, None, ctx)
+                return h, None
+            if remat:
+                group_fn_nc = jax.checkpoint(group_fn_nc)
+            h, _ = lax.scan(group_fn_nc, h,
+                            tuple(params[name] for name, _ in stacks))
+        else:
+            h, new_cs = lax.scan(group_fn, h, xs)
+            for (name, _), nc in zip(stacks, new_cs):
+                new_cache[name] = nc
+    else:
+        raise ValueError(fam)
+
+    h = _norm(h, params["final_norm"], cfg)
+    if n_vis:
+        h = h[:, n_vis:]
+    if cfg.tie_embeddings:
+        logits = unembed_logits(params["embed"], h, cfg.vocab)
+    else:
+        logits = h.astype(jnp.float32) @ params["lm_head"]["w"].astype(jnp.float32)
+        logits = logits.at[..., cfg.vocab:].set(-1e30) \
+            if logits.shape[-1] != cfg.vocab else logits
+    return logits, new_cache
+
+
+def loss_fn(params, cfg, batch: Dict[str, jax.Array], *,
+            ctx: DistCtx = DistCtx()) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (mean over non-masked positions)."""
+    tokens = batch["tokens"]
+    vis = batch.get("vis")
+    logits, _ = forward(params, cfg, tokens, ctx=ctx, vis=vis)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(ll) if mask is None else mask[:, 1:].astype(ll.dtype)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, dict(loss=loss, ntokens=mask.sum())
+
+
+def prefill(params, cfg, tokens, cache, *, ctx: DistCtx = DistCtx(),
+            vis=None):
+    """Run the prompt; fills caches; returns (last-position logits, cache)."""
+    logits, new_cache = forward(
+        params, cfg, tokens, ctx=ctx, cache=cache, vis=vis, remat=False)
+    return logits[:, -1], new_cache
+
+
+def decode_step(params, cfg, token, pos, cache, *, ctx: DistCtx = DistCtx()):
+    """One decode step. token: (B,) int32; pos: (B,) absolute position."""
+    logits, new_cache = forward(
+        params, cfg, token[:, None], ctx=ctx,
+        positions=pos[:, None], cache=cache, remat=False, step=True)
+    return logits[:, 0], new_cache

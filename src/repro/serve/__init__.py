@@ -1,0 +1,2 @@
+"""Serving substrate."""
+from .engine import ServeEngine, GenerationResult

@@ -1,0 +1,98 @@
+"""Batched serving engine: prefill + decode over fixed batch slots.
+
+Wave-scheduled continuous batching: requests are admitted into a fixed
+number of batch slots; one jitted ``decode_step`` advances every active
+slot; finished slots (EOS / budget) are frozen via the active mask and
+refilled from the queue at the next wave boundary.  Greedy or temperature
+sampling.  This is the serving loop the ``decode_*`` dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, transformer
+
+__all__ = ["ServeEngine", "GenerationResult"]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: List[int]
+    prompt_len: int
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, *, batch_slots: int = 8,
+                 max_seq: int = 512, ctx=None, eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.ctx = ctx or transformer.DistCtx()
+        self.eos_id = eos_id
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "use encdec.prefill/decode_step directly for whisper")
+        self._prefill = jax.jit(
+            lambda p, t, c: transformer.prefill(p, cfg, t, c, ctx=self.ctx))
+        self._decode = jax.jit(
+            lambda p, t, pos, c: transformer.decode_step(
+                p, cfg, t, pos, c, ctx=self.ctx))
+
+    def _sample(self, logits: np.ndarray, temperature: float,
+                rng: np.random.Generator) -> np.ndarray:
+        if temperature <= 0:
+            return logits.argmax(-1).astype(np.int32)
+        z = logits / temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([rng.choice(p.shape[-1], p=p[i])
+                         for i in range(p.shape[0])], np.int32)
+
+    def generate(self, prompts: List[np.ndarray], *, max_new: int = 32,
+                 temperature: float = 0.0, seed: int = 0
+                 ) -> List[GenerationResult]:
+        """Wave-batched generation over all prompts."""
+        rng = np.random.default_rng(seed)
+        results: List[Optional[GenerationResult]] = [None] * len(prompts)
+        queue = list(range(len(prompts)))
+        while queue:
+            wave, queue = queue[: self.B], queue[self.B :]
+            plen = max(len(prompts[i]) for i in wave)
+            b = len(wave)
+            toks = np.zeros((b, plen), np.int32)
+            for j, i in enumerate(wave):
+                toks[j, -len(prompts[i]):] = prompts[i]  # left-pad
+            cache = transformer.init_cache(
+                self.cfg, b, min(self.max_seq, plen + max_new),
+                dtype=jnp.float32)
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(toks), cache)
+            out_tokens = [[] for _ in wave]
+            active = np.ones(b, bool)
+            cur = self._sample(np.asarray(logits), temperature, rng)
+            pos = np.full((b,), plen, np.int32)
+            for step in range(max_new):
+                for j in range(b):
+                    if active[j]:
+                        out_tokens[j].append(int(cur[j]))
+                        if self.eos_id is not None and cur[j] == self.eos_id:
+                            active[j] = False
+                if not active.any():
+                    break
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(cur), jnp.asarray(pos), cache)
+                cur = self._sample(np.asarray(logits), temperature, rng)
+                pos = pos + 1
+            for j, i in enumerate(wave):
+                results[i] = GenerationResult(
+                    tokens=out_tokens[j], prompt_len=len(prompts[i]),
+                    steps=len(out_tokens[j]))
+        return results  # type: ignore[return-value]

@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, step factory, fault-tolerant driver,
+checkpointing, data pipelines."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+from .trainer import Trainer, TrainState, make_train_step, make_loss_fn
+from .data import LMDataConfig, lm_batch, lm_stream, graph_features
+from . import checkpoint

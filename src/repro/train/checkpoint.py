@@ -1,0 +1,156 @@
+"""Atomic, shard-agnostic checkpointing (fault-tolerance substrate).
+
+Design (orbax-free, single-controller):
+
+* every pytree leaf is saved as one ``.npy`` file named by its tree path;
+  a ``manifest.json`` records the treedef, shapes, dtypes, and step;
+* writes go to ``<dir>/tmp-<step>`` and are atomically ``rename``d to
+  ``<dir>/step-<step>`` after fsync — a crash mid-write never corrupts the
+  latest checkpoint;
+* ``restore`` takes the *abstract* target tree + shardings and
+  ``device_put``s each leaf with the **current** mesh's sharding — the
+  checkpoint stores plain host arrays, so restarts may change the mesh
+  shape or chip count (elastic scaling / DESIGN.md §5.5);
+* optional async save on a background thread (double-buffered host copy);
+* retention: keep the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+
+def _flat_with_names(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
+         extra: Optional[Dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step-{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = dict(step=step, leaves=[], extra=extra or {})
+    for name, leaf in _flat_with_names(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        logical = str(arr.dtype)
+        if arr.dtype.kind == "V":  # ml_dtypes (bf16, fp8): store raw bits
+            logical = str(jax.numpy.dtype(leaf.dtype))
+            arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+        fname = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            dict(name=name, file=fname, shape=list(arr.shape),
+                 dtype=logical))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir) if d.startswith("step-")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(
+        int(d.split("-")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step-")
+    )
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Load into the structure of ``target`` (abstract or concrete pytree).
+
+    ``shardings``: optional matching pytree of NamedShardings built from the
+    *current* mesh — leaves are placed directly into their (possibly new)
+    layout, which is what makes restarts elastic.
+    """
+    d = os.path.join(ckpt_dir, f"step-{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {l["name"]: l for l in manifest["leaves"]}
+    names = [n for n, _ in _flat_with_names(target)]
+    shard_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        if shardings is not None else [None] * len(names))
+    leaves = []
+    for name, sh in zip(names, shard_leaves):
+        entry = by_name[name]
+        arr = np.load(os.path.join(d, entry["file"]))
+        want = jax.numpy.dtype(entry["dtype"])
+        if arr.dtype != want and arr.dtype.kind == "u":
+            arr = arr.view(want)  # bf16/fp8 stored as raw bits
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(target)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Periodic (optionally async) checkpointing with restart support."""
+
+    def __init__(self, ckpt_dir: str, *, every: int = 100, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = ckpt_dir
+        self.every = every
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree: Any, extra=None) -> bool:
+        if step % self.every:
+            return False
+        self.wait()
+        # host copy now (cheap, double buffer) — device free to continue
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=save, args=(self.dir, step, host),
+                kwargs=dict(keep=self.keep, extra=extra), daemon=True)
+            self._thread.start()
+        else:
+            save(self.dir, step, host, keep=self.keep, extra=extra)
+        return True
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, target: Any, shardings=None):
+        step = latest_step(self.dir)
+        if step is None:
+            return None, None
+        return step, restore(self.dir, step, target, shardings)

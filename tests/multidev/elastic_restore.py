@@ -1,0 +1,30 @@
+"""Elastic scaling: a checkpoint saved under a 2-device mesh restores onto
+an 8-device mesh with different sharding — the restart path for a resized
+cluster (DESIGN.md §5.5)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.dist import make_mesh
+from repro.train import checkpoint as ck
+
+tree = dict(w=jnp.arange(64 * 16, dtype=jnp.float32).reshape(64, 16),
+            b=jnp.ones((64,), jnp.bfloat16))
+mesh2 = make_mesh((2,), ("data",))
+sh2 = dict(w=NamedSharding(mesh2, P("data", None)),
+           b=NamedSharding(mesh2, P("data")))
+tree2 = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sh2)
+with tempfile.TemporaryDirectory() as d:
+    ck.save(d, 7, tree2)
+    # restore onto an 8-way mesh with a DIFFERENT layout
+    mesh8 = make_mesh((8,), ("data",))
+    sh8 = dict(w=NamedSharding(mesh8, P(None, "data")),  # other dim!
+               b=NamedSharding(mesh8, P("data")))
+    out = ck.restore(d, 7, tree, sh8)
+    assert out["w"].sharding == sh8["w"]
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(out["b"], np.float32), np.asarray(tree["b"], np.float32))
+    assert out["b"].dtype == jnp.bfloat16
+print("PASSED")

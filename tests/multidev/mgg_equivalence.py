@@ -1,0 +1,29 @@
+"""8-device shard_map equivalence: MGG ring (all knobs) + baselines vs oracle."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+import repro.core as C
+from repro.dist import flat_ring_mesh
+
+g = C.power_law(400, avg_degree=9.0, locality=0.35, seed=11)
+x = np.random.default_rng(3).normal(size=(g.num_nodes, 23)).astype(np.float32)
+want = C.reference_aggregate(g.indptr, g.indices, x)
+mesh = flat_ring_mesh(8)
+for ps, dist, il, kern in [(4,1,True,False),(16,2,False,False),(8,4,True,False),(8,1,True,True)]:
+    plan = C.build_plan(g, 8, ps=ps, dist=dist)
+    out = C.mgg_aggregate(jnp.asarray(C.pad_embeddings(plan, x)), plan, mesh,
+                          interleave=il, use_kernel=kern)
+    got = C.unpad_embeddings(plan, np.asarray(out))
+    err = np.abs(got - want).max()
+    assert err < 1e-3, (ps, dist, il, kern, err)
+bounds = C.edge_balanced_node_split(g.indptr, 8)
+nbrs, mask, tgt, rows = C.build_bulk_plan(g, 8, ps=16)
+xb = C.pad_table(bounds, rows, x)
+out = C.bulk_aggregate(jnp.asarray(xb), nbrs, mask, tgt, rows, mesh)
+assert np.abs(C.unpad_table(bounds, rows, np.asarray(out)) - want).max() < 1e-3
+# grads through the multi-device ring
+plan = C.build_plan(g, 8, ps=8, dist=2)
+xp = jnp.asarray(C.pad_embeddings(plan, x))
+gr = jax.grad(lambda z: (C.mgg_aggregate(z, plan, mesh) ** 2).sum())(xp)
+assert np.isfinite(np.asarray(gr)).all() and float(jnp.abs(gr).sum()) > 0
+print("PASSED")

@@ -1,0 +1,78 @@
+"""The 10 assigned architectures must carry the EXACT published numbers."""
+import pytest
+
+from repro import configs
+
+# (arch, layers, d_model, heads, kv, d_ff, vocab) from the assignment table
+TABLE = [
+    ("codeqwen1.5-7b", 32, 4096, 32, 32, 13440, 92416, "dense"),
+    ("mistral-nemo-12b", 40, 5120, 32, 8, 14336, 131072, "dense"),
+    ("qwen3-32b", 64, 5120, 64, 8, 25600, 151936, "dense"),
+    ("starcoder2-15b", 40, 6144, 48, 4, 24576, 49152, "dense"),
+    ("zamba2-7b", 81, 3584, 32, 32, 14336, 32000, "hybrid"),
+    ("internvl2-76b", 80, 8192, 64, 8, 28672, 128256, "vlm"),
+    ("mixtral-8x7b", 32, 4096, 32, 8, 14336, 32000, "moe"),
+    ("granite-moe-1b-a400m", 24, 1024, 16, 8, 512, 49155, "moe"),
+    ("xlstm-125m", 12, 768, 4, 4, 0, 50304, "xlstm"),
+    ("whisper-base", 6, 512, 8, 8, 2048, 51865, "encdec"),
+]
+
+
+@pytest.mark.parametrize("arch,L,d,H,kv,ff,V,fam", TABLE)
+def test_exact_config(arch, L, d, H, kv, ff, V, fam):
+    cfg = configs.get_config(arch)
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == H and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab == V
+    assert cfg.family == fam
+
+
+def test_family_specifics():
+    assert configs.get_config("qwen3-32b").qk_norm
+    assert configs.get_config("mixtral-8x7b").n_experts == 8
+    assert configs.get_config("mixtral-8x7b").top_k == 2
+    assert configs.get_config("mixtral-8x7b").sliding_window == 4096
+    g = configs.get_config("granite-moe-1b-a400m")
+    assert g.n_experts == 32 and g.top_k == 8 and g.expert_mode == "ep"
+    z = configs.get_config("zamba2-7b")
+    assert z.ssm_state == 64 and z.attn_every > 0
+    w = configs.get_config("whisper-base")
+    assert w.n_enc_layers == 6 and w.mlp_type == "gelu" and w.norm == "ln"
+    assert configs.get_config("starcoder2-15b").mlp_type == "gelu"
+    assert configs.get_config("internvl2-76b").n_vis_tokens > 0
+    assert configs.get_config("xlstm-125m").xlstm_pattern == ("m", "s")
+
+
+def test_shape_applicability_rules():
+    from repro.configs import SHAPES, shape_applicable
+    long = SHAPES["long_500k"]
+    runs = [a for a in configs.ARCH_IDS
+            if shape_applicable(configs.get_config(a), long)[0]]
+    # hybrid + xlstm + SWA-bounded mixtral run; pure full-attention skip
+    assert set(runs) == {"zamba2-7b", "xlstm-125m", "mixtral-8x7b"}
+    for a in configs.ARCH_IDS:
+        cfg = configs.get_config(a)
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(cfg, SHAPES[s])[0]
+
+
+def test_smoke_configs_stay_in_family():
+    for a in configs.ARCH_IDS:
+        full, smoke = configs.get_config(a), configs.get_smoke_config(a)
+        assert smoke.family == full.family
+        assert smoke.d_model <= 128 and smoke.n_layers <= 8
+        assert smoke.mlp_type == full.mlp_type and smoke.norm == full.norm
+        if full.family == "moe":
+            assert smoke.n_experts > 1
+
+
+def test_param_counts_plausible():
+    # sanity: param_count should be within 2× of the nameplate sizes
+    approx = {
+        "codeqwen1.5-7b": 7e9, "mistral-nemo-12b": 12e9, "qwen3-32b": 32e9,
+        "starcoder2-15b": 15e9, "internvl2-76b": 70e9,
+        "mixtral-8x7b": 46e9, "xlstm-125m": 125e6,
+    }
+    for a, n in approx.items():
+        got = configs.get_config(a).param_count()
+        assert 0.4 * n < got < 2.5 * n, (a, got, n)

@@ -1,0 +1,100 @@
+"""Oracle tests for the trip-count-aware HLO analyzer: scanned loops must
+cost the same as their unrolled equivalents."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.launch.hlo_cost import analyze
+
+
+def _cost(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze(txt)
+
+
+def test_scan_matches_unrolled_flops():
+    d, L = 64, 8
+    w = jnp.ones((L, d, d), jnp.float32)
+    x = jnp.ones((d, d), jnp.float32)
+
+    def scanned(x, w):
+        return lax.scan(lambda h, wl: (h @ wl, None), x, w)[0]
+
+    def unrolled(x, w):
+        for i in range(L):
+            x = x @ w[i]
+        return x
+
+    cs, cu = _cost(scanned, x, w), _cost(unrolled, x, w)
+    expected = L * 2 * d ** 3
+    assert cs.dot_flops == expected, (cs.dot_flops, expected)
+    assert cu.dot_flops == expected
+    assert list(cs.while_trips.values()) == [L]
+
+
+def test_nested_scan_multiplies():
+    d, L1, L2 = 32, 3, 5
+    w = jnp.ones((L1, L2, d, d), jnp.float32)
+    x = jnp.ones((d, d), jnp.float32)
+
+    def fn(x, w):
+        def outer(h, wg):
+            h2 = lax.scan(lambda h, wl: (h @ wl, None), h, wg)[0]
+            return h2, None
+        return lax.scan(outer, x, w)[0]
+
+    c = _cost(fn, x, w)
+    assert c.dot_flops == L1 * L2 * 2 * d ** 3
+
+
+def test_grad_with_remat_counts_recompute():
+    d, L = 32, 4
+    w = jnp.ones((L, d, d), jnp.float32)
+    x = jnp.ones((d, d), jnp.float32)
+
+    def loss(x, w):
+        def body(h, wl):
+            return h @ wl, None
+        return lax.scan(jax.checkpoint(body), x, w)[0].sum()
+
+    c = _cost(lambda x, w: jax.grad(loss, argnums=1)(x, w), x, w)
+    # fwd (1) + remat-fwd (1) + bwd (2 dots per layer) = 4 matmuls/layer
+    expected = 4 * L * 2 * d ** 3
+    assert abs(c.dot_flops - expected) / expected < 0.35, (
+        c.dot_flops, expected)
+
+
+def test_collectives_inside_loop_are_trip_multiplied():
+    import os
+    # single device: use a degenerate mesh with axis size 1? ppermute needs
+    # shard_map; use psum_scatter-free path: just check while×collective via
+    # a fori_loop of all_gather on a 1-device mesh.
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("r",))
+
+    def body_fn(x):
+        def step(i, acc):
+            g = lax.all_gather(acc, "r", axis=0, tiled=True)
+            return g * 0.5
+        return lax.fori_loop(0, 7, step, x)
+
+    fn = jax.shard_map(body_fn, mesh=mesh, in_specs=P("r"),
+                       out_specs=P("r"), check_vma=False)
+    x = jnp.ones((4, 4), jnp.float32)
+    txt = jax.jit(fn).lower(x).compile().as_text()
+    c = analyze(txt)
+    if "all-gather" in c.collectives:
+        assert c.collectives["all-gather"]["count"] == 7
+    # trip count recognized either way
+    assert 7 in c.while_trips.values()
+
+
+def test_bytes_positive_and_scale_with_trips():
+    d = 64
+    x = jnp.ones((d, d), jnp.float32)
+    w2 = jnp.ones((2, d, d), jnp.float32)
+    w8 = jnp.ones((8, d, d), jnp.float32)
+    f = lambda x, w: lax.scan(lambda h, wl: (h @ wl, None), x, w)[0]
+    c2, c8 = _cost(f, x, w2), _cost(f, x, w8)
+    assert c8.bytes_accessed > 2.5 * c2.bytes_accessed

@@ -1,0 +1,80 @@
+"""sLSTM Pallas scan kernel vs the model's per-step cell (interpret mode)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels.slstm_scan import expand_blockdiag, slstm_scan_call
+from repro.models import xlstm
+
+RNG = np.random.default_rng(0)
+
+
+def _model_to_kernel_cols(heads: int, hd: int) -> np.ndarray:
+    """Column permutation: model head-major [h0:(z|i|f|o), h1:…] →
+    kernel gate-major [z(all h) | i | f | o]."""
+    d = heads * hd
+    perm = np.zeros(4 * d, np.int64)
+    for i in range(heads):
+        for g in range(4):
+            for u in range(hd):
+                perm[g * d + i * hd + u] = i * 4 * hd + g * hd + u
+    return perm
+
+
+@pytest.mark.parametrize("b,s,heads,hd", [(2, 12, 4, 16), (3, 9, 2, 8)])
+def test_slstm_kernel_matches_cell(b, s, heads, hd):
+    d = heads * hd
+    cfg = dataclasses.replace(configs.get_smoke_config("xlstm-125m"),
+                              d_model=d, n_heads=heads)
+    p = xlstm.slstm_init(jax.random.key(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(b, s, d)), jnp.float32)
+    xp_model = (x @ p["wx"]["w"]).astype(jnp.float32) + p["bias"][None, None]
+
+    # reference: the model's sequential cell
+    st = {k: v.astype(jnp.float32)
+          for k, v in xlstm.slstm_state_init(cfg, b).items()}
+    hs_ref = []
+    for t in range(s):
+        st = xlstm._slstm_cell(p, xp_model[:, t], st, cfg)
+        hs_ref.append(np.asarray(st["h"]).reshape(b, d))
+    hs_ref = np.stack(hs_ref, axis=1)
+
+    # kernel: permute inputs to gate-major layout
+    perm = _model_to_kernel_cols(heads, hd)
+    xp_k = xp_model[:, :, perm]
+    wr_k = expand_blockdiag(p["wr"].astype(jnp.float32))
+    # wr maps h → head-major gate cols; permute output cols to gate-major
+    state0 = dict(h=jnp.zeros((b, d), jnp.float32),
+                  c=jnp.zeros((b, d), jnp.float32),
+                  n=jnp.ones((b, d), jnp.float32),
+                  m=jnp.zeros((b, d), jnp.float32))
+    out, stN = slstm_scan_call(xp_k, wr_k, state0, heads=heads, hd=hd,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(out), hs_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(stN["h"]), hs_ref[:, -1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(stN["c"]),
+        np.asarray(st["c"]).reshape(b, d), rtol=2e-4, atol=2e-4)
+
+
+def test_expand_blockdiag_layout():
+    heads, hd = 3, 4
+    wr = jnp.asarray(RNG.normal(size=(heads, hd, 4 * hd)), jnp.float32)
+    big = expand_blockdiag(wr)
+    d = heads * hd
+    h = jnp.asarray(RNG.normal(size=(2, d)), jnp.float32)
+    # reference: per-head einsum then head-major → gate-major reorder
+    rec = jnp.einsum("bhd,hdg->bhg", h.reshape(2, heads, hd), wr)
+    got = h @ big
+    for g in range(4):
+        for i in range(heads):
+            np.testing.assert_allclose(
+                np.asarray(got[:, g * d + i * hd:(g + 1 - 1) * d
+                               + i * hd + hd]),
+                np.asarray(rec[:, i, g * hd:(g + 1) * hd]),
+                rtol=1e-5, atol=1e-5)

@@ -1,0 +1,37 @@
+"""Serving engine: greedy generation consistency vs direct forward."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import dataclasses
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import ServeEngine
+
+
+def test_greedy_generation_matches_forward():
+    cfg = dataclasses.replace(configs.get_smoke_config("codeqwen1.5-7b"),
+                              compute_dtype="float32", remat=False)
+    params = T.init_params(jax.random.key(0), cfg, vocab_multiple=4)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64)
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    res = eng.generate([prompt], max_new=5, temperature=0.0)[0]
+    # replay: argmax continuation via full forward each step
+    seq = prompt.tolist()
+    for t in res.tokens:
+        logits, _ = T.forward(params, cfg, jnp.asarray([seq], jnp.int32))
+        nxt = int(np.argmax(np.asarray(logits[0, -1])))
+        assert nxt == t, (seq, nxt, t)
+        seq.append(nxt)
+
+
+def test_wave_batching_multiple_prompts():
+    cfg = configs.get_smoke_config("granite-moe-1b-a400m")
+    params = T.init_params(jax.random.key(1), cfg, vocab_multiple=4)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64)
+    prompts = [np.array([1, 2], np.int32), np.array([3], np.int32),
+               np.array([4, 5, 6], np.int32)]
+    res = eng.generate(prompts, max_new=4)
+    assert len(res) == 3
+    assert all(len(r.tokens) == 4 for r in res)
+    assert all(0 <= t for r in res for t in r.tokens)

@@ -1,0 +1,91 @@
+"""Sharding-rule derivation sanity: specs must respect divisibility and
+cover the big parameter dims on the production mesh shapes (validated
+abstractly — no 512-device requirement in-process)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist.sharding import (ShardingRules, batch_specs, cache_specs,
+                                 param_specs)
+from repro.models import transformer as T
+
+
+class FakeMesh:
+    """shape/axis_names stand-in (rules only read sizes)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    cfg = configs.get_config(arch)
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16} if multi_pod
+                    else {"data": 16, "model": 16})
+    rules = ShardingRules(mesh, data_axes=("pod", "data") if multi_pod
+                          else ("data",), train=True)
+    init = T.init_params if cfg.family != "encdec" else None
+    if init is None:
+        from repro.models import encdec
+        init = encdec.init_params
+    abs_p = jax.eval_shape(
+        lambda k: init(k, cfg, vocab_multiple=16), jax.random.key(0))
+    specs = param_specs(abs_p, rules, cfg.expert_mode)
+    n_model_sharded = 0
+    for leaf, spec in zip(jax.tree.leaves(abs_p),
+                          jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        assert len(spec) <= leaf.ndim
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % total == 0, (arch, leaf.shape, spec)
+            if "model" in axes:
+                n_model_sharded += 1
+    assert n_model_sharded >= 3, f"{arch}: too few TP-sharded params"
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "zamba2-7b", "xlstm-125m",
+                                  "granite-moe-1b-a400m"])
+def test_cache_specs_divisible(arch):
+    cfg = configs.get_config(arch)
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(mesh, train=False)
+    batch = 128
+    abs_c = jax.eval_shape(lambda: T.init_cache(cfg, batch, 4096))
+    specs = cache_specs(abs_c, rules, batch)
+    for leaf, spec in zip(jax.tree.leaves(abs_c),
+                          jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % total == 0, (arch, leaf.shape, spec)
+
+
+def test_batch_not_sharded_when_indivisible():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(mesh, train=False)
+    abs_b = jax.eval_shape(
+        lambda: jax.numpy.zeros((1, 8), jax.numpy.int32))
+    spec = batch_specs(abs_b, rules)
+    assert tuple(spec) == (None, None)  # batch 1 cannot shard over 16
+
+
+def test_fsdp_only_in_train_mode():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    cfg = configs.get_config("codeqwen1.5-7b")
+    abs_p = jax.eval_shape(
+        lambda k: T.init_params(k, cfg, vocab_multiple=16), jax.random.key(0))
+    for train in (True, False):
+        rules = ShardingRules(mesh, train=train)
+        specs = param_specs(abs_p, rules, cfg.expert_mode)
+        has_data = any(
+            "data" in str(s) for s in jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P)))
+        assert has_data == train
