@@ -1,3 +1,7 @@
 """repro: MGG (fine-grained communication-computation pipelining) on TPU —
 core GNN engine + assigned LM-architecture framework."""
+from repro import compat as _compat
+
+_compat.install()
+
 __version__ = "1.0.0"

@@ -1,0 +1,103 @@
+"""Forward/backward JAX API compatibility shims.
+
+The codebase is written against the current public JAX surface
+(``jax.shard_map`` with ``check_vma``, ``lax.pvary``, ``jax.sharding.AxisType``,
+``pltpu.CompilerParams``).  Older jaxlibs (0.4.x) expose the same machinery
+under previous names (``jax.experimental.shard_map`` with ``check_rep``,
+``pltpu.TPUCompilerParams``, no axis types).  :func:`install` bridges the gap
+*only where an attribute is missing*, so on a current JAX every shim is a
+no-op and nothing is monkeypatched.
+
+Called once from ``repro/__init__.py`` — every entry point (tests, examples,
+benchmarks, launchers) imports ``repro`` first, so call sites can use the
+modern spelling unconditionally.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+from jax import lax
+
+__all__ = ["install"]
+
+
+def _install_shard_map() -> None:
+    if getattr(jax, "shard_map", None) is not None:
+        return
+    try:
+        from jax.experimental.shard_map import shard_map as _legacy
+    except ImportError:  # pragma: no cover - very old jax
+        return
+
+    @functools.wraps(_legacy)
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+                  check_vma: bool = True, **kwargs):
+        # modern kwarg -> legacy kwarg; everything else passes through
+        kwargs.setdefault("check_rep", check_vma)
+        return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_lax_names() -> None:
+    # pvary / pcast: varying-manual-axes typing markers.  With the legacy
+    # shard_map (check_rep) they have no typing effect — identity is correct.
+    if not hasattr(lax, "pvary"):
+        lax.pvary = lambda x, axes: x
+    if not hasattr(lax, "axis_size"):
+        # psum of a python literal folds to the (static) axis size
+        lax.axis_size = lambda axis_name: lax.psum(1, axis_name)
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    """Let ``jax.make_mesh(..., axis_types=...)`` work on jaxlibs whose
+    ``make_mesh`` predates the ``axis_types`` parameter (it is dropped)."""
+    orig = getattr(jax, "make_mesh", None)
+    if orig is None:
+        return
+    try:
+        params = inspect.signature(orig).parameters
+    except (TypeError, ValueError):  # pragma: no cover
+        return
+    if "axis_types" in params:
+        return
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        return orig(axis_shapes, axis_names, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_pallas_tpu_params() -> None:
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover - pallas-less build
+        return
+    if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu,
+                                                        "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_lax_names()
+    _install_axis_type()
+    _install_make_mesh()
+    _install_pallas_tpu_params()

@@ -1,0 +1,34 @@
+"""repro.dist — the distributed substrate between the Pallas kernels and
+the multi-GPU/TPU system the paper describes.
+
+Four pieces (see docs/dist.md):
+
+* :mod:`repro.dist.mesh` — ring-ordered device meshes
+  (``make_mesh``, ``flat_ring_mesh``);
+* :mod:`repro.dist.collectives` — ring-pipelined collectives that overlap
+  each chunk's transfer with the previous chunk's compute
+  (``ring_allgather_matmul``, ``matmul_reducescatter``,
+  ``pipelined_all_to_all``);
+* :mod:`repro.dist.compress` — error-feedback compressed gradient
+  allreduce (``ef_state_init``, ``ef_allreduce_mean``);
+* :mod:`repro.dist.sharding` — divisibility-respecting PartitionSpec
+  derivation for every config in ``repro.configs.ARCH_IDS``
+  (``ShardingRules``, ``param_specs``, ``batch_specs``, ``cache_specs``,
+  ``to_shardings``).
+"""
+from repro.dist import sharding
+from repro.dist.collectives import (matmul_reducescatter, pipelined_all_to_all,
+                                    ring_allgather_matmul)
+from repro.dist.compress import (ef_allreduce_mean, ef_state_init,
+                                 quantize_dequantize)
+from repro.dist.mesh import flat_ring_mesh, make_mesh, ring_order
+from repro.dist.sharding import (ShardingRules, batch_specs, cache_specs,
+                                 param_specs, to_shardings)
+
+__all__ = [
+    "make_mesh", "flat_ring_mesh", "ring_order",
+    "ring_allgather_matmul", "matmul_reducescatter", "pipelined_all_to_all",
+    "ef_state_init", "ef_allreduce_mean", "quantize_dequantize",
+    "sharding", "ShardingRules", "param_specs", "batch_specs",
+    "cache_specs", "to_shardings",
+]

@@ -1,0 +1,172 @@
+"""Ring-pipelined collectives: the paper's intra-kernel pipeline in shard_map.
+
+MGG's core observation (§3.3–3.4) is that a bulk collective serializes
+communication before computation, while chunking the transfer into ring
+steps lets every step's DMA overlap the previous step's compute.  These
+helpers express that schedule with ``lax.ppermute`` / ``lax.all_to_all``
+per chunk: each loop iteration *issues the next transfer before consuming
+the current chunk*, so the two have no data dependence and XLA's
+latency-hiding scheduler runs them concurrently — the same dataflow
+``core/pipeline.py`` uses for neighbor aggregation, here for the dense
+matmul/dispatch collectives of the LM stack.
+
+All functions are *per-shard* bodies: call them inside ``jax.shard_map``
+over a mesh from :mod:`repro.dist.mesh`.  A 1-sized axis degenerates to the
+purely local computation (no permutes), so the same model code runs on a
+single device.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "ring_allgather_matmul",
+    "matmul_reducescatter",
+    "pipelined_all_to_all",
+]
+
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def ring_allgather_matmul(lhs: jax.Array, rhs: jax.Array,
+                          axis_name: str) -> jax.Array:
+    """``concat_gather(lhs) @ rhs`` without ever materializing the gather.
+
+    ``lhs``: this shard's ``(m, k)`` row block; ``rhs``: ``(k, n)``
+    (replicated).  Returns the full ``(axis_size * m, n)`` product on every
+    shard.  Row block ``j`` is multiplied the moment it arrives over the
+    ring, while the following block is already in flight — an all-gather
+    whose transfer cost hides behind the matmuls (cf. MGG Fig. 7(b)).
+    """
+    n_dev = lax.psum(1, axis_name)
+    if n_dev == 1:
+        return lhs @ rhs
+    idx = lax.axis_index(axis_name)
+    m = lhs.shape[0]
+    perm = _ring_perm(n_dev)
+    out = jnp.zeros((n_dev * m, rhs.shape[-1]),
+                    jnp.promote_types(lhs.dtype, rhs.dtype))
+    cur = lhs
+    for step in range(n_dev):
+        # issue rotation step+1 BEFORE the matmul on `cur` — no data
+        # dependence between them, so the DMA overlaps the compute
+        nxt = lax.ppermute(cur, axis_name, perm) if step < n_dev - 1 else None
+        src = (idx - step) % n_dev  # ring rank that produced `cur`
+        out = lax.dynamic_update_slice_in_dim(
+            out, (cur @ rhs).astype(out.dtype), src * m, axis=0)
+        cur = nxt
+    return out
+
+
+def matmul_reducescatter(lhs: jax.Array, rhs: jax.Array,
+                         axis_name: str) -> jax.Array:
+    """``reduce_scatter(lhs @ rhs)`` fused into a pipelined ring.
+
+    ``lhs``: ``(m, k_local)`` — the full row range with this shard's slice
+    of the contraction dim; ``rhs``: ``(k_local, n)``.  Shard ``i`` returns
+    rows ``[i*c, (i+1)*c)`` of the summed product, ``c = ceil(m/axis_size)``
+    (rows are zero-padded up to ``axis_size * c`` when ``m`` is not
+    divisible).  Each ring step computes one partial row block while the
+    running accumulator travels to its neighbor — transfer and partial
+    matmul overlap exactly as in the paper's pipelined aggregation.
+    """
+    n_dev = lax.psum(1, axis_name)
+    if n_dev == 1:
+        return lhs @ rhs
+    idx = lax.axis_index(axis_name)
+    m = lhs.shape[0]
+    chunk = -(-m // n_dev)
+    if chunk * n_dev != m:
+        lhs = jnp.pad(lhs, ((0, chunk * n_dev - m), (0, 0)))
+    perm = _ring_perm(n_dev)
+
+    def partial_block(c):
+        rows = lax.dynamic_slice_in_dim(lhs, c * chunk, chunk, axis=0)
+        return rows @ rhs
+
+    # The accumulator for output block b starts at shard b+1, visits every
+    # shard once, and lands home after n-1 hops.  At hop `step`, shard `idx`
+    # holds the accumulator for block (idx - 1 - step) and adds its own
+    # partial for it *computed before the permute is consumed*.
+    acc = partial_block((idx + n_dev - 1) % n_dev)
+    for step in range(1, n_dev):
+        nxt_partial = partial_block((idx + n_dev - 1 - step) % n_dev)
+        acc = lax.ppermute(acc, axis_name, perm)
+        acc = acc + nxt_partial
+    return acc
+
+
+def pipelined_all_to_all(
+    x: jax.Array,
+    axis_name: str,
+    fn: Callable[[jax.Array], jax.Array],
+    *,
+    split_axis: int,
+    concat_axis: int,
+    chunk_axis: int,
+    chunks: int,
+) -> jax.Array:
+    """all_to_all → ``fn`` → inverse all_to_all, pipelined chunkwise.
+
+    The expert-parallel dispatch pattern: route tokens to their shard, apply
+    ``fn`` (the expert compute), route results back.  ``x`` is cut into
+    ``chunks`` pieces along ``chunk_axis``; while ``fn`` runs on chunk *i*,
+    chunk *i+1*'s dispatch is already on the wire — MGG's pipelining knob
+    (``dist``) applied to the MoE a2a.  Uneven chunking is fine (the last
+    piece is smaller); ``chunks`` is clamped to the chunk-axis extent.
+
+    Inherited ``lax.all_to_all`` contract: the per-shard ``split_axis``
+    extent must be divisible by the axis size (``concat_axis`` chunking
+    never changes it).
+    """
+    n_dev = lax.psum(1, axis_name)
+    size = x.shape[chunk_axis]
+    if size == 0:  # empty block: un-pipelined path (zero pieces to overlap)
+        if n_dev == 1:
+            return fn(x)
+        return lax.all_to_all(
+            fn(lax.all_to_all(x, axis_name, split_axis, concat_axis,
+                              tiled=True)),
+            axis_name, concat_axis, split_axis, tiled=True)
+    chunks = max(1, min(int(chunks), size))
+    bounds = [(i * size) // chunks for i in range(chunks + 1)]
+    pieces = [
+        lax.slice_in_dim(x, lo, hi, axis=chunk_axis)
+        for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo
+    ]
+    if n_dev > 1:
+        bad = [p.shape[split_axis] for p in pieces
+               if p.shape[split_axis] % n_dev != 0]
+        if bad:
+            raise ValueError(
+                f"pipelined_all_to_all: split_axis={split_axis} extents "
+                f"{bad} not divisible by axis {axis_name!r} size {n_dev} "
+                f"(chunk_axis={chunk_axis}, chunks={chunks} cut into the "
+                f"split dim?)")
+    if n_dev == 1:
+        outs = [fn(p) for p in pieces]
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, chunk_axis)
+
+    def dispatch(p):
+        return lax.all_to_all(p, axis_name, split_axis, concat_axis,
+                              tiled=True)
+
+    def combine(p):
+        return lax.all_to_all(p, axis_name, concat_axis, split_axis,
+                              tiled=True)
+
+    outs = []
+    in_flight = dispatch(pieces[0])
+    for i in range(len(pieces)):
+        cur = in_flight
+        if i + 1 < len(pieces):
+            # next chunk's dispatch is independent of fn(cur) → overlaps it
+            in_flight = dispatch(pieces[i + 1])
+        outs.append(combine(fn(cur)))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, chunk_axis)

@@ -1,0 +1,77 @@
+"""Device meshes with ring-ordered placement.
+
+The MGG pipeline moves embedding tiles neighbor-to-neighbor with
+``lax.ppermute`` (paper §3.3: fine-grained tiles over NVLink; here ICI).
+That only hides latency if rank ``i+1`` in the mesh is a *physical*
+neighbor of rank ``i``, so mesh construction orders devices along a ring:
+
+* TPU: snake through the torus coordinates (consecutive ranks share an ICI
+  link; the wrap-around hop is the only long edge, and on a torus it is a
+  single link too).
+* CPU/GPU fakes: device id order (the host-platform devices are
+  interchangeable).
+
+Unlike ``jax.make_mesh`` this accepts meshes *smaller* than the process
+device count — elastic restarts and the multi-size property tests build
+2/4-way meshes inside an 8-device process.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_mesh", "flat_ring_mesh", "ring_order"]
+
+
+def ring_order(devices: Sequence) -> list:
+    """Order ``devices`` so consecutive entries are physical neighbors."""
+    devs = list(devices)
+    if not devs:
+        return devs
+    coords = getattr(devs[0], "coords", None)
+    if coords is None:
+        return sorted(devs, key=lambda d: d.id)
+
+    # snake through the torus: even rows left→right, odd rows right→left,
+    # recursively per leading coordinate (plus the core-on-chip index).
+    def key(d):
+        c = tuple(d.coords) + (getattr(d, "core_on_chip", 0),)
+        snaked = []
+        flip = 0
+        for x in c:
+            snaked.append(-x if flip % 2 else x)
+            flip += x
+        return tuple(snaked)
+
+    return sorted(devs, key=key)
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str],
+              *, devices: Optional[Sequence] = None) -> Mesh:
+    """A :class:`jax.sharding.Mesh` of ``prod(shape)`` ring-ordered devices.
+
+    ``devices`` defaults to ``jax.devices()``; only the first ``prod(shape)``
+    (in ring order) are used, so sub-meshes of a larger process are fine.
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != len(tuple(axis_names)):
+        raise ValueError(f"shape {shape} vs axis_names {tuple(axis_names)}")
+    need = math.prod(shape)
+    devs = ring_order(jax.devices() if devices is None else devices)
+    if len(devs) < need:
+        raise ValueError(
+            f"mesh {dict(zip(axis_names, shape))} needs {need} devices, "
+            f"process has {len(devs)}")
+    arr = np.empty((need,), dtype=object)
+    for i, d in enumerate(devs[:need]):
+        arr[i] = d
+    return Mesh(arr.reshape(shape), tuple(axis_names))
+
+
+def flat_ring_mesh(n: int) -> Mesh:
+    """The MGG aggregation mesh: ``n`` devices on a single ``"ring"`` axis."""
+    return make_mesh((n,), ("ring",))

@@ -1,0 +1,190 @@
+"""Sharding-rule derivation: pytree → PartitionSpec pytree.
+
+One rule set covers every architecture in ``repro.configs.ARCH_IDS`` on the
+production meshes (``launch/mesh.py``): tensor parallelism over ``"model"``,
+FSDP-style parameter sharding over the data axes *in training only*, batch
+sharding for inputs, and batch + KV-head sharding for decode caches.
+
+Specs are derived from the *names* in the parameter tree (``wq``/``down``/
+``embed``/…) plus leaf shapes, with a hard divisibility guard: an axis is
+only ever assigned to a dim the mesh divides evenly, so the same rules are
+valid on a 2×2 CPU dry-run mesh and the 512-chip pod.  Stacked-layer
+leading dims (``lax.scan`` layout) are never sharded.
+
+Works on abstract inputs (``jax.eval_shape`` trees) and on stand-in meshes
+exposing only ``.shape``/``.axis_names`` — deriving 512-device specs never
+touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "param_specs", "batch_specs", "cache_specs",
+           "to_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """How logical roles map onto a mesh.
+
+    ``mesh`` only needs ``.shape`` (axis → size mapping); ``data_axes`` may
+    span several mesh axes (``("pod", "data")`` on multi-pod meshes) and is
+    always applied as the combined product.  ``train=True`` enables FSDP
+    parameter sharding over the data axes; serving replicates parameters
+    across them.
+    """
+
+    mesh: Any
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    train: bool = True
+
+    @property
+    def data_size(self) -> int:
+        return math.prod(
+            int(self.mesh.shape.get(a, 1)) for a in self.data_axes)
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape.get(self.model_axis, 1))
+
+    def data_entry(self):
+        return self.data_axes[0] if len(self.data_axes) == 1 \
+            else tuple(self.data_axes)
+
+
+# --- name classification ----------------------------------------------------
+
+# fan-out (column-parallel): shard the LAST dim on the model axis
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "up", "gate", "in_proj", "wx", "wif", "wr",
+    "vis_proj", "conv_w", "lm_head",
+})
+# fan-in (row-parallel): shard dim −2 on the model axis (the contraction
+# dim of the preceding column-parallel matmul — output needs one reduce)
+_ROW_PARALLEL = frozenset({"down", "wo", "out_proj", "out"})
+# MoE expert tables (leading expert dim after the layer stack)
+_EXPERT_TABLES = frozenset({"w_up", "w_gate", "w_down"})
+_ROUTERS = frozenset({"w_router", "router"})
+
+
+def _path_names(path) -> list:
+    names = []
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if key is None:
+            key = getattr(entry, "name", None)
+        if isinstance(key, str):
+            names.append(key)
+    return names
+
+
+def _leaf_name(names: list) -> str:
+    # weights live as {"w": array} under their role name; biases/norm
+    # scales keep their own name
+    for n in reversed(names):
+        if n not in ("w", "b"):
+            return n
+    return names[-1] if names else ""
+
+
+def _spec_from_entries(entries: list) -> P:
+    return P(*entries)
+
+
+def _param_rule(path, leaf, rules: ShardingRules, expert_mode: str) -> P:
+    shape = tuple(leaf.shape)
+    ndim = len(shape)
+    if ndim < 2:
+        return P()
+    names = _path_names(path)
+    name = _leaf_name(names)
+    model, msize = rules.model_axis, rules.model_size
+    entries: list = [None] * ndim
+
+    # --- tensor-parallel dim ------------------------------------------------
+    tp: Optional[int] = None
+    if "embed" in names:
+        tp = ndim - 2            # (vocab_padded, d_model): vocab-parallel
+    elif name in _EXPERT_TABLES:
+        if expert_mode == "ep" and ndim >= 3 and shape[ndim - 3] % msize == 0:
+            tp = ndim - 3        # expert-parallel: shard the expert dim
+        else:                    # tp fallback: shard d_ff inside each expert
+            tp = ndim - 1 if name != "w_down" else ndim - 2
+    elif name in _ROUTERS:
+        tp = ndim - 1
+    elif name in _ROW_PARALLEL:
+        tp = ndim - 2
+    elif name in _COL_PARALLEL:
+        tp = ndim - 1
+    if tp is not None and (msize <= 1 or shape[tp] % msize != 0):
+        tp = None
+    if tp is not None:
+        entries[tp] = model
+
+    # --- FSDP dim (train only) ---------------------------------------------
+    dsize = rules.data_size
+    if rules.train and dsize > 1:
+        cands = [d for d in (ndim - 2, ndim - 1) if d != tp]
+        cands.sort(key=lambda d: -shape[d])
+        for d in cands:
+            if shape[d] % dsize == 0:
+                entries[d] = rules.data_entry()
+                break
+    return _spec_from_entries(entries)
+
+
+def param_specs(params: Any, rules: ShardingRules,
+                expert_mode: str = "ep") -> Any:
+    """PartitionSpecs for a parameter tree (``transformer``/``encdec``
+    layout).  ``expert_mode``: ``cfg.expert_mode`` — ``"ep"`` shards the
+    expert dim of MoE tables, ``"tp"`` shards ``d_ff`` inside each expert.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_rule(path, leaf, rules, expert_mode),
+        params)
+
+
+def batch_specs(batch: Any, rules: ShardingRules) -> Any:
+    """Inputs: dim 0 (global batch) over the data axes when divisible."""
+    dsize = rules.data_size
+
+    def rule(leaf) -> P:
+        shape = tuple(leaf.shape)
+        entries: list = [None] * len(shape)
+        if shape and dsize > 1 and shape[0] % dsize == 0:
+            entries[0] = rules.data_entry()
+        return _spec_from_entries(entries)
+
+    return jax.tree.map(rule, batch)
+
+
+def cache_specs(cache: Any, rules: ShardingRules, batch: int) -> Any:
+    """Decode caches: ``(layers, batch, ...)`` leaves — batch over the data
+    axes, KV heads (dim −2 of 4D+ leaves) over the model axis, both guarded
+    by divisibility.  The layer-stack dim stays replicated (it is scanned)."""
+    dsize, msize = rules.data_size, rules.model_size
+
+    def rule(leaf) -> P:
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        entries: list = [None] * ndim
+        if ndim >= 2 and dsize > 1 and shape[1] == batch and batch % dsize == 0:
+            entries[1] = rules.data_entry()
+        if ndim >= 4 and msize > 1 and shape[ndim - 2] % msize == 0:
+            entries[ndim - 2] = rules.model_axis
+        return _spec_from_entries(entries)
+
+    return jax.tree.map(rule, cache)
+
+
+def to_shardings(specs: Any, mesh) -> Any:
+    """PartitionSpec pytree → NamedSharding pytree on a *concrete* mesh."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -56,6 +56,18 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as a flat dict.
+
+    Older jaxlibs return a one-element list of per-module dicts; current
+    ones return the dict directly.  Normalize so callers can ``.get``.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def parse_collectives(hlo_text: str) -> Dict[str, Any]:
     """Per-device collective traffic from the partitioned HLO.
 
@@ -125,7 +137,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     except Exception as e:
         mem_info = dict(error=str(e))
     try:
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         cost_info = {k: float(v) for k, v in cost.items()
                      if isinstance(v, (int, float)) and (
                          "flops" in k or "bytes accessed" in k

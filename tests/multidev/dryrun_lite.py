@@ -6,7 +6,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import numpy as np, jax
 from repro.dist import make_mesh
 from repro.launch.cells import build_cell
-from repro.launch.dryrun import parse_collectives
+from repro.launch.dryrun import cost_analysis_dict, parse_collectives
 
 mesh = make_mesh((2, 2), ("data", "model"))
 for arch, shape in [("granite-moe-1b-a400m", "train_4k"),
@@ -17,7 +17,7 @@ for arch, shape in [("granite-moe-1b-a400m", "train_4k"),
         lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                           donate_argnums=cell.donate_argnums).lower(*cell.args)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     assert float(cost.get("flops", 0)) > 0, (arch, shape)
     print(arch, shape, "flops=%.3e" % float(cost["flops"]),

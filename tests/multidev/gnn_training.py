@@ -19,7 +19,9 @@ mp = jnp.asarray(pad1(train_mask.astype(np.float32)))
 init, apply, kw = C.MODEL_ZOO["gcn"]
 params = init(jax.random.key(0), D, ncls, **kw)
 opt = adamw_init(params)
-ocfg = AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=40, weight_decay=0.0)
+# lr tuned for the 25-step budget: aggregation over random-label neighbors
+# dilutes the class signal, so 5e-3 plateaus just under the asserted drop
+ocfg = AdamWConfig(lr=2e-2, warmup_steps=2, total_steps=40, weight_decay=0.0)
 
 @jax.jit
 def step(params, opt):

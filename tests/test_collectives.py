@@ -1,0 +1,125 @@
+"""repro.dist collectives — single-device unit/property tests.
+
+The degenerate 1-device ring must reduce every pipelined collective to its
+purely local computation (that is what lets the same model code run on one
+chip).  Multi-device behaviour (2/4/8 rings, chunk sweeps, non-divisible
+shapes) runs as a subprocess sweep: tests/multidev/collectives_property.py,
+invoked from tests/test_system.py — the pytest process deliberately keeps
+one CPU device (see conftest.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import (ef_allreduce_mean, ef_state_init, flat_ring_mesh,
+                        matmul_reducescatter, pipelined_all_to_all,
+                        quantize_dequantize, ring_allgather_matmul)
+
+from repro.testing.hypo import given, settings, strategies as st
+
+MESH1 = flat_ring_mesh(1)
+
+
+def _smap(body, in_specs, out_specs=P("ring")):
+    return jax.shard_map(body, mesh=MESH1, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+@given(st.integers(1, 48), st.integers(1, 33), st.integers(1, 17),
+       st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_allgather_matmul_degenerate_ring(m, k, p, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    fn = _smap(lambda x, w: ring_allgather_matmul(x, w, "ring"),
+               (P("ring"), P()))
+    np.testing.assert_allclose(np.asarray(fn(a, b)), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 48), st.integers(1, 33), st.integers(1, 17),
+       st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_reducescatter_degenerate_ring(m, k, p, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    fn = _smap(lambda x, w: matmul_reducescatter(x, w, "ring"),
+               (P(None, "ring"), P("ring", None)))
+    np.testing.assert_allclose(np.asarray(fn(a, b)), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 24), st.integers(1, 19), st.integers(1, 10),
+       st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_all_to_all_degenerate_ring(rows, width, chunks, seed):
+    """chunks > width and chunks ∤ width both reduce to chunked fn."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(rows, width)), jnp.float32)
+    fn = _smap(lambda x: pipelined_all_to_all(
+        x, "ring", lambda c: c * c, split_axis=0, concat_axis=1,
+        chunk_axis=1, chunks=chunks), (P("ring"),))
+    np.testing.assert_allclose(np.asarray(fn(z)), np.asarray(z) ** 2,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_all_to_all_empty_chunk_axis():
+    """Zero-extent chunk axis: no pieces to pipeline, fn still applies."""
+    z = jnp.zeros((4, 0))
+    fn = _smap(lambda x: pipelined_all_to_all(
+        x, "ring", lambda c: c + 1.0, split_axis=0, concat_axis=1,
+        chunk_axis=1, chunks=3), (P("ring"),))
+    assert fn(z).shape == (4, 0)
+
+
+def test_all_to_all_chunk_boundaries_cover_axis():
+    """Uneven chunking must partition the axis exactly (no drop/overlap)."""
+    z = jnp.arange(21.0).reshape(1, 21)
+    fn = _smap(lambda x: pipelined_all_to_all(
+        x, "ring", lambda c: c + 1.0, split_axis=0, concat_axis=1,
+        chunk_axis=1, chunks=4), (P("ring"),))
+    np.testing.assert_array_equal(np.asarray(fn(z)), np.asarray(z) + 1.0)
+
+
+@given(st.integers(1, 30), st.integers(1, 12), st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_quantize_bounded_error(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    q = quantize_dequantize(v)
+    step = float(jnp.max(jnp.abs(v))) / 127.0
+    assert float(jnp.abs(v - q).max()) <= 0.5 * step + 1e-7
+
+
+def test_ef_allreduce_mean_single_device():
+    """On a 1-axis the 'allreduce' is the identity on the compressed value,
+    and the residual carries exactly the quantization error."""
+    rng = np.random.default_rng(3)
+    g = {"a": jnp.asarray(rng.normal(size=(8, 5)), jnp.float32)}
+    err = ef_state_init(g)
+    assert float(jnp.abs(err["a"]).max()) == 0.0
+    mean, err = ef_allreduce_mean(g, err, MESH1, ("ring",), {"a": P()})
+    np.testing.assert_allclose(np.asarray(mean["a"] + err["a"]),
+                               np.asarray(g["a"]), rtol=1e-6, atol=1e-7)
+
+
+def test_ef_error_decays_under_feedback():
+    rng = np.random.default_rng(7)
+    g = {"a": jnp.asarray(rng.normal(size=(16, 6)), jnp.float32)}
+    err = ef_state_init(g)
+    acc = np.zeros((16, 6), np.float32)
+    for _ in range(8):
+        mean, err = ef_allreduce_mean(g, err, MESH1, ("ring",), {"a": P()})
+        acc += np.asarray(mean["a"])
+    rel = np.abs(acc / 8 - np.asarray(g["a"])).max() / \
+        np.abs(np.asarray(g["a"])).max()
+    assert rel < 0.02, rel
+
+
+def test_make_mesh_rejects_oversubscription():
+    with pytest.raises(ValueError, match="devices"):
+        flat_ring_mesh(len(jax.devices()) + 1)

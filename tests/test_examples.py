@@ -1,0 +1,17 @@
+"""Examples smoke: the public entry point must keep running end-to-end.
+
+quickstart.py is the README's first command — it forces its own 8-device
+CPU ring (XLA flag set before the jax import), so it runs through the
+same subprocess harness as the multidev scripts.
+"""
+import os
+
+from test_system import _run  # tests/ is on sys.path under pytest
+
+EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+
+def test_quickstart_runs_clean():
+    out = _run("quickstart.py", directory=EXAMPLES)
+    assert "max |err| vs dense oracle" in out
+    assert "autotuned knobs" in out

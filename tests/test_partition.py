@@ -3,7 +3,7 @@
 and the PGAS placement roundtrip."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, strategies as st
 
 from repro.core import (
     CSRGraph, build_plan, edge_balanced_node_split, erdos_renyi,

@@ -1,10 +1,6 @@
 """MGG pipelined aggregation vs. the dense oracle — single-device unit tests
 here; the 8-device shard_map equivalence runs as a subprocess test (the
 pytest process must keep seeing exactly one CPU device)."""
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -90,20 +86,5 @@ def test_gradients_flow_through_ring(small):
     assert float(jnp.abs(grad).sum()) > 0
 
 
-MULTIDEV = os.path.join(os.path.dirname(__file__), "multidev")
-
-
-@pytest.mark.parametrize("script", [
-    "mgg_equivalence.py", "gnn_training.py", "collectives.py",
-    "elastic_restore.py",
-])
-def test_multidevice_subprocess(script):
-    """8 fake CPU devices in a fresh process (XLA flag set pre-import)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(
-        os.path.dirname(__file__), "..", "src")
-    r = subprocess.run(
-        [sys.executable, os.path.join(MULTIDEV, script)],
-        capture_output=True, text=True, env=env, timeout=900)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    assert "PASSED" in r.stdout
+# The 8-device subprocess scripts (tests/multidev/) run through
+# tests/test_system.py::test_multidevice_subprocess — one harness, one place.
