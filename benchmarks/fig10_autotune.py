@@ -2,9 +2,24 @@
 (ps, dist, pb) in ~10 measured trials, vs an exhaustive grid.
 
 Setting I analogue: reddit-GCN on the 8-device ring with *measured*
-latencies as the objective.  Reported: trials used, latency of the found
-config, best-in-grid latency, and the improvement over the (1,1,1) start
-(paper: up to 68%).
+latencies as the objective.  Three searches are compared on the same
+measured surface:
+
+* ``fig10_reddit_setting1`` — the offline coordinate-descent helper
+  (core.autotune.cross_iteration_optimize) driven by measurements;
+* ``fig10_online_measured`` — the §4 *runtime* path: the incremental
+  OnlineTuner fed one measurement at a time through
+  repro.runtime.AggregateProfiler, exactly as a training loop would feed
+  it (plus its stop-at-top-3 refinement);
+* ``fig10_model_only_pick`` — the zero-measurement analytical-model
+  search, evaluated on the measured surface (what you get for free).
+
+Reported: trials used, found-config latency, best-in-grid latency, and the
+improvement over the (1,1,1) start (paper: up to 68%).
+
+``--smoke`` (used by ``benchmarks/run.py --smoke`` in CI) swaps in a tiny
+synthetic graph and small search spaces so the whole module exercises in
+seconds.
 """
 from __future__ import annotations
 
@@ -20,37 +35,43 @@ import numpy as np  # noqa: E402
 
 import repro.core as C  # noqa: E402
 from repro.dist import flat_ring_mesh  # noqa: E402
+from repro.runtime import AggregateProfiler, OnlineTuner, ProfileConfig  # noqa: E402
 
 PS_SPACE = (1, 2, 4, 8, 16, 32)
 DIST_SPACE = (1, 2, 4)
 PB_SPACE = (1, 2, 4)
 
+SMOKE_PS = (1, 2, 4)
+SMOKE_DIST = (1, 2)
+SMOKE_PB = (1, 2)
 
-def run(as_json: bool) -> list:
+
+def run(as_json: bool, smoke: bool = False) -> list:
     n_dev = len(jax.devices())
     mesh = flat_ring_mesh(n_dev)
-    g, meta = C.paper_dataset("reddit", scale=0.2)
-    d = 64
-    x = np.random.default_rng(0).normal(
-        size=(g.num_nodes, d)).astype(np.float32)
-    cache = {}
+    if smoke:
+        g = C.power_law(512, avg_degree=8.0, locality=0.4, seed=0)
+        d = 16
+        ps_space, dist_space, pb_space = SMOKE_PS, SMOKE_DIST, SMOKE_PB
+        prof_cfg = ProfileConfig(warmup=1, iters=2)
+    else:
+        g, meta = C.paper_dataset("reddit", scale=0.2)
+        d = 64
+        ps_space, dist_space, pb_space = PS_SPACE, DIST_SPACE, PB_SPACE
+        prof_cfg = ProfileConfig(warmup=1, iters=3)
 
-    def measure(ps, dist, pb):
-        key = (ps, dist, pb)
-        if key not in cache:
-            plan = C.build_plan(g, n_dev, ps=ps, dist=dist)
-            xb = jnp.asarray(C.pad_embeddings(plan, x))
-            fn = jax.jit(lambda z: C.mgg_aggregate(z, plan, mesh))
-            cache[key] = timeit(fn, xb, warmup=1, iters=3)
-        return cache[key]
+    # one shared measurement table so all three searches see the same
+    # surface (AggregateProfiler memoizes per config)
+    profiler = AggregateProfiler(g, mesh, d, profile=prof_cfg, mode="measure")
+    measure = profiler
 
     res = C.cross_iteration_optimize(
-        measure, ps_space=PS_SPACE, dist_space=DIST_SPACE,
-        pb_space=PB_SPACE)
+        measure, ps_space=ps_space, dist_space=dist_space,
+        pb_space=pb_space)
     t_init = measure(1, 1, 1)
     # exhaustive grid over (ps, dist) at pb of the found config
     grid = {(ps, dist): measure(ps, dist, res.best["pb"])
-            for ps in PS_SPACE for dist in DIST_SPACE}
+            for ps in ps_space for dist in dist_space}
     t_grid_best = min(grid.values())
     rows = [dict(
         name="fig10_reddit_setting1",
@@ -60,11 +81,26 @@ def run(as_json: bool) -> list:
                  f"improvement={(1 - res.best_latency / t_init) * 100:.0f}%;"
                  f"grid_best_us={t_grid_best*1e6:.1f};"
                  f"gap_to_grid={res.best_latency / t_grid_best:.2f}"))]
+
+    # --- the online runtime path: same search, fed incrementally ----------
+    tuner = OnlineTuner(ps_space, dist_space, pb_space)
+    while not tuner.converged:
+        cfg = tuner.propose()
+        tuner.observe(measure(cfg["ps"], cfg["dist"], cfg["pb"]))
+    traj = ";".join(f"{lat*1e6:.0f}" for _c, lat in tuner.trajectory)
+    rows.append(dict(
+        name="fig10_online_measured",
+        us_per_call=round(tuner.best_latency * 1e6, 1),
+        derived=(f"trials={tuner.measured};best={tuner.best};"
+                 f"improvement={(1 - tuner.best_latency / t_init) * 100:.0f}%;"
+                 f"gap_to_grid={tuner.best_latency / t_grid_best:.2f};"
+                 f"traj_us={traj}")))
+
     # the analytical-model-only search (zero measurements) for comparison
-    w = C.WorkloadShape.from_graph(g, n_dev, d)
+    w = profiler.workload_shape()
     res_m = C.cross_iteration_optimize(
         lambda ps, dist, pb: C.estimate_latency(w, ps, dist, pb),
-        ps_space=PS_SPACE, dist_space=DIST_SPACE, pb_space=PB_SPACE)
+        ps_space=ps_space, dist_space=dist_space, pb_space=pb_space)
     t_model_pick = measure(res_m.best["ps"], res_m.best["dist"],
                            res_m.best["pb"])
     rows.append(dict(
@@ -76,4 +112,5 @@ def run(as_json: bool) -> list:
 
 
 if __name__ == "__main__":
-    emit(run("--json" in sys.argv), "--json" in sys.argv)
+    emit(run("--json" in sys.argv, smoke="--smoke" in sys.argv),
+         "--json" in sys.argv)

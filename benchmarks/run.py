@@ -4,7 +4,12 @@ the roofline report.  Prints ``name,us_per_call,derived`` CSV.
 The main process sees ONE CPU device; modules needing a multi-device ring
 run as subprocesses with 8 forced host devices (benchmarks/_common.py).
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke] [--only fig8,...]
+
+``--smoke`` is the CI mode: a tiny-graph fig10 run (exercising the
+measured-search path, the online runtime tuner, and the benchmark
+subprocess harness) so benchmark code cannot rot silently.  It fails the
+process on any error, like the full run.
 """
 from __future__ import annotations
 
@@ -25,11 +30,13 @@ MULTI_DEVICE_MODULES = [
 ]
 LOCAL_MODULES = ["gather_fraction", "roofline"]
 QUICK_SKIP = {"fig10_autotune", "table5_sampling"}
+SMOKE_MODULES = ["fig10_autotune"]  # tiny graphs, --smoke arg, 2 devices
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--only", default="")
     ap.add_argument("--devices", type=int, default=8)
     args = ap.parse_args()
@@ -37,6 +44,24 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = []
+    if args.smoke:
+        for mod in SMOKE_MODULES:
+            if only and mod not in only:
+                continue
+            try:
+                for row in run_subprocess(mod, devices=2, args=["--smoke"],
+                                          timeout=600):
+                    print(f"{row['name']},{row.get('us_per_call', '')},"
+                          f"\"{row.get('derived', '')}\"")
+                sys.stdout.flush()
+            except Exception as e:
+                failures.append((mod, e))
+                print(f"{mod},ERROR,\"{e}\"", file=sys.stderr)
+        if failures:
+            print(f"# {len(failures)} smoke module(s) failed",
+                  file=sys.stderr)
+            sys.exit(1)
+        return
     for mod in MULTI_DEVICE_MODULES:
         if only and mod not in only:
             continue

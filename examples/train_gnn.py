@@ -1,13 +1,24 @@
 """End-to-end full-graph GCN training on the MGG engine (paper §5 setting:
-2-layer GCN, 16 hidden) over an 8-way ring, with checkpoint/restart.
+2-layer GCN, 16 hidden) over an 8-way ring, with checkpoint/restart and the
+paper's §4 intelligent runtime:
 
     PYTHONPATH=src python examples/train_gnn.py [--steps 100] [--model gin]
+        [--dynamic-tune] [--tune-cache /tmp/mgg_tuned.json]
+
+``--dynamic-tune`` wraps the engine in repro.runtime.DynamicGNNEngine:
+every training iteration's wall time feeds the online ps → dist → wpb
+search, and whenever the tuner moves, the aggregation plan is rebuilt and
+the step re-jitted — model parameters never change, so the loss curve is
+the same one the static engine would produce config-for-config.
+``--tune-cache`` persists the converged config keyed by workload shape +
+hardware, so the next run warm-starts from it.
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 import tempfile
+import time
 
 import numpy as np
 import jax
@@ -15,6 +26,7 @@ import jax.numpy as jnp
 
 import repro.core as C
 from repro.dist import flat_ring_mesh
+from repro.runtime import DynamicGNNEngine, ProfileConfig
 from repro.train.data import graph_features
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 from repro.train import checkpoint as ck
@@ -26,6 +38,10 @@ def main():
     ap.add_argument("--model", default="gcn", choices=["gcn", "gin", "sage"])
     ap.add_argument("--dataset", default="products")
     ap.add_argument("--workdir", default="")
+    ap.add_argument("--dynamic-tune", action="store_true",
+                    help="online cross-iteration (ps, dist, pb) tuning")
+    ap.add_argument("--tune-cache", default="",
+                    help="JSON path persisting tuned configs across runs")
     args = ap.parse_args()
 
     g, meta = C.paper_dataset(args.dataset, scale=0.5)
@@ -36,12 +52,17 @@ def main():
     x, y, train_mask = graph_features(g.num_nodes, dim, ncls, seed=0)
 
     mesh = flat_ring_mesh(len(jax.devices()))
-    eng = C.GNNEngine.build(g, mesh, ps=16, dist=2)
-    xp = eng.shard(eng.pad(x))
-    pad1 = lambda a: C.pad_table(eng.plan.bounds, eng.plan.rows_per_dev,
-                                 a[:, None])[:, 0]
-    yp = jnp.asarray(pad1(y.astype(np.int32)))
-    mp = jnp.asarray(pad1(train_mask.astype(np.float32)))
+    if args.dynamic_tune:
+        eng = DynamicGNNEngine.build(
+            g, mesh, d_feat=dim,
+            ps_space=(1, 2, 4, 8, 16, 32), dist_space=(1, 2, 4),
+            pb_space=(1, 2, 4),
+            window=ProfileConfig(warmup=1, iters=2),
+            cache_path=args.tune_cache or None,
+            log_fn=print,
+        )
+    else:
+        eng = C.GNNEngine.build(g, mesh, ps=16, dist=2)
 
     init, apply, kw = C.MODEL_ZOO[args.model]
     params = init(jax.random.key(0), dim, ncls, **kw)
@@ -49,16 +70,34 @@ def main():
     ocfg = AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=args.steps,
                        weight_decay=0.0)
 
-    @jax.jit
-    def step(params, opt):
-        loss, grads = jax.value_and_grad(lambda p: C.masked_cross_entropy(
-            apply(p, eng, xp), yp, mp))(params)
-        params, opt, m = adamw_update(grads, opt, params, ocfg)
-        return params, opt, loss
+    def prepare():
+        """Pad node tables for the CURRENT plan (layout changes with dist)."""
+        pad1 = lambda a: C.pad_table(eng.plan.bounds, eng.plan.rows_per_dev,
+                                     a[:, None])[:, 0]
+        xp = eng.shard(eng.pad(x))
+        yp = jnp.asarray(pad1(y.astype(np.int32)))
+        mp = jnp.asarray(pad1(train_mask.astype(np.float32)))
 
+        @jax.jit
+        def step(params, opt):
+            loss, grads = jax.value_and_grad(lambda p: C.masked_cross_entropy(
+                apply(p, eng, xp), yp, mp))(params)
+            params, opt, m = adamw_update(grads, opt, params, ocfg)
+            return params, opt, loss
+
+        return xp, step
+
+    xp, step = prepare()
     workdir = args.workdir or tempfile.mkdtemp(prefix="gnn_ckpt_")
     for i in range(args.steps):
+        t0 = time.perf_counter()
         params, opt, loss = step(params, opt)
+        jax.block_until_ready(loss)
+        dt = time.perf_counter() - t0
+        if args.dynamic_tune and eng.observe_step(dt):
+            # tuner moved: the plan (and possibly the padded layout)
+            # changed — re-pad and re-jit; params are untouched
+            xp, step = prepare()
         if i % 10 == 0:
             print(f"step {i:4d} loss {float(loss):.4f}")
         if (i + 1) % 50 == 0:
@@ -69,6 +108,10 @@ def main():
     print(f"final loss {float(loss):.4f}; "
           f"test acc {(pred[test] == y[test]).mean():.3f}; "
           f"checkpoints in {workdir}")
+    if args.dynamic_tune:
+        print(f"tuned config: {eng.config} after "
+              f"{eng.tuner.measured} measurements "
+              f"({len(eng.history) - 1} swaps)")
 
 
 if __name__ == "__main__":

@@ -49,6 +49,7 @@ class GNNEngine:
     axis_name: str = "ring"
     interleave: bool = True
     use_kernel: bool = False
+    pb: Optional[int] = None  # paper wpb: kernel partition-block height
     deg: Optional[jax.Array] = None  # padded (N_pad,) float32, degree of A+I
 
     @staticmethod
@@ -59,6 +60,7 @@ class GNNEngine:
         axis_name: str = "ring",
         ps: int = 16,
         dist: int = 1,
+        pb: Optional[int] = None,
         interleave: bool = True,
         use_kernel: bool = False,
         self_loops: bool = True,
@@ -71,7 +73,7 @@ class GNNEngine:
                         g.degrees.astype(np.float32)[:, None])[:, 0]
         return GNNEngine(
             plan=plan, mesh=mesh, axis_name=axis_name,
-            interleave=interleave, use_kernel=use_kernel,
+            interleave=interleave, use_kernel=use_kernel, pb=pb,
             deg=jnp.asarray(np.maximum(deg, 1.0)),
         )
 
@@ -88,7 +90,14 @@ class GNNEngine:
             axis_name=self.axis_name,
             interleave=self.interleave,
             use_kernel=self.use_kernel,
+            pb=self.pb,
         )
+
+    @property
+    def config(self) -> Dict[str, int]:
+        """The live (ps, dist, pb) knob set — the tuner's search point."""
+        return dict(ps=self.plan.ps, dist=self.plan.dist,
+                    pb=self.pb if self.pb is not None else 1)
 
     def gcn_norm_aggregate(self, x: jax.Array) -> jax.Array:
         """Â x with Â = D^{-1/2}(A+I)D^{-1/2} (self-loops already in plan)."""

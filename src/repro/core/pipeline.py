@@ -54,17 +54,20 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 def _gather_sum(buf: jax.Array, nbrs: jax.Array, mask: jax.Array,
-                use_kernel: bool, acc_dtype) -> jax.Array:
+                use_kernel: bool, acc_dtype,
+                pb: Optional[int] = None) -> jax.Array:
     """``out[p] = sum_j mask[p, j] * buf[nbrs[p, j]]`` → (P, D).
 
     The paper's warp-level gather+reduce.  ``use_kernel`` routes to the
     Pallas TPU kernel (kernels/neighbor_agg.py); the jnp path is the oracle
-    and the CPU execution path.
+    and the CPU execution path.  ``pb`` (the paper's wpb knob) selects the
+    partition-blocked kernel variant; the jnp path ignores it.
     """
     if use_kernel:
         from repro.kernels import ops as kops
 
-        return kops.neighbor_gather_sum(buf, nbrs, mask, acc_dtype=acc_dtype)
+        return kops.neighbor_gather_sum(buf, nbrs, mask, acc_dtype=acc_dtype,
+                                        pb=pb)
     g = jnp.take(buf, nbrs, axis=0)  # (P, ps, D)
     return jnp.sum(
         g.astype(acc_dtype) * mask[..., None].astype(acc_dtype), axis=1
@@ -102,12 +105,14 @@ def mgg_aggregate(
     interleave: bool = True,
     use_kernel: bool = False,
     acc_dtype=jnp.float32,
+    pb: Optional[int] = None,
 ) -> jax.Array:
     """Pipelined sum-aggregation: ``out[v] = Σ_{u ∈ N(v)} x[u]``.
 
     ``x`` is the padded PGAS embedding table ``(n_dev · rows_per_dev, D)``
     sharded by rows over ``axis_name`` (see placement.pad_embeddings); the
-    output has the same layout/sharding.
+    output has the same layout/sharding.  ``pb`` is the paper's wpb knob:
+    the partition-block height of the kernel variant (kernel path only).
     """
     n_dev, dist, tile_rows = plan.n_dev, plan.dist, plan.tile_rows
     arrays = jax.tree.map(jnp.asarray, plan_device_arrays(plan))
@@ -121,6 +126,7 @@ def mgg_aggregate(
         interleave=interleave,
         use_kernel=use_kernel,
         acc_dtype=acc_dtype,
+        pb=pb,
     )
     fn = jax.shard_map(
         body,
@@ -136,7 +142,7 @@ def mgg_aggregate(
 
 def _mgg_shard_body(
     x, arrays, *, axis_name, n_dev, dist, tile_rows, interleave, use_kernel,
-    acc_dtype,
+    acc_dtype, pb=None,
 ):
     # Per-device blocks: squeeze the device-major axis.
     l_nbrs = arrays["local_nbrs"][0]        # (PL, ps)
@@ -168,7 +174,7 @@ def _mgg_shard_body(
         # Paper Fig. 9(b) baseline: all local partitions up front, then the
         # (non-overlapped-with-local) remote rounds.
         out = out.at[l_tgt].add(
-            _gather_sum(x, l_nbrs, l_mask, use_kernel, acc_dtype)
+            _gather_sum(x, l_nbrs, l_mask, use_kernel, acc_dtype, pb)
         )
 
     if n_dev == 1:
@@ -182,12 +188,14 @@ def _mgg_shard_body(
         nbrs = lax.dynamic_index_in_dim(r_nbrs, idx, 0, keepdims=False)
         mask = lax.dynamic_index_in_dim(r_mask, idx, 0, keepdims=False)
         tgt = lax.dynamic_index_in_dim(r_tgt, idx, 0, keepdims=False)
-        out = out.at[tgt].add(_gather_sum(cur, nbrs, mask, use_kernel, acc_dtype))
+        out = out.at[tgt].add(
+            _gather_sum(cur, nbrs, mask, use_kernel, acc_dtype, pb))
         if interleave:
             ln = lax.dynamic_index_in_dim(l_nbrs_s, idx, 0, keepdims=False)
             lm = lax.dynamic_index_in_dim(l_mask_s, idx, 0, keepdims=False)
             lt = lax.dynamic_index_in_dim(l_tgt_s, idx, 0, keepdims=False)
-            out = out.at[lt].add(_gather_sum(x, ln, lm, use_kernel, acc_dtype))
+            out = out.at[lt].add(
+                _gather_sum(x, ln, lm, use_kernel, acc_dtype, pb))
         return out
 
     # One double-buffered ring per tile chunk (chunk-major, so every chunk

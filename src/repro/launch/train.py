@@ -42,6 +42,12 @@ def main() -> None:
     ap.add_argument("--workdir", default="")
     ap.add_argument("--moe-pipeline-chunks", type=int, default=1)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ef-bits", type=int, default=0,
+                    help="int-N error-feedback gradient compression on the "
+                         "wire (pure-DP meshes; 0 = off)")
+    ap.add_argument("--ring-tp", action="store_true",
+                    help="route TP matmuls through the ring-pipelined "
+                         "collectives instead of XLA SPMD defaults")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -51,16 +57,25 @@ def main() -> None:
     mesh = make_mesh((n_dev, 1), ("data", "model")) if n_dev > 1 else None
     ctx = (T.DistCtx(mesh=mesh,
                      moe_pipeline_chunks=args.moe_pipeline_chunks,
-                     seq_shard_acts=cfg.family not in ("xlstm", "hybrid"))
+                     seq_shard_acts=cfg.family not in ("xlstm", "hybrid"),
+                     use_ring_tp=args.ring_tp)
            if mesh else T.DistCtx())
+    if args.ef_bits and mesh is None:
+        print("[launch] --ef-bits ignored: single-device run has no "
+              "gradient allreduce")
+        args.ef_bits = 0
     print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
           f"devices={n_dev} seq={args.seq} batch={args.batch}")
     params = T.init_params(jax.random.key(0), cfg, vocab_multiple=16)
     opt = adamw_init(params)
+    if args.ef_bits:
+        from repro.dist import ef_state_init
+        opt = (opt, ef_state_init(params))
     step_fn = jax.jit(make_train_step(
         cfg, ctx, AdamWConfig(lr=args.lr, warmup_steps=20,
                               total_steps=args.steps),
-        accum_steps=args.accum), donate_argnums=(0, 1))
+        accum_steps=args.accum, ef_bits=args.ef_bits),
+        donate_argnums=(0, 1))
     dcfg = LMDataConfig(vocab=cfg.vocab, seq_len=args.seq,
                         global_batch=args.batch, doc_len=args.seq)
 

@@ -24,15 +24,117 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import PartitionSpec as P
 
 __all__ = [
     "rms_norm", "layer_norm", "rope_frequencies", "apply_rope",
     "attention_init", "attention_apply", "mlp_init", "mlp_apply",
     "embed_init", "embed_lookup", "unembed_logits", "dense_init",
     "KVCache", "kv_cache_init", "padded_vocab",
+    "ring_tp_colwise", "ring_tp_rowwise",
 ]
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# ring-pipelined tensor-parallel matmuls (DistCtx.use_ring_tp)
+#
+# With Megatron-style sequence parallelism the residual stream is sharded on
+# the sequence dim over the model axis; a column-parallel matmul needs the
+# *full* sequence gathered first, and its row-parallel partner needs a
+# reduce(-scatter) after.  XLA's SPMD partitioner inserts a bulk all-gather /
+# reduce-scatter around the einsum; these helpers replace that pair with the
+# ring-pipelined collectives from repro.dist.collectives, whose per-chunk
+# transfer overlaps the previous chunk's matmul (MGG Fig. 7(b) applied to the
+# dense LM stack — the ROADMAP "wire collectives into TP matmuls" item).
+# ---------------------------------------------------------------------------
+
+def _ring_tp_active(ctx, *dims_divisible) -> bool:
+    """True when ctx opted in, the model axis is real, and shapes divide."""
+    if ctx is None or not getattr(ctx, "use_ring_tp", False) \
+            or getattr(ctx, "mesh", None) is None:
+        return False
+    m = int(ctx.mesh.shape.get(ctx.model_axis, 1))
+    if m <= 1:
+        return False
+    return all(d % m == 0 for d in dims_divisible)
+
+
+def _data_size(ctx) -> int:
+    import math as _math
+    return _math.prod(
+        int(ctx.mesh.shape.get(a, 1)) for a in ctx.data_axes)
+
+
+def ring_tp_colwise(x: Array, w: Array, ctx) -> Array:
+    """``x @ w`` with x (B, S, D) sequence-sharded and w (D, F) column-
+    parallel over the model axis → (B, S, F) feature-sharded.
+
+    The sequence all-gather rides the ring fused into the matmul
+    (``ring_allgather_matmul``): row block j is multiplied the moment it
+    arrives while block j+1 is in flight.  Falls back to a plain matmul
+    (XLA SPMD collectives) when the flag is off or shapes don't divide.
+    """
+    b, s, d = x.shape
+    f = w.shape[-1]
+    if not _ring_tp_active(ctx, s, f) or b % _data_size(ctx) != 0:
+        return x @ w
+    from repro.dist.collectives import ring_allgather_matmul
+
+    mesh, axis = ctx.mesh, ctx.model_axis
+    m = int(mesh.shape[axis])
+
+    def body(xs, ws):
+        bl, sl, _ = xs.shape       # (B_l, S/m, D), ws: (D, F/m)
+        lhs = xs.reshape(bl * sl, d)
+        out = ring_allgather_matmul(lhs, ws, axis)   # (m·B_l·S_l, F/m)
+        out = out.reshape(m, bl, sl, ws.shape[-1])
+        return jnp.moveaxis(out, 0, 1).reshape(bl, m * sl, ws.shape[-1])
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ctx.data_axes, axis, None), P(None, axis)),
+        out_specs=P(ctx.data_axes, None, axis),
+        check_vma=False,
+    )
+    return fn(x, w)
+
+
+def ring_tp_rowwise(x: Array, w: Array, ctx) -> Array:
+    """``x @ w`` with x (B, S, F) feature-sharded and w (F, D) row-parallel
+    over the model axis → (B, S, D) sequence-sharded.
+
+    The partial-sum reduce-scatter is fused into a pipelined ring
+    (``matmul_reducescatter``): each step computes one output row block
+    while the travelling accumulator is on the wire.
+    """
+    b, s, f = x.shape
+    d = w.shape[-1]
+    if not _ring_tp_active(ctx, s, f) or b % _data_size(ctx) != 0:
+        return x @ w
+    from repro.dist.collectives import matmul_reducescatter
+
+    mesh, axis = ctx.mesh, ctx.model_axis
+    m = int(mesh.shape[axis])
+
+    def body(xs, ws):
+        bl, _, fl = xs.shape       # (B_l, S, F/m), ws: (F/m, D)
+        sl = s // m
+        # shard-major row order so shard i's reduce-scatter chunk is its
+        # own sequence block (matching the colwise gather order)
+        lhs = xs.reshape(bl, m, sl, fl)
+        lhs = jnp.moveaxis(lhs, 1, 0).reshape(m * bl * sl, fl)
+        out = matmul_reducescatter(lhs, ws, axis)    # (B_l·S_l, D)
+        return out.reshape(bl, sl, d)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ctx.data_axes, None, axis), P(axis, None)),
+        out_specs=P(ctx.data_axes, axis, None),
+        check_vma=False,
+    )
+    return fn(x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +335,7 @@ def attention_apply(
     causal: bool = True,
     kv_override: Optional[Tuple[Array, Array, Array]] = None,
     chunk: int = 1024,
+    ctx=None,
 ) -> Tuple[Array, Optional[KVCache]]:
     """GQA attention.  Three modes:
 
@@ -245,10 +348,13 @@ def attention_apply(
     """
     b, s, d = x.shape
     hd = cfg.head_dim
-    q = (x @ p["wq"]["w"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    q = ring_tp_colwise(x, p["wq"]["w"].astype(x.dtype), ctx) \
+        .reshape(b, s, cfg.n_heads, hd)
     if kv_override is None:
-        k = (x @ p["wk"]["w"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
-        v = (x @ p["wv"]["w"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+        k = ring_tp_colwise(x, p["wk"]["w"].astype(x.dtype), ctx) \
+            .reshape(b, s, cfg.n_kv_heads, hd)
+        v = ring_tp_colwise(x, p["wv"]["w"].astype(x.dtype), ctx) \
+            .reshape(b, s, cfg.n_kv_heads, hd)
     else:
         k, v, kv_pos = kv_override
     if cfg.qk_norm:
@@ -305,7 +411,7 @@ def attention_apply(
             key_pos=cache.key_pos.at[bidx, slots].set(pt),
         )
     out = out.reshape(b, s, cfg.n_heads * hd)
-    return out @ p["wo"]["w"].astype(x.dtype), new_cache
+    return ring_tp_rowwise(out, p["wo"]["w"].astype(x.dtype), ctx), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -327,10 +433,10 @@ def mlp_init(key, cfg, d_ff: Optional[int] = None) -> Dict[str, Any]:
     )
 
 
-def mlp_apply(p: Dict[str, Any], x: Array, cfg) -> Array:
+def mlp_apply(p: Dict[str, Any], x: Array, cfg, ctx=None) -> Array:
     if "gate" in p:
-        g = jax.nn.silu(x @ p["gate"]["w"].astype(x.dtype))
-        u = x @ p["up"]["w"].astype(x.dtype)
-        return (g * u) @ p["down"]["w"].astype(x.dtype)
-    h = jax.nn.gelu(x @ p["up"]["w"].astype(x.dtype))
-    return h @ p["down"]["w"].astype(x.dtype)
+        g = jax.nn.silu(ring_tp_colwise(x, p["gate"]["w"].astype(x.dtype), ctx))
+        u = ring_tp_colwise(x, p["up"]["w"].astype(x.dtype), ctx)
+        return ring_tp_rowwise(g * u, p["down"]["w"].astype(x.dtype), ctx)
+    h = jax.nn.gelu(ring_tp_colwise(x, p["up"]["w"].astype(x.dtype), ctx))
+    return ring_tp_rowwise(h, p["down"]["w"].astype(x.dtype), ctx)

@@ -54,6 +54,12 @@ class DistCtx:
     model_axis: str = "model"
     moe_pipeline_chunks: int = 1   # MGG pipelining depth for EP dispatch
     shard_activations: bool = True
+    # Route the TP matmuls through the ring-pipelined collectives
+    # (dist.collectives.ring_allgather_matmul / matmul_reducescatter)
+    # instead of XLA's default SPMD all-gather/reduce-scatter.  Off by
+    # default; layers fall back to the plain matmul whenever shapes don't
+    # divide the model axis (decode S=1, odd head counts, ...).
+    use_ring_tp: bool = False
     # Megatron-style sequence-parallel residual stream.  WRONG for
     # recurrent families (xlstm/hybrid): their per-timestep/per-chunk scans
     # would reshard the sequence dim every iteration (measured: 24,604
@@ -102,14 +108,14 @@ def _moe_block_init(key, cfg):
 
 def _attn_sub(bp, h, cfg, positions, cache, ctx):
     a, new_cache = attention_apply(
-        bp["attn"], _norm(h, bp["ln1"], cfg), cfg, positions, cache
+        bp["attn"], _norm(h, bp["ln1"], cfg), cfg, positions, cache, ctx=ctx
     )
     return h + a, new_cache
 
 
 def _dense_block(bp, h, cfg, positions, cache, ctx):
     h, new_cache = _attn_sub(bp, h, cfg, positions, cache, ctx)
-    h = h + mlp_apply(bp["mlp"], _norm(h, bp["ln2"], cfg), cfg)
+    h = h + mlp_apply(bp["mlp"], _norm(h, bp["ln2"], cfg), cfg, ctx=ctx)
     return ctx.constrain(h, ctx.act_spec()), new_cache
 
 

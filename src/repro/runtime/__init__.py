@@ -1,0 +1,35 @@
+"""repro.runtime — the paper's intelligent runtime (§4): online
+cross-iteration re-optimization of the aggregation pipeline during
+training.
+
+Four pieces (see docs/runtime.md):
+
+* :mod:`repro.runtime.profiler` — measurement harness: per-iteration
+  latency windows with warmup/percentile handling, a jitted-step timer,
+  and the analytical-model fallback when no devices are available
+  (``ProfileConfig``, ``LatencyWindow``, ``time_jitted``,
+  ``AggregateProfiler``);
+* :mod:`repro.runtime.tuner` — the online ps → dist → wpb coordinate
+  descent with retreat, stop-at-top-3, warm start, budget, and
+  workload-drift re-exploration (``OnlineTuner``, ``make_vmem_check``,
+  ``shape_drift``);
+* :mod:`repro.runtime.cache` — persistent JSON config cache keyed by
+  workload-shape + hardware fingerprint (``ConfigCache``);
+* :mod:`repro.runtime.engine` — ``DynamicGNNEngine``: a
+  :class:`repro.core.gnn.GNNEngine` wrapper that rebuilds plans/kernels
+  when the tuner commits a new ``(ps, dist, pb)`` without touching model
+  parameters.
+"""
+from repro.runtime.cache import (ConfigCache, hardware_fingerprint,
+                                 shape_fingerprint)
+from repro.runtime.engine import DynamicGNNEngine
+from repro.runtime.profiler import (AggregateProfiler, LatencyWindow,
+                                    ProfileConfig, time_jitted)
+from repro.runtime.tuner import OnlineTuner, make_vmem_check, shape_drift
+
+__all__ = [
+    "ProfileConfig", "LatencyWindow", "time_jitted", "AggregateProfiler",
+    "OnlineTuner", "make_vmem_check", "shape_drift",
+    "ConfigCache", "hardware_fingerprint", "shape_fingerprint",
+    "DynamicGNNEngine",
+]

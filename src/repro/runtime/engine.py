@@ -1,0 +1,248 @@
+"""DynamicGNNEngine — the paper's intelligent runtime around the GNN engine.
+
+Wraps :class:`repro.core.gnn.GNNEngine` so the aggregation configuration
+``(ps, dist, pb)`` can change *during* training without touching model
+parameters: the training loop feeds each iteration's wall time into
+:meth:`observe_step`; once a :class:`~repro.runtime.profiler.LatencyWindow`
+fills, the reduced measurement goes to the
+:class:`~repro.runtime.tuner.OnlineTuner`, and whenever the tuner moves to
+a new candidate (or commits its final answer) the engine rebuilds the
+aggregation plan — and, on the kernel path, the partition-blocked kernel —
+for the new knobs.
+
+Only the *engine* state is rebuilt.  Model parameters never move; what DOES
+change with ``dist`` is the padded PGAS layout (``rows_per_dev`` is padded
+to a multiple of ``dist``), so ``observe_step`` returns ``True`` when a
+rebuild happened and the caller must re-pad node tables and re-jit its step
+function (see examples/train_gnn.py's ``--dynamic-tune`` path).  Because
+padded rows are masked out of both the loss and the aggregation, the loss
+trajectory under any fixed config is bitwise identical to a static
+:class:`GNNEngine` run with that config — the runtime machinery adds
+measurement and plan swaps, never different math.
+
+A :class:`~repro.runtime.cache.ConfigCache` (optional) warm-starts the
+search from the config a previous run converged to for the same
+workload-shape + hardware fingerprint, and receives the committed config
+when this run's search closes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.autotune import HardwareSpec, TPU_V5E, WorkloadShape
+from repro.core.gnn import GNNEngine
+from repro.core.graph import CSRGraph
+from repro.runtime.cache import ConfigCache
+from repro.runtime.profiler import LatencyWindow, ProfileConfig
+from repro.runtime.tuner import (DEFAULT_DIST, DEFAULT_PB, DEFAULT_PS,
+                                 OnlineTuner, make_vmem_check)
+
+__all__ = ["DynamicGNNEngine"]
+
+
+class DynamicGNNEngine:
+    """A GNNEngine whose (ps, dist, pb) re-optimizes across iterations."""
+
+    def __init__(
+        self,
+        graph: CSRGraph,
+        mesh,
+        *,
+        tuner: OnlineTuner,
+        shape: WorkloadShape,
+        window: ProfileConfig = ProfileConfig(warmup=1, iters=3),
+        cache: Optional[ConfigCache] = None,
+        axis_name: str = "ring",
+        interleave: bool = True,
+        use_kernel: bool = False,
+        self_loops: bool = True,
+        log_fn: Callable[[str], None] = lambda _s: None,
+    ):
+        self.graph = graph
+        self.mesh = mesh
+        self.tuner = tuner
+        self.shape = shape
+        self.cache = cache
+        self.axis_name = axis_name
+        self.interleave = interleave
+        self.use_kernel = use_kernel
+        self.self_loops = self_loops
+        self.log = log_fn
+        self._window = LatencyWindow(window)
+        self.step_count = 0
+        self.committed = False
+        self.history: List[Tuple[int, Dict[str, int]]] = []
+        cfg0 = tuner.propose()
+        if cfg0 is None:  # empty search space ⇒ static engine at defaults
+            cfg0 = dict(ps=DEFAULT_PS[0], dist=DEFAULT_DIST[0],
+                        pb=DEFAULT_PB[0])
+            self.committed = True
+        self._config = dict(cfg0)
+        self.engine = self._build_engine(self._config)
+        self.history.append((0, dict(self._config)))
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        graph: CSRGraph,
+        mesh,
+        *,
+        d_feat: int,
+        ps_space: Tuple[int, ...] = DEFAULT_PS,
+        dist_space: Tuple[int, ...] = DEFAULT_DIST,
+        pb_space: Tuple[int, ...] = DEFAULT_PB,
+        window: ProfileConfig = ProfileConfig(warmup=1, iters=3),
+        cache_path: Optional[str] = None,
+        budget: Optional[int] = None,
+        drift_threshold: float = 0.25,
+        hw: HardwareSpec = TPU_V5E,
+        axis_name: str = "ring",
+        interleave: bool = True,
+        use_kernel: bool = False,
+        self_loops: bool = True,
+        log_fn: Callable[[str], None] = lambda _s: None,
+    ) -> "DynamicGNNEngine":
+        n_dev = mesh.shape[axis_name]
+        g = graph.with_self_loops() if self_loops else graph
+        shape = WorkloadShape.from_graph(g, n_dev, int(d_feat))
+        if not use_kernel:
+            # pb only reaches the partition-blocked Pallas kernel; on the
+            # jnp path every pb builds the identical computation, so probing
+            # it would spend real training iterations measuring recompile
+            # noise.  Collapse the dimension instead of searching it.
+            pb_space = (min(pb_space),)
+        cache = ConfigCache(cache_path) if cache_path else None
+        warm = cache.get(shape) if cache is not None else None
+        if warm is not None and warm["pb"] not in pb_space:
+            warm = dict(warm, pb=pb_space[0])
+        tuner = OnlineTuner(
+            ps_space, dist_space, pb_space,
+            vmem_check=make_vmem_check(shape, hw),
+            budget=budget, drift_threshold=drift_threshold,
+            warm_start=warm,
+        )
+        tuner.observe_shape(shape)
+        if warm is not None:
+            log_fn(f"[runtime] warm start from cache: {warm}")
+        return cls(graph, mesh, tuner=tuner, shape=shape, window=window,
+                   cache=cache, axis_name=axis_name, interleave=interleave,
+                   use_kernel=use_kernel, self_loops=self_loops,
+                   log_fn=log_fn)
+
+    def _build_engine(self, cfg: Dict[str, int]) -> GNNEngine:
+        return GNNEngine.build(
+            self.graph, self.mesh, axis_name=self.axis_name,
+            ps=int(cfg["ps"]), dist=int(cfg["dist"]),
+            pb=int(cfg["pb"]) if self.use_kernel else None,
+            interleave=self.interleave, use_kernel=self.use_kernel,
+            self_loops=self.self_loops,
+        )
+
+    # -- GNNEngine surface (delegation: models take either engine) -----------
+
+    @property
+    def plan(self):
+        return self.engine.plan
+
+    @property
+    def deg(self):
+        return self.engine.deg
+
+    @property
+    def config(self) -> Dict[str, int]:
+        return dict(self._config)
+
+    def pad(self, x: np.ndarray) -> np.ndarray:
+        return self.engine.pad(x)
+
+    def shard(self, x):
+        return self.engine.shard(x)
+
+    def aggregate(self, x):
+        return self.engine.aggregate(x)
+
+    def gcn_norm_aggregate(self, x):
+        return self.engine.gcn_norm_aggregate(x)
+
+    def mean_aggregate(self, x):
+        return self.engine.mean_aggregate(x)
+
+    # -- the online tuning protocol ------------------------------------------
+
+    def observe_step(self, dt: float) -> bool:
+        """Feed one training iteration's wall time.
+
+        Returns True when the engine was rebuilt for a new config — the
+        caller must then re-pad its node tables (layout may have changed
+        with ``dist``) and re-jit anything that closed over the engine.
+        """
+        self.step_count += 1
+        if self.tuner.converged:
+            return False
+        self._window.add(dt)
+        if not self._window.ready:
+            return False
+        latency = self._window.value()
+        self._window.reset()
+        self.tuner.observe(latency)
+        nxt = self.tuner.propose()
+        if self.tuner.converged:
+            return self._commit()
+        return self._set_config(nxt)
+
+    def retune(self, graph: Optional[CSRGraph] = None,
+               d_feat: Optional[int] = None) -> bool:
+        """Drift entry point: the workload changed (graph grew, features
+        resized).  Recomputes the WorkloadShape; if it drifted past the
+        tuner's threshold the search re-opens (warm-started from the old
+        best) and the engine rebuilds against the new graph."""
+        if graph is not None:
+            self.graph = graph
+        if d_feat is None:
+            d_feat = self.shape.d_feat
+        g = (self.graph.with_self_loops() if self.self_loops else self.graph)
+        shape = WorkloadShape.from_graph(
+            g, self.mesh.shape[self.axis_name], int(d_feat))
+        reopened = self.tuner.observe_shape(shape)
+        if reopened:
+            self.shape = shape
+            self.committed = False
+            self._window.reset()
+            self.log(f"[runtime] workload drift → search re-opened "
+                     f"(reopen #{self.tuner.reopens})")
+            nxt = self.tuner.propose()
+            if nxt is not None:
+                self._set_config(nxt, force_rebuild=graph is not None)
+        elif graph is not None:
+            # same shape class, new topology: rebuild the plan in place
+            self.engine = self._build_engine(self._config)
+        return reopened
+
+    # -- internals -----------------------------------------------------------
+
+    def _commit(self) -> bool:
+        best = self.tuner.best
+        self.committed = True
+        if best is None:  # nothing measurable (all configs vmem-rejected)
+            return False
+        if self.cache is not None:
+            self.cache.put(self.shape, best, self.tuner.best_latency)
+        self.log(f"[runtime] tuning converged after "
+                 f"{self.tuner.measured} measurements: {best} "
+                 f"({self.tuner.best_latency * 1e3:.2f} ms)")
+        return self._set_config(best)
+
+    def _set_config(self, cfg: Dict[str, int],
+                    force_rebuild: bool = False) -> bool:
+        if cfg == self._config and not force_rebuild:
+            return False
+        self._config = dict(cfg)
+        self.engine = self._build_engine(self._config)
+        self.history.append((self.step_count, dict(self._config)))
+        self.log(f"[runtime] step {self.step_count}: config → {self._config}")
+        return True

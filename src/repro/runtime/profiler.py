@@ -1,0 +1,205 @@
+"""Measurement harness for the online tuning runtime (paper §4).
+
+The paper's runtime exploits the iterative nature of GNN training: every
+epoch executes the same aggregation, so each iteration is a *free*
+measurement of the current ``(ps, dist, wpb)`` configuration.  This module
+supplies the two measurement paths the runtime needs:
+
+* :class:`LatencyWindow` — an *online* accumulator fed with per-iteration
+  wall times by the training loop.  It discards the first ``warmup``
+  samples after every config swap (they carry jit recompilation) and
+  reduces the rest to a percentile, which is what the tuner consumes.
+* :class:`AggregateProfiler` — an *offline/benchmark* ``measure(ps, dist,
+  pb) -> seconds`` callable that builds the plan, jits the pipelined
+  aggregation, and times it (``time_jitted``).  When no usable devices are
+  present — or ``mode="model"`` is forced — it falls back to the
+  analytical :func:`repro.core.autotune.estimate_latency`, so the same
+  tuner code runs in pure host-side tests and CI.
+
+Both paths accept an injectable ``clock`` so tests drive them with a fake
+clock deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.autotune import (HardwareSpec, TPU_V5E, WorkloadShape,
+                                 estimate_latency)
+
+__all__ = ["ProfileConfig", "LatencyWindow", "time_jitted",
+           "AggregateProfiler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileConfig:
+    """How many samples make one measurement, and how they reduce.
+
+    ``warmup`` samples are dropped (compile + cache-cold effects); the
+    remaining ``iters`` reduce to the ``percentile``-th percentile (50 ⇒
+    median — robust to straggler iterations, which the paper's measured
+    search needs since one preempted step must not steer the descent).
+    """
+
+    warmup: int = 1
+    iters: int = 3
+    percentile: float = 50.0
+
+    @property
+    def samples_needed(self) -> int:
+        return self.warmup + self.iters
+
+
+class LatencyWindow:
+    """Accumulates per-iteration step times for ONE candidate config."""
+
+    def __init__(self, cfg: ProfileConfig = ProfileConfig()):
+        self.cfg = cfg
+        self.samples: List[float] = []
+
+    def add(self, dt: float) -> bool:
+        """Record one step time; True once the window is full."""
+        self.samples.append(float(dt))
+        return self.ready
+
+    @property
+    def ready(self) -> bool:
+        return len(self.samples) >= self.cfg.samples_needed
+
+    def value(self) -> float:
+        """The reduced measurement (percentile over post-warmup samples)."""
+        kept = self.samples[self.cfg.warmup:]
+        if not kept:
+            raise ValueError("LatencyWindow.value() before any sample")
+        return float(np.percentile(np.asarray(kept), self.cfg.percentile))
+
+    def reset(self) -> None:
+        self.samples.clear()
+
+
+def time_jitted(fn: Callable, *args, cfg: ProfileConfig = ProfileConfig(),
+                clock: Callable[[], float] = time.perf_counter) -> float:
+    """Time a jitted callable: warmup calls, then percentile-of-iters.
+
+    Every call is synchronized with ``jax.block_until_ready`` so the
+    device queue cannot hide work past the clock read.
+    """
+    import jax
+
+    for _ in range(cfg.warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(cfg.iters):
+        t0 = clock()
+        jax.block_until_ready(fn(*args))
+        times.append(clock() - t0)
+    return float(np.percentile(np.asarray(times), cfg.percentile))
+
+
+class AggregateProfiler:
+    """``measure(ps, dist, pb)`` over real jitted aggregation steps.
+
+    ``mode``:
+      * ``"measure"`` — always build + time the real pipelined aggregation
+        on ``mesh`` (raises if no devices are available);
+      * ``"model"`` — always use the analytical latency model;
+      * ``"auto"`` — measure when a mesh and at least one device exist,
+        model otherwise (the documented fallback).
+
+    Measurements are memoized per ``(ps, dist, pb)`` — re-probing a config
+    the search already visited is free, mirroring the paper's lookup table.
+    """
+
+    def __init__(
+        self,
+        graph,
+        mesh,
+        d_feat: int,
+        *,
+        axis_name: str = "ring",
+        interleave: bool = True,
+        use_kernel: bool = False,
+        profile: ProfileConfig = ProfileConfig(warmup=1, iters=3),
+        hw: HardwareSpec = TPU_V5E,
+        mode: str = "auto",
+        seed: int = 0,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if mode not in ("auto", "measure", "model"):
+            raise ValueError(f"unknown profiler mode {mode!r}")
+        self.graph = graph
+        self.mesh = mesh
+        self.d_feat = int(d_feat)
+        self.axis_name = axis_name
+        self.interleave = interleave
+        self.use_kernel = use_kernel
+        self.profile = profile
+        self.hw = hw
+        self.mode = mode
+        self.clock = clock
+        self._x = np.random.default_rng(seed).normal(
+            size=(graph.num_nodes, self.d_feat)).astype(np.float32)
+        self._table: Dict[Tuple[int, int, int], float] = {}
+        self._shape: Optional[WorkloadShape] = None
+
+    # -- capability probing --------------------------------------------------
+
+    def can_measure(self) -> bool:
+        if self.mesh is None:
+            return False
+        try:
+            import jax
+
+            return len(jax.devices()) > 0
+        except Exception:
+            return False
+
+    @property
+    def measuring(self) -> bool:
+        if self.mode == "measure":
+            if not self.can_measure():
+                raise RuntimeError(
+                    "AggregateProfiler(mode='measure') but no devices/mesh "
+                    "available — use mode='auto' for the analytical fallback")
+            return True
+        return self.mode == "auto" and self.can_measure()
+
+    def workload_shape(self) -> WorkloadShape:
+        if self._shape is None:
+            n_dev = (self.mesh.shape[self.axis_name] if self.mesh is not None
+                     else 1)
+            self._shape = WorkloadShape.from_graph(
+                self.graph, n_dev, self.d_feat)
+        return self._shape
+
+    # -- the measure callable ------------------------------------------------
+
+    def __call__(self, ps: int, dist: int, pb: int) -> float:
+        key = (int(ps), int(dist), int(pb))
+        if key not in self._table:
+            if self.measuring:
+                self._table[key] = self._measure(*key)
+            else:
+                self._table[key] = float(estimate_latency(
+                    self.workload_shape(), *key, hw=self.hw,
+                    interleave=self.interleave))
+        return self._table[key]
+
+    def _measure(self, ps: int, dist: int, pb: int) -> float:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.gnn import GNNEngine
+
+        eng = GNNEngine.build(
+            self.graph, self.mesh, axis_name=self.axis_name, ps=ps,
+            dist=dist, pb=pb if self.use_kernel else None,
+            interleave=self.interleave, use_kernel=self.use_kernel,
+            self_loops=False,
+        )
+        xb = eng.shard(eng.pad(self._x))
+        fn = jax.jit(eng.aggregate)
+        return time_jitted(fn, xb, cfg=self.profile, clock=self.clock)

@@ -1,0 +1,268 @@
+"""Online cross-iteration tuning controller (paper §4, Fig. 10).
+
+:class:`OnlineTuner` runs the paper's heuristic search — greedy coordinate
+descent in the order ``ps → dist → wpb`` with the *retreat* rule and the
+*stop-at-top-3* criterion — over **measured** step times delivered one at a
+time by the training loop.  The offline helper
+:func:`repro.core.autotune.cross_iteration_optimize` pulls measurements
+synchronously; training cannot block like that, so here the identical
+control flow is expressed as a generator that *yields* the next config to
+try and is *sent* the measured latency once the trainer has timed a few
+iterations with it:
+
+    tuner = OnlineTuner()
+    while not tuner.converged:
+        cfg = tuner.propose()          # (ps, dist, pb) to run next
+        tuner.observe(measure(cfg))    # median step time under cfg
+
+Extras over the offline search, per the paper's runtime:
+
+* **stop-at-top-3** — after descent + retreat, single-knob neighbors of
+  the incumbent are probed until one fails to land in the top-3 recorded
+  latencies ("decrease ps... until the updated setting could not make it
+  to the top-3 lowest latency performance").
+* **warm start** — a cached config (see :mod:`repro.runtime.cache`) is
+  measured first so a previously tuned workload starts from its optimum.
+* **drift detection** — :meth:`observe_shape` compares the live
+  :class:`~repro.core.autotune.WorkloadShape` against the one the search
+  converged on; past ``drift_threshold`` relative change the search
+  re-opens (warm-started from the old best), because the measured surface
+  is stale.
+* **budget** — a hard cap on measurements; the search reports the best
+  config seen when the budget runs out.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.autotune import (HardwareSpec, TPU_V5E, SearchResult,
+                                 WorkloadShape, vmem_bytes)
+
+__all__ = ["OnlineTuner", "make_vmem_check", "shape_drift"]
+
+Key = Tuple[int, int, int]
+
+DEFAULT_PS = (1, 2, 4, 8, 16, 32)
+DEFAULT_DIST = (1, 2, 4, 8, 16)
+DEFAULT_PB = (1, 2, 4, 8, 16)
+
+
+def make_vmem_check(w: WorkloadShape, hw: HardwareSpec = TPU_V5E,
+                    dim_block: int = 128) -> Callable[[int, int, int], bool]:
+    """The §4 hardware constraint as a config predicate (VMEM budget)."""
+
+    def check(ps: int, dist: int, pb: int) -> bool:
+        tile_rows = -(-w.rows_per_dev // dist)
+        return vmem_bytes(ps, pb, dim_block, tile_rows, w.d_feat,
+                          w.itemsize) <= hw.vmem_bytes
+
+    return check
+
+
+def shape_drift(a: WorkloadShape, b: WorkloadShape) -> float:
+    """Relative workload change; ``inf`` when shapes are incomparable."""
+    if (a.n_dev, a.itemsize) != (b.n_dev, b.itemsize):
+        return math.inf
+    rel = 0.0
+    for fa, fb in ((a.d_feat, b.d_feat), (a.rows_per_dev, b.rows_per_dev),
+                   (a.local_edges_max, b.local_edges_max),
+                   (a.remote_edges_max, b.remote_edges_max)):
+        rel = max(rel, abs(fa - fb) / max(1.0, float(fa)))
+    return rel
+
+
+class OnlineTuner:
+    """Incremental ps → dist → wpb search over externally-measured latencies."""
+
+    def __init__(
+        self,
+        ps_space: Tuple[int, ...] = DEFAULT_PS,
+        dist_space: Tuple[int, ...] = DEFAULT_DIST,
+        pb_space: Tuple[int, ...] = DEFAULT_PB,
+        *,
+        vmem_check: Optional[Callable[[int, int, int], bool]] = None,
+        top_k: int = 3,
+        budget: Optional[int] = None,
+        drift_threshold: float = 0.25,
+        warm_start: Optional[Dict[str, int]] = None,
+    ):
+        self.ps_space = tuple(sorted(ps_space))
+        self.dist_space = tuple(sorted(dist_space))
+        self.pb_space = tuple(sorted(pb_space))
+        self.vmem_check = vmem_check
+        self.top_k = int(top_k)
+        self.budget = budget
+        self.drift_threshold = float(drift_threshold)
+        self.measured = 0          # total across re-opens (budget applies here)
+        self.reopens = 0
+        self._shape: Optional[WorkloadShape] = None
+        self.table: Dict[Key, float] = {}
+        self.trajectory: List[Tuple[Dict[str, int], float]] = []
+        self._gen: Optional[Iterator[Key]] = None
+        self._pending: Optional[Key] = None
+        self.reset(warm_start=warm_start)
+
+    # -- public protocol -----------------------------------------------------
+
+    def reset(self, warm_start: Optional[Dict[str, int]] = None) -> None:
+        """(Re-)open the search; stale measurements are discarded."""
+        self.table = {}
+        self.trajectory = []
+        self._gen = self._search(warm_start)
+        self._advance(None)
+
+    @property
+    def converged(self) -> bool:
+        return self._pending is None
+
+    def propose(self) -> Optional[Dict[str, int]]:
+        """Config awaiting a measurement; the best config once converged."""
+        if self._pending is None:
+            return self.best
+        ps, dist, pb = self._pending
+        return dict(ps=ps, dist=dist, pb=pb)
+
+    def observe(self, latency: float) -> None:
+        """Deliver the measured latency for the proposed config."""
+        if self._pending is None:
+            raise RuntimeError("observe() on a converged tuner — call "
+                               "reset() or observe_shape() to re-open")
+        self.measured += 1
+        if self.budget is not None and self.measured >= self.budget:
+            # budget exhausted: record this sample and stop the search
+            key = self._pending
+            self.table[key] = float(latency)
+            self.trajectory.append(
+                (dict(ps=key[0], dist=key[1], pb=key[2]), float(latency)))
+            self._gen.close()
+            self._pending = None
+            return
+        self._advance(float(latency))
+
+    @property
+    def best(self) -> Optional[Dict[str, int]]:
+        finite = {k: v for k, v in self.table.items() if v < math.inf}
+        if not finite:
+            return None
+        ps, dist, pb = min(finite, key=finite.get)
+        return dict(ps=ps, dist=dist, pb=pb)
+
+    @property
+    def best_latency(self) -> float:
+        best = self.best
+        if best is None:
+            return math.inf
+        return self.table[(best["ps"], best["dist"], best["pb"])]
+
+    def result(self) -> SearchResult:
+        """The search outcome in the offline optimizer's result type."""
+        best = self.best
+        if best is None:
+            raise RuntimeError("result() before any finite measurement")
+        return SearchResult(best=best, best_latency=self.best_latency,
+                            trajectory=list(self.trajectory),
+                            table=dict(self.table))
+
+    def observe_shape(self, shape: WorkloadShape) -> bool:
+        """Report the live workload shape; True ⇔ drift re-opened the search."""
+        if self._shape is None:
+            self._shape = shape
+            return False
+        if shape_drift(self._shape, shape) <= self.drift_threshold:
+            return False
+        self._shape = shape
+        self.reopens += 1
+        self.reset(warm_start=self.best)
+        return True
+
+    # -- the search as a generator (identical control flow to the offline
+    #    cross_iteration_optimize, plus warm start and top-3 refinement) -----
+
+    def _advance(self, latency: Optional[float]) -> None:
+        try:
+            self._pending = self._gen.send(latency)
+        except StopIteration:
+            self._pending = None
+
+    def _search(self, warm: Optional[Dict[str, int]]):
+        table, traj = self.table, self.trajectory
+
+        def mget(ps: int, dist: int, pb: int):
+            key = (int(ps), int(dist), int(pb))
+            if key not in table:
+                if self.vmem_check is not None and not self.vmem_check(*key):
+                    table[key] = math.inf
+                    traj.append((dict(ps=key[0], dist=key[1], pb=key[2]),
+                                 math.inf))
+                else:
+                    lat = yield key
+                    table[key] = float(lat)
+                    traj.append((dict(ps=key[0], dist=key[1], pb=key[2]),
+                                 table[key]))
+            return table[key]
+
+        def climb(values, cur, f):
+            best, best_lat = cur, (yield from f(cur))
+            for v in values:
+                if v <= cur:
+                    continue
+                lat = yield from f(v)
+                if lat < best_lat:
+                    best, best_lat = v, lat
+                else:
+                    break  # paper: stop the climb once latency increases
+            return best
+
+        p0, d0, b0 = self.ps_space[0], self.dist_space[0], self.pb_space[0]
+        if warm is not None:
+            # warm start: the cached optimum is measured first, so it seeds
+            # the table (and is the committed answer if nothing beats it).
+            yield from mget(warm["ps"], warm["dist"], warm["pb"])
+
+        ps = yield from climb(self.ps_space, p0,
+                              lambda v: mget(v, d0, b0))
+        dist = yield from climb(self.dist_space, d0,
+                                lambda v: mget(ps, v, b0))
+        pb = yield from climb(self.pb_space, b0,
+                              lambda v: mget(ps, dist, v))
+
+        # Retreat rule: if pb never improved, drop ps one notch and retry pb.
+        if pb == b0 and ps != p0:
+            ps_retreat = self.ps_space[max(0, self.ps_space.index(ps) - 1)]
+            pb2 = yield from climb(self.pb_space, b0,
+                                   lambda v: mget(ps_retreat, dist, v))
+            a = yield from mget(ps_retreat, dist, pb2)
+            b = yield from mget(ps, dist, pb)
+            if a < b:
+                ps, pb = ps_retreat, pb2
+
+        # Stop-at-top-3: probe unmeasured single-knob neighbors of the
+        # incumbent until one cannot make it into the top-k latencies.
+        while True:
+            finite = {k: v for k, v in table.items() if v < math.inf}
+            if not finite:
+                return
+            incumbent = min(finite, key=finite.get)
+            cands = [k for k in self._neighbors(incumbent) if k not in table]
+            if not cands:
+                return
+            cut = sorted(finite.values())[:self.top_k][-1]
+            lat = yield from mget(*cands[0])
+            if lat > cut:
+                return
+
+    def _neighbors(self, key: Key) -> List[Key]:
+        """Single-knob ±1-notch moves around ``key`` (deterministic order)."""
+        out: List[Key] = []
+        spaces = (self.ps_space, self.dist_space, self.pb_space)
+        for dim, space in enumerate(spaces):
+            i = space.index(key[dim]) if key[dim] in space else None
+            if i is None:
+                continue
+            for j in (i - 1, i + 1):
+                if 0 <= j < len(space):
+                    nk = list(key)
+                    nk[dim] = space[j]
+                    out.append(tuple(nk))
+        return out

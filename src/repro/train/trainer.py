@@ -2,14 +2,18 @@
 
 ``make_train_step`` builds the jitted step for any assigned architecture:
 value_and_grad over the family's loss, optional microbatch gradient
-accumulation (lax.scan), AdamW, and (for pure-DP meshes) the int8
-error-feedback gradient all-reduce from dist/compression.py.
+accumulation (lax.scan), AdamW, and (for pure-DP meshes, ``ef_bits > 0``)
+the int8 error-feedback gradient all-reduce from dist/compress.py.
 
 ``Trainer`` is the production driver: checkpoint/restart (atomic, async),
 straggler detection (wall-time watchdog vs. a running median — on a real
 multi-host deployment the same hook aborts and re-queues the step),
-bounded retry on transient failures, and elastic restore (the checkpoint
-is mesh-agnostic; restarting on a different mesh re-shards on load).
+bounded retry on transient failures, elastic restore (the checkpoint is
+mesh-agnostic; restarting on a different mesh re-shards on load), and the
+``--dynamic-tune`` hook: ``tune_cb(dt, step)`` receives every measured
+step time and may return a *replacement step function* — the
+repro.runtime online tuner uses this to swap in a re-optimized
+aggregation pipeline mid-training.
 """
 from __future__ import annotations
 
@@ -40,14 +44,37 @@ def make_train_step(
     opt_cfg: AdamWConfig,
     *,
     accum_steps: int = 1,
+    ef_bits: int = 0,
 ) -> Callable:
     """Returns ``step(params, opt_state, batch) -> (params, opt, metrics)``.
 
     With ``accum_steps > 1`` the batch's leading dim is split into
     microbatches accumulated with a lax.scan — the standard way to hold
     the global batch when per-chip memory is tight.
+
+    With ``ef_bits > 0`` the gradients pass through the error-feedback
+    compressed allreduce (``dist.compress.ef_allreduce_mean``) before the
+    optimizer: the int-``ef_bits`` wire format cuts the gradient payload
+    ``32 / ef_bits``× and the quantization residual carries into the next
+    step.  This path requires a mesh whose model axis is trivial (pure
+    data parallelism — the paper-scale setting where the gradient reduce
+    competes with the aggregation ring for the interconnect) and changes
+    the state convention: ``opt_state`` becomes the pair
+    ``(adamw_state, ef_err)`` with ``ef_err = ef_state_init(params)``.
     """
     loss_fn = make_loss_fn(cfg, ctx)
+    ef_on = int(ef_bits) > 0
+    if ef_on:
+        if ctx.mesh is None:
+            raise ValueError("ef_bits > 0 needs a mesh (ctx.mesh is None)")
+        if int(ctx.mesh.shape.get(ctx.model_axis, 1)) > 1:
+            raise ValueError(
+                "ef_bits > 0 is a pure-DP path; model axis "
+                f"{ctx.model_axis!r} has size "
+                f"{ctx.mesh.shape[ctx.model_axis]} > 1")
+        from jax.sharding import PartitionSpec as _P
+
+        from repro.dist.compress import ef_allreduce_mean
 
     def grads_of(params, batch):
         (loss, aux), grads = jax.value_and_grad(
@@ -55,6 +82,8 @@ def make_train_step(
         return loss, aux, grads
 
     def step(params, opt_state, batch):
+        if ef_on:
+            opt_state, ef_err = opt_state
         if accum_steps == 1:
             loss, aux, grads = grads_of(params, batch)
         else:
@@ -75,8 +104,17 @@ def make_train_step(
             grads = jax.tree.map(lambda g: g / accum_steps, gsum)
             loss = lsum / accum_steps
             aux = dict(loss=loss)
+        if ef_on:
+            # int-bits wire format + error feedback; the pmean over the
+            # data axes is the (compressed) gradient allreduce of the
+            # paper-scale DP setting.
+            specs = jax.tree.map(lambda _: _P(), grads)
+            grads, ef_err = ef_allreduce_mean(
+                grads, ef_err, ctx.mesh, ctx.data_axes, specs, bits=ef_bits)
         params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
         metrics = dict(loss=loss, **om)
+        if ef_on:
+            opt_state = (opt_state, ef_err)
         return params, opt_state, metrics
 
     return step
@@ -105,6 +143,7 @@ class Trainer:
         shardings: Optional[Any] = None,
         log_every: int = 10,
         log_fn: Callable[[str], None] = print,
+        tune_cb: Optional[Callable[[float, int], Optional[Callable]]] = None,
     ):
         self.step_fn = step_fn
         self.data_it = data_it
@@ -117,9 +156,11 @@ class Trainer:
         self.shardings = shardings
         self.log_every = log_every
         self.log = log_fn
+        self.tune_cb = tune_cb
         self.step_times: list = []
         self.stragglers = 0
         self.restarts = 0
+        self.retunes = 0
 
     def maybe_restore(self) -> bool:
         if self.mgr is None:
@@ -166,7 +207,21 @@ class Trainer:
                 step = self.state.step
                 continue
             retries = 0
-            self._watchdog(time.perf_counter() - t0, step)
+            dt = time.perf_counter() - t0
+            self._watchdog(dt, step)
+            if self.tune_cb is not None:
+                # Online tuning (repro.runtime): the callback digests the
+                # measured step time; a non-None return is a re-optimized
+                # replacement step function to run from the next iteration.
+                new_fn = self.tune_cb(dt, step)
+                if new_fn is not None:
+                    self.step_fn = new_fn
+                    self.retunes += 1
+                    # old medians describe the old pipeline (and the next
+                    # step pays a recompile) — reset the watchdog window
+                    self.step_times.clear()
+                    self.log(f"[trainer] dynamic-tune: step fn swapped "
+                             f"at step {step} (retune #{self.retunes})")
             self.state = TrainState(params, opt, step + 1)
             losses.append(float(metrics["loss"]))
             if self.mgr is not None:
@@ -177,7 +232,7 @@ class Trainer:
             if step % self.log_every == 0:
                 self.log(f"[trainer] step {step} "
                          f"loss {float(metrics['loss']):.4f} "
-                         f"({self.step_times[-1]*1e3:.1f} ms)")
+                         f"({dt*1e3:.1f} ms)")
             step += 1
         if self.mgr is not None:
             self.mgr.wait()

@@ -1,0 +1,62 @@
+"""Ring-pipelined TP matmuls == XLA SPMD collectives (8-device mesh).
+
+A dense smoke config runs forward + loss twice on a (data=2, model=4)
+mesh: once with the default GSPMD collectives, once with
+``DistCtx(use_ring_tp=True)`` routing the TP matmuls through
+``ring_allgather_matmul`` / ``matmul_reducescatter``.  Same math, different
+schedule ⇒ logits/loss/grads must agree to float32 tolerance.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.dist import make_mesh
+from repro.models import transformer as T
+
+cfg = configs.get_smoke_config("codeqwen1.5-7b")
+cfg = dataclasses.replace(cfg, param_dtype="float32",
+                          compute_dtype="float32", remat=False)
+mesh = make_mesh((2, 4), ("data", "model"))
+B, S = 4, 16
+assert S % 4 == 0 and B % 2 == 0
+
+params = T.init_params(jax.random.key(0), cfg, vocab_multiple=4)
+tokens = jnp.asarray(
+    np.random.default_rng(0).integers(0, cfg.vocab, size=(B, S)), jnp.int32)
+
+ctx_ref = T.DistCtx(mesh=mesh)
+ctx_ring = T.DistCtx(mesh=mesh, use_ring_tp=True)
+
+logits_ref, _ = jax.jit(
+    lambda p, t: T.forward(p, cfg, t, ctx=ctx_ref))(params, tokens)
+logits_ring, _ = jax.jit(
+    lambda p, t: T.forward(p, cfg, t, ctx=ctx_ring))(params, tokens)
+np.testing.assert_allclose(np.asarray(logits_ring), np.asarray(logits_ref),
+                           rtol=2e-4, atol=2e-4)
+
+loss_ref, grads_ref = jax.jit(jax.value_and_grad(
+    lambda p: T.loss_fn(p, cfg, {"tokens": tokens}, ctx=ctx_ref)[0]))(params)
+loss_ring, grads_ring = jax.jit(jax.value_and_grad(
+    lambda p: T.loss_fn(p, cfg, {"tokens": tokens}, ctx=ctx_ring)[0]))(params)
+np.testing.assert_allclose(float(loss_ring), float(loss_ref),
+                           rtol=1e-5, atol=1e-6)
+for a, b in zip(jax.tree.leaves(grads_ring), jax.tree.leaves(grads_ref)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-4)
+
+# decode path: S=1 does not divide the model axis — the flag must fall
+# back to the plain matmul and still produce identical next-token logits.
+cache = T.init_cache(cfg, B, 8, jnp.float32)
+lr, _ = T.prefill(params, cfg, tokens[:, :8], cache, ctx=ctx_ref)
+lg, _ = T.prefill(params, cfg, tokens[:, :8], cache, ctx=ctx_ring)
+np.testing.assert_allclose(np.asarray(lg), np.asarray(lr),
+                           rtol=2e-4, atol=2e-4)
+
+print("ring-TP == SPMD: logits/loss/grads/prefill agree")
+print("PASSED")

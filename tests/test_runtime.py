@@ -1,0 +1,416 @@
+"""repro.runtime — online cross-iteration tuning (paper §4, Fig. 10).
+
+All deterministic and CPU-safe: the tuner is driven by synthetic latency
+surfaces (fake clock), the profiler's analytical fallback is checked
+against the model, and the DynamicGNNEngine runs real (1-device-mesh)
+training to prove the config swaps never perturb the math.
+"""
+import json
+import math
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.autotune import WorkloadShape, estimate_latency
+from repro.dist import flat_ring_mesh
+from repro.runtime import (AggregateProfiler, ConfigCache, DynamicGNNEngine,
+                           LatencyWindow, OnlineTuner, ProfileConfig,
+                           make_vmem_check, shape_drift, time_jitted)
+
+PS = (1, 2, 4, 8, 16, 32)
+DIST = (1, 2, 4, 8)
+PB = (1, 2, 4, 8)
+
+
+def _drive(tuner, surface):
+    """Run the propose/observe loop to convergence; return #measurements."""
+    while not tuner.converged:
+        c = tuner.propose()
+        tuner.observe(surface(c["ps"], c["dist"], c["pb"]))
+    return tuner.measured
+
+
+# ---------------------------------------------------------------------------
+# tuner: convergence, retreat, drift, budget
+# ---------------------------------------------------------------------------
+
+def test_tuner_converges_near_optimum_within_12_measurements():
+    """Acceptance: ≤ 12 measurements, within 5% of the exhaustive optimum."""
+
+    def surface(ps, dist, pb):  # separable bowl, optimum at (4, 2, 2)
+        return (1.0 + 0.10 * (math.log2(ps) - 2) ** 2
+                + 0.20 * (math.log2(dist) - 1) ** 2
+                + 0.05 * (math.log2(pb) - 1) ** 2)
+
+    t = OnlineTuner(PS, DIST, PB)
+    n = _drive(t, surface)
+    exhaustive = min(surface(p, d, b) for p in PS for d in DIST for b in PB)
+    assert n <= 12, n
+    assert t.best_latency <= 1.05 * exhaustive
+    assert t.best == dict(ps=4, dist=2, pb=2)
+
+
+def test_tuner_matches_offline_search_on_model_surface():
+    """Same control flow as cross_iteration_optimize ⇒ never a worse pick."""
+    g = C.power_law(800, avg_degree=8.0, locality=0.3, seed=3)
+    w = WorkloadShape.from_graph(g, 8, 64)
+    surface = lambda ps, dist, pb: estimate_latency(w, ps, dist, pb)
+    t = OnlineTuner(PS, DIST, PB)
+    _drive(t, surface)
+    off = C.cross_iteration_optimize(
+        surface, ps_space=PS, dist_space=DIST, pb_space=PB)
+    assert t.best_latency <= off.best_latency + 1e-15
+
+
+def test_retreat_rule_fires():
+    """pb stuck at its floor for the climbed ps, but ps-retreat + pb wins —
+    the paper's 'decrease ps to its second-highest value' rule."""
+
+    def surface(ps, dist, pb):
+        lat = 10.0 - 1.0 * min(math.log2(ps), 3)     # ps climb → ps=8
+        lat += 0.5 * (dist - 1)                      # dist stays at 1
+        if pb > 1:
+            lat += 2.0 if ps >= 8 else -1.5          # pb only helps at ps=4
+        return lat
+
+    t = OnlineTuner(PS, DIST, PB)
+    _drive(t, surface)
+    assert t.best == dict(ps=4, dist=1, pb=2)
+    probed = {(c["ps"], c["pb"]) for c, _l in t.trajectory}
+    assert (8, 1) in probed and (4, 2) in probed  # climbed, then retreated
+
+
+def test_drift_reopens_search_with_warm_start():
+    base = WorkloadShape(n_dev=4, d_feat=32, rows_per_dev=100,
+                         local_edges_max=1000, remote_edges_max=400)
+    t = OnlineTuner((1, 2, 4), (1, 2), (1, 2))
+    assert not t.observe_shape(base)
+    _drive(t, lambda ps, dist, pb: 1.0 + abs(ps - 2) + dist + pb)
+    best = t.best
+    assert t.converged
+    # small wiggle: no re-open
+    near = WorkloadShape(4, 32, 105, 1050, 420)
+    assert not t.observe_shape(near)
+    assert t.converged
+    # +50% remote edges: re-open, warm-started from the old best
+    far = WorkloadShape(4, 32, 100, 1000, 600)
+    assert t.observe_shape(far)
+    assert not t.converged
+    assert t.propose() == best
+    assert t.reopens == 1
+
+
+def test_budget_caps_measurements():
+    t = OnlineTuner(PS, DIST, PB, budget=4)
+    n = _drive(t, lambda ps, dist, pb: 1.0 / ps)  # monotone: wants ps=32
+    assert n == 4
+    assert t.converged
+    assert t.best is not None  # best-so-far is still committed
+
+
+def test_vmem_check_rejects_without_spending_measurements():
+    w = WorkloadShape(n_dev=4, d_feat=512, rows_per_dev=4096,
+                      local_edges_max=10000, remote_edges_max=5000)
+    check = make_vmem_check(w)
+    assert check(1, 8, 1)            # small config fits
+    assert not check(32, 1, 16)      # big block + dist=1 double buffer: no
+    t = OnlineTuner((1, 32), (1,), (1, 16), vmem_check=lambda *k: k[0] < 32)
+    calls = []
+
+    def surface(ps, dist, pb):
+        calls.append((ps, dist, pb))
+        return 1.0 / pb
+
+    _drive(t, surface)
+    assert all(c[0] < 32 for c in calls)  # rejected configs never measured
+    assert t.table[(32, 1, 1)] == math.inf
+
+
+# ---------------------------------------------------------------------------
+# profiler
+# ---------------------------------------------------------------------------
+
+def test_latency_window_warmup_and_percentile():
+    w = LatencyWindow(ProfileConfig(warmup=2, iters=3, percentile=50.0))
+    for dt in (99.0, 98.0):  # compile-tainted samples: dropped
+        assert not w.add(dt)
+    assert not w.add(3.0)
+    assert not w.add(1.0)
+    assert w.add(2.0)
+    assert w.ready
+    assert w.value() == 2.0  # median of (3, 1, 2), warmups excluded
+    w.reset()
+    assert not w.ready
+
+
+def test_time_jitted_fake_clock():
+    ticks = iter(range(100))
+    calls = []
+
+    def fn(x):
+        calls.append(1)
+        return jnp.asarray(x)
+
+    t = time_jitted(fn, 1.0, cfg=ProfileConfig(warmup=2, iters=3),
+                    clock=lambda: float(next(ticks)))
+    assert len(calls) == 5          # warmup + iters
+    assert t == 1.0                 # every (stop - start) == 1 tick
+
+
+def test_profiler_model_fallback_matches_estimate():
+    g = C.power_law(300, avg_degree=6.0, locality=0.3, seed=2)
+    prof = AggregateProfiler(g, None, 32, mode="auto")  # no mesh ⇒ model
+    assert not prof.measuring
+    w = prof.workload_shape()
+    assert w.n_dev == 1
+    assert prof(4, 1, 2) == estimate_latency(w, 4, 1, 2)
+    with pytest.raises(RuntimeError):
+        AggregateProfiler(g, None, 32, mode="measure").measuring
+
+
+def test_profiler_measures_and_memoizes():
+    g = C.power_law(200, avg_degree=5.0, locality=0.3, seed=4)
+    prof = AggregateProfiler(g, flat_ring_mesh(1), 8, mode="measure",
+                             profile=ProfileConfig(warmup=1, iters=1))
+    a = prof(2, 1, 1)
+    assert a > 0
+    assert prof(2, 1, 1) == a  # memoized, not re-timed
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrip_corruption_and_atomicity():
+    shape = WorkloadShape(n_dev=2, d_feat=16, rows_per_dev=50,
+                          local_edges_max=200, remote_edges_max=80)
+    other = WorkloadShape(n_dev=2, d_feat=16, rows_per_dev=51,
+                          local_edges_max=200, remote_edges_max=80)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "sub", "tuned.json")
+        cache = ConfigCache(path, hw="test:hw:2")
+        assert cache.get(shape) is None
+        cache.put(shape, dict(ps=8, dist=2, pb=4), 1.5e-3)
+        assert cache.get(shape) == dict(ps=8, dist=2, pb=4)
+        assert cache.get(other) is None          # different shape, no hit
+        # a second instance re-reads from disk
+        assert ConfigCache(path, hw="test:hw:2").get(shape) == \
+            dict(ps=8, dist=2, pb=4)
+        # different hardware fingerprint: miss
+        assert ConfigCache(path, hw="other:hw:8").get(shape) is None
+        # two entries coexist
+        cache.put(other, dict(ps=2, dist=1, pb=1), 2e-3)
+        assert len(cache) == 2
+        # corruption is survivable: unreadable file reads as empty...
+        with open(path, "w") as f:
+            f.write("{ not json")
+        assert cache.get(shape) is None
+        # ...and the next put starts a fresh, valid file
+        cache.put(shape, dict(ps=4, dist=1, pb=2), 1e-3)
+        assert cache.get(shape) == dict(ps=4, dist=1, pb=2)
+        with open(path) as f:
+            assert json.load(f)["version"] == 1
+        # no stray tmp files left behind
+        assert all(not fn.endswith(".tmp") for fn in os.listdir(d))
+
+
+# ---------------------------------------------------------------------------
+# DynamicGNNEngine
+# ---------------------------------------------------------------------------
+
+def _gnn_setup(n=160, d=12, ncls=4, seed=0):
+    from repro.train.data import graph_features
+    from repro.train.optimizer import AdamWConfig, adamw_init
+
+    g = C.power_law(n, avg_degree=6.0, locality=0.3, seed=seed)
+    x, y, mask = graph_features(g.num_nodes, d, ncls, seed=seed)
+    init, apply, kw = C.MODEL_ZOO["gcn"]
+    params = init(jax.random.key(seed), d, ncls, **kw)
+    ocfg = AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=60,
+                       weight_decay=0.0)
+    return g, x, y, mask, apply, params, adamw_init(params), ocfg
+
+
+def _make_step(eng, apply, x, y, mask, ocfg):
+    from repro.train.optimizer import adamw_update
+
+    pad1 = lambda a: C.pad_table(eng.plan.bounds, eng.plan.rows_per_dev,
+                                 a[:, None])[:, 0]
+    xp = eng.shard(eng.pad(x))
+    yp = jnp.asarray(pad1(y.astype(np.int32)))
+    mp = jnp.asarray(pad1(mask.astype(np.float32)))
+
+    @jax.jit
+    def step(params, opt):
+        loss, grads = jax.value_and_grad(lambda p: C.masked_cross_entropy(
+            apply(p, eng, xp), yp, mp))(params)
+        params, opt, _ = adamw_update(grads, opt, params, ocfg)
+        return params, opt, loss
+
+    return step
+
+
+def test_dynamic_engine_tunes_rebuilds_and_stays_correct():
+    g, x, *_ = _gnn_setup()
+    eng = DynamicGNNEngine.build(
+        g, flat_ring_mesh(1), d_feat=x.shape[1],
+        ps_space=(1, 2, 4), dist_space=(1, 2), pb_space=(1, 2),
+        window=ProfileConfig(warmup=1, iters=1))
+    gsl = g.with_self_loops()
+    ref = C.reference_aggregate(gsl.indptr, gsl.indices, x)
+    fake = lambda c: 1.0 + 0.5 * abs(c["ps"] - 2) + 0.3 * (c["dist"] - 1) \
+        + 0.2 * (c["pb"] - 1)
+    rebuilds = 0
+    for _ in range(80):
+        out = C.unpad_embeddings(
+            eng.plan, np.asarray(eng.aggregate(eng.shard(eng.pad(x)))))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+        rebuilds += bool(eng.observe_step(fake(eng.config)))
+        if eng.committed:
+            break
+    assert eng.committed
+    assert eng.config == dict(ps=2, dist=1, pb=1)
+    assert rebuilds >= 2                      # search actually moved
+    assert eng.history[0][0] == 0             # initial config recorded
+    assert eng.history[-1][1] == eng.config
+
+
+def test_dynamic_engine_bitwise_matches_static_after_commit():
+    """Acceptance: dynamic-tuned training == static run at the tuner's
+    final config, bitwise, config-for-config (post-commit segment)."""
+    g, x, y, mask, apply, params, opt, ocfg = _gnn_setup()
+    mesh = flat_ring_mesh(1)
+    eng = DynamicGNNEngine.build(
+        g, mesh, d_feat=x.shape[1],
+        ps_space=(1, 2, 4), dist_space=(1, 2), pb_space=(1, 2),
+        window=ProfileConfig(warmup=0, iters=1))
+    fake = lambda c: 1.0 + abs(c["ps"] - 4) + 0.5 * (c["dist"] - 1) \
+        + 0.25 * (c["pb"] - 1)
+    step = _make_step(eng, apply, x, y, mask, ocfg)
+    for _ in range(40):
+        params, opt, _loss = step(params, opt)
+        if eng.observe_step(fake(eng.config)):
+            step = _make_step(eng, apply, x, y, mask, ocfg)
+        if eng.committed:
+            break
+    assert eng.committed and eng.config == dict(ps=4, dist=1, pb=1)
+    snap_p = jax.tree.map(np.asarray, params)
+    snap_o = jax.tree.map(np.asarray, opt)
+
+    dyn_losses = []
+    for _ in range(5):
+        params, opt, loss = step(params, opt)
+        dyn_losses.append(float(loss))
+
+    static = C.GNNEngine.build(g, mesh, **eng.config)
+    sstep = _make_step(static, apply, x, y, mask, ocfg)
+    sp = jax.tree.map(jnp.asarray, snap_p)
+    so = jax.tree.map(jnp.asarray, snap_o)
+    st_losses = []
+    for _ in range(5):
+        sp, so, loss = sstep(sp, so)
+        st_losses.append(float(loss))
+    assert dyn_losses == st_losses  # bitwise, not allclose
+
+
+def test_dynamic_engine_warm_starts_from_cache():
+    g, x, *_ = _gnn_setup(seed=5)
+    mesh = flat_ring_mesh(1)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        e1 = DynamicGNNEngine.build(
+            g, mesh, d_feat=x.shape[1], ps_space=(1, 2, 4),
+            dist_space=(1, 2), pb_space=(1, 2),
+            window=ProfileConfig(warmup=0, iters=1), cache_path=path)
+        fake = lambda c: 1.0 + abs(c["ps"] - 2) + 0.5 * (c["dist"] - 2)
+        for _ in range(40):
+            e1.observe_step(fake(e1.config))
+            if e1.committed:
+                break
+        assert e1.committed
+        best = e1.config
+        assert ConfigCache(path).get(e1.shape) == best
+        # second engine: the cached config is the FIRST thing it runs
+        e2 = DynamicGNNEngine.build(
+            g, mesh, d_feat=x.shape[1], ps_space=(1, 2, 4),
+            dist_space=(1, 2), pb_space=(1, 2), cache_path=path)
+        assert e2.config == best
+
+
+def test_dynamic_engine_drift_retune():
+    g, x, *_ = _gnn_setup(seed=6)
+    mesh = flat_ring_mesh(1)
+    eng = DynamicGNNEngine.build(
+        g, mesh, d_feat=x.shape[1], ps_space=(1, 2), dist_space=(1,),
+        pb_space=(1,), window=ProfileConfig(warmup=0, iters=1))
+    for _ in range(20):
+        eng.observe_step(1.0 / eng.config["ps"])
+        if eng.committed:
+            break
+    assert eng.committed
+    # same graph: no drift, engine untouched
+    assert not eng.retune()
+    # a much denser graph: shape drifts past threshold → search re-opens
+    g2 = C.power_law(g.num_nodes, avg_degree=14.0, locality=0.3, seed=7)
+    assert eng.retune(graph=g2)
+    assert not eng.committed
+    assert eng.tuner.reopens == 1
+    # and the engine now aggregates the NEW topology correctly
+    g2sl = g2.with_self_loops()
+    ref = C.reference_aggregate(g2sl.indptr, g2sl.indices, x)
+    out = C.unpad_embeddings(
+        eng.plan, np.asarray(eng.aggregate(eng.shard(eng.pad(x)))))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_engine_pb_knob_threads_to_kernel_path():
+    """pb reaches the blocked Pallas kernel (interpret mode on CPU) and
+    does not change the math."""
+    g = C.power_law(80, avg_degree=5.0, locality=0.3, seed=8)
+    x = np.random.default_rng(0).normal(size=(80, 8)).astype(np.float32)
+    mesh = flat_ring_mesh(1)
+    ref_eng = C.GNNEngine.build(g, mesh, ps=4)
+    ref = np.asarray(ref_eng.aggregate(ref_eng.shard(ref_eng.pad(x))))
+    ker = C.GNNEngine.build(g, mesh, ps=4, pb=2, use_kernel=True)
+    assert ker.config == dict(ps=4, dist=1, pb=2)
+    got = np.asarray(ker.aggregate(ker.shard(ker.pad(x))))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Trainer dynamic-tune hook
+# ---------------------------------------------------------------------------
+
+def test_trainer_tune_cb_swaps_step_fn():
+    from repro.train import Trainer, TrainState
+
+    def mk_step(scale):
+        def step(params, opt, batch):
+            return params, opt, dict(loss=jnp.asarray(scale, jnp.float32))
+        return step
+
+    def data_it():
+        while True:
+            yield {}
+
+    swaps = []
+
+    def tune_cb(dt, step):
+        assert dt >= 0.0
+        if step == 3 and not swaps:
+            swaps.append(step)
+            return mk_step(7.0)
+        return None
+
+    # log_every=1: the step-fn swap clears the watchdog window on a
+    # logging step — the log line must not index the emptied history
+    tr = Trainer(mk_step(1.0), data_it(), TrainState(None, None),
+                 log_every=1, log_fn=lambda *_: None, tune_cb=tune_cb)
+    losses = tr.run(6)
+    assert tr.retunes == 1
+    assert losses[:4] == [1.0] * 4 and losses[4:] == [7.0] * 2
