@@ -1,0 +1,126 @@
+"""Serving under traffic shifts: latency percentiles vs load, retune
+on/off (the serving-side extension of the paper's §4 runtime — "fig11"
+has no paper counterpart; it quantifies the ROADMAP's serving-retune
+loop).
+
+Three phases of Zipfian node-prediction traffic over the ring-partitioned
+graph — steady, hot-set rotation, burst — served twice:
+
+* ``fig11_serving_static`` — fixed (ps, dist) aggregation config;
+* ``fig11_serving_retune`` — DynamicGNNEngine: the WorkloadStats drift
+  signal re-opens the (ps, dist, pb) search mid-serve and the pipeline
+  re-optimizes on live micro-batch times.
+
+Reported per mode: p50/p99 request latency, layer-1 cache hit rate,
+retunes fired, dropped requests (must be 0).  ``--smoke`` (wired into
+``benchmarks/run.py --smoke`` → CI) shrinks the graph/traffic and
+*asserts* the acceptance criteria: ≥ 1 drift retune, hit rate > 0, no
+drops, and served logits equal to the offline full-graph forward.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._common import emit, force_devices_from_env
+
+force_devices_from_env()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.core as C  # noqa: E402
+from repro.dist import flat_ring_mesh  # noqa: E402
+from repro.runtime import DynamicGNNEngine, ProfileConfig  # noqa: E402
+from repro.serve import (GNNServeEngine, TrafficPhase, WorkloadStats,  # noqa: E402
+                         ZipfTraffic, run_trace)
+
+
+def _phases(n_req: int) -> list:
+    return [
+        TrafficPhase(requests=n_req, alpha=1.3, rate=150.0, seeds_max=4),
+        TrafficPhase(requests=n_req, alpha=1.3, rate=150.0, rotate=True,
+                     seeds_max=4),
+        TrafficPhase(requests=n_req, alpha=1.3, rate=600.0, seeds_max=4,
+                     update_frac=0.05),
+    ]
+
+
+def _serve(g, x, params, apply_fn, engine, *, smoke: bool):
+    srv = GNNServeEngine(
+        engine, params, "gcn", x, g, slots=8,
+        stats=WorkloadStats(window=8 if smoke else 24, top_k=8),
+        drift_threshold=0.5, check_every=2 if smoke else 4,
+        min_records=4)
+    traffic = ZipfTraffic(g.num_nodes, x.shape[1],
+                          _phases(40 if smoke else 160), seed=9)
+    results = run_trace(srv, traffic)
+    lat = np.array([r.latency for r in results])
+    rep = srv.report()
+    # correctness: the trace tail was served under the final config
+    xp = engine.shard(engine.pad(srv.x))
+    offline = C.unpad_embeddings(
+        engine.plan,
+        np.asarray(jax.jit(lambda p, t: apply_fn(p, engine, t))(params, xp)))
+    for r in results[-10:]:
+        np.testing.assert_allclose(r.logits, offline[r.seeds],
+                                   rtol=1e-5, atol=1e-5)
+    return results, lat, rep
+
+
+def run(as_json: bool, smoke: bool = False) -> list:
+    n_dev = len(jax.devices())
+    mesh = flat_ring_mesh(n_dev)
+    if smoke:
+        g = C.power_law(512, avg_degree=8.0, locality=0.4, seed=0)
+        d = 16
+        spaces = dict(ps_space=(2, 4, 8), dist_space=(1, 2), pb_space=(1,))
+    else:
+        g, meta = C.paper_dataset("reddit", scale=0.2)
+        d = 64
+        spaces = dict(ps_space=(1, 2, 4, 8, 16), dist_space=(1, 2, 4),
+                      pb_space=(1,))
+    x = np.random.default_rng(0).normal(size=(g.num_nodes, d)) \
+        .astype(np.float32)
+    init, apply_fn, kw = C.MODEL_ZOO["gcn"]
+    params = init(jax.random.key(0), d, 8, **kw)
+
+    rows = []
+    static_eng = C.GNNEngine.build(g, mesh, ps=min(spaces["ps_space"]),
+                                  dist=1)
+    _res_s, lat_s, rep_s = _serve(g, x, params, apply_fn, static_eng,
+                                  smoke=smoke)
+    rows.append(dict(
+        name="fig11_serving_static",
+        us_per_call=round(float(np.percentile(lat_s, 50)) * 1e6, 1),
+        derived=(f"p99_us={np.percentile(lat_s, 99) * 1e6:.0f};"
+                 f"hit_rate={rep_s['cache_hit_rate']};"
+                 f"dropped={rep_s['dropped']};"
+                 f"config={rep_s['config']}")))
+
+    dyn_eng = DynamicGNNEngine.build(
+        g, mesh, d_feat=d, **spaces,
+        window=ProfileConfig(warmup=1, iters=1 if smoke else 2))
+    res_d, lat_d, rep_d = _serve(g, x, params, apply_fn, dyn_eng,
+                                 smoke=smoke)
+    rows.append(dict(
+        name="fig11_serving_retune",
+        us_per_call=round(float(np.percentile(lat_d, 50)) * 1e6, 1),
+        derived=(f"p99_us={np.percentile(lat_d, 99) * 1e6:.0f};"
+                 f"hit_rate={rep_d['cache_hit_rate']};"
+                 f"dropped={rep_d['dropped']};"
+                 f"retunes={rep_d['retunes']};"
+                 f"rebuilds={rep_d['rebuilds']};"
+                 f"config={rep_d['config']}")))
+
+    if smoke:
+        assert rep_d["retunes"] >= 1, \
+            f"smoke: no traffic-drift retune fired: {rep_d}"
+        assert rep_d["dropped"] == 0 and rep_s["dropped"] == 0
+        assert rep_d["cache_hit_rate"] > 0 and rep_s["cache_hit_rate"] > 0
+        assert any(r.cached for r in res_d)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run("--json" in sys.argv, smoke="--smoke" in sys.argv),
+         "--json" in sys.argv)

@@ -26,11 +26,13 @@ MULTI_DEVICE_MODULES = [
     "table4_vs_dgcl",
     "fig9_ablations",
     "fig10_autotune",
+    "fig11_serving",
     "table5_sampling",
 ]
 LOCAL_MODULES = ["gather_fraction", "roofline"]
-QUICK_SKIP = {"fig10_autotune", "table5_sampling"}
-SMOKE_MODULES = ["fig10_autotune"]  # tiny graphs, --smoke arg, 2 devices
+QUICK_SKIP = {"fig10_autotune", "fig11_serving", "table5_sampling"}
+# tiny graphs, --smoke arg, 2 devices (CI runs these on every PR)
+SMOKE_MODULES = ["fig10_autotune", "fig11_serving"]
 
 
 def main() -> None:

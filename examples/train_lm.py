@@ -6,6 +6,12 @@ few hundred steps.  --smoke uses the reduced config for a fast run.
 
     PYTHONPATH=src python examples/train_lm.py --steps 300 --seq 128 --batch 4
     PYTHONPATH=src python examples/train_lm.py --arch granite-moe-1b-a400m --smoke
+
+``--tune-accum`` turns gradient-accumulation depth into an online-tuned
+knob: the same :class:`repro.runtime.OnlineTuner` that drives the GNN
+aggregation search runs a 1-D search over ``accum_steps`` on measured
+step times, swapping re-jitted step functions through the generic
+``Trainer(tune_cb=...)`` hook — the ROADMAP's knob-agnostic proof point.
 """
 import argparse
 import dataclasses
@@ -15,8 +21,49 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.models import transformer as T
+from repro.runtime import LatencyWindow, OnlineTuner, ProfileConfig
 from repro.train import (AdamWConfig, LMDataConfig, Trainer, TrainState,
                          adamw_init, lm_batch, make_train_step)
+
+
+def make_accum_tuner(build_step_fn, batch: int, *,
+                     space=(1, 2, 4, 8), budget=None, log=print):
+    """A ``Trainer(tune_cb=...)`` callback tuning ``accum_steps`` online.
+
+    The OnlineTuner is knob-agnostic — here its first axis carries the
+    accumulation depth (the other two are trivial), measurements are
+    median step times from a LatencyWindow, and every tuner move returns
+    a freshly jitted step function for the Trainer to swap in.
+    """
+    space = tuple(a for a in space if batch % a == 0 and a <= batch)
+    tuner = OnlineTuner(ps_space=space, dist_space=(1,), pb_space=(1,),
+                        budget=budget)
+    window = LatencyWindow(ProfileConfig(warmup=1, iters=2))
+    state = dict(accum=tuner.propose()["ps"])
+
+    def tune_cb(dt, step):
+        if tuner.converged:
+            return None
+        window.add(dt)
+        if not window.ready:
+            return None
+        lat = window.value()
+        window.reset()
+        tuner.observe(lat)
+        cfg = tuner.propose()
+        accum = int(cfg["ps"]) if cfg is not None else state["accum"]
+        if tuner.converged:
+            log(f"[tune-accum] converged after {tuner.measured} "
+                f"measurements: accum_steps={accum} "
+                f"({tuner.best_latency * 1e3:.1f} ms)")
+        if accum == state["accum"]:
+            return None
+        log(f"[tune-accum] step {step}: accum_steps "
+            f"{state['accum']} → {accum}")
+        state["accum"] = accum
+        return build_step_fn(accum)
+
+    return tuner, state, tune_cb
 
 
 def main():
@@ -26,6 +73,8 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--tune-accum", action="store_true",
+                    help="online-tune accum_steps via Trainer(tune_cb=...)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--workdir", default="/tmp/lm_ckpt")
@@ -40,10 +89,18 @@ def main():
           f"seq={args.seq} batch={args.batch}")
     params = T.init_params(jax.random.key(0), cfg, vocab_multiple=16)
     opt = adamw_init(params)
-    step_fn = jax.jit(make_train_step(
-        cfg, T.DistCtx(),
-        AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps),
-        accum_steps=args.accum))
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
+
+    def build_step_fn(accum: int):
+        return jax.jit(make_train_step(cfg, T.DistCtx(), ocfg,
+                                       accum_steps=accum))
+
+    tuner, tune_state, tune_cb = None, None, None
+    if args.tune_accum:
+        tuner, tune_state, tune_cb = make_accum_tuner(
+            build_step_fn, args.batch)
+        args.accum = tune_state["accum"]
+    step_fn = build_step_fn(args.accum)
     dcfg = LMDataConfig(vocab=cfg.vocab, seq_len=args.seq,
                         global_batch=args.batch, doc_len=args.seq)
 
@@ -57,11 +114,16 @@ def main():
             s += 1
 
     tr = Trainer(step_fn, data_it(), TrainState(params, opt),
-                 workdir=args.workdir, ckpt_every=50, log_every=10)
+                 workdir=args.workdir, ckpt_every=50, log_every=10,
+                 tune_cb=tune_cb)
     tr.maybe_restore()
     losses = tr.run(args.steps)
     print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
           f"stragglers={tr.stragglers} restarts={tr.restarts}")
+    if args.tune_accum:
+        print(f"tuned accum_steps={tune_state['accum']} "
+              f"after {tuner.measured} measurements "
+              f"({tr.retunes} step-fn swaps)")
 
 
 if __name__ == "__main__":

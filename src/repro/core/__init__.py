@@ -1,7 +1,8 @@
 """MGG core: the paper's contribution — pipeline-aware workload management,
 hybrid data placement, pipelined ring aggregation, analytical autotuning,
 and the full-graph GNN models built on top."""
-from .graph import CSRGraph, erdos_renyi, power_law, paper_dataset, PAPER_DATASETS
+from .graph import (CSRGraph, erdos_renyi, power_law, paper_dataset,
+                    PAPER_DATASETS, neighbors_of, khop_in_frontier)
 from .partition import (
     edge_balanced_node_split,
     locality_edge_split,
@@ -18,6 +19,7 @@ from .placement import (
     unpad_table,
     pad_embeddings,
     unpad_embeddings,
+    pgas_rows,
 )
 from .pipeline import (
     mgg_aggregate,
@@ -34,4 +36,5 @@ from .autotune import (
     cross_iteration_optimize,
     WorkloadShape,
 )
-from .gnn import GNNEngine, MODEL_ZOO, masked_cross_entropy
+from .gnn import (GNNEngine, MODEL_ZOO, MODEL_STAGES, masked_cross_entropy,
+                  num_stages, apply_stage, apply_from_stage)

@@ -33,7 +33,8 @@ from .pipeline import mgg_aggregate
 
 __all__ = ["GNNEngine", "gcn_init", "gcn_apply", "gin_init", "gin_apply",
            "sage_init", "sage_apply", "gat_init", "gat_apply",
-           "masked_cross_entropy", "MODEL_ZOO"]
+           "masked_cross_entropy", "MODEL_ZOO",
+           "MODEL_STAGES", "num_stages", "apply_stage", "apply_from_stage"]
 
 
 @dataclasses.dataclass
@@ -134,23 +135,31 @@ def gcn_init(key, in_dim: int, num_classes: int, hidden: int = 16,
     )
 
 
-def gcn_apply(params: Dict, engine: GNNEngine, x: jax.Array) -> jax.Array:
-    """Z = Â relu(... Â relu(Â X W¹) ...) Wᴸ (logits; softmax in the loss).
+def gcn_stage(params: Dict, engine: GNNEngine, h: jax.Array,
+              i: int) -> jax.Array:
+    """Layer ``i`` of the GCN: one aggregation + dense update (+ relu).
 
     Update-before-aggregate when it shrinks the feature dim (D_in > D_out),
     else aggregate-first — the standard dataflow optimization; MGG's kernel
     is agnostic to the order.
     """
-    h = x
     n = len(params["layers"])
-    for i, layer in enumerate(params["layers"]):
-        d_in, d_out = layer["w"].shape
-        if d_in >= d_out:
-            h = engine.gcn_norm_aggregate(_dense(layer, h))
-        else:
-            h = _dense(layer, engine.gcn_norm_aggregate(h))
-        if i < n - 1:
-            h = jax.nn.relu(h)
+    layer = params["layers"][i]
+    d_in, d_out = layer["w"].shape
+    if d_in >= d_out:
+        h = engine.gcn_norm_aggregate(_dense(layer, h))
+    else:
+        h = _dense(layer, engine.gcn_norm_aggregate(h))
+    if i < n - 1:
+        h = jax.nn.relu(h)
+    return h
+
+
+def gcn_apply(params: Dict, engine: GNNEngine, x: jax.Array) -> jax.Array:
+    """Z = Â relu(... Â relu(Â X W¹) ...) Wᴸ (logits; softmax in the loss)."""
+    h = x
+    for i in range(len(params["layers"])):
+        h = gcn_stage(params, engine, h, i)
     return h
 
 
@@ -170,14 +179,23 @@ def gin_init(key, in_dim: int, num_classes: int, hidden: int = 64,
                 head=_dense_init(keys[-1], hidden, num_classes, dtype))
 
 
+def gin_stage(params: Dict, engine: GNNEngine, h: jax.Array,
+              i: int) -> jax.Array:
+    """GIN stage ``i``: layers 0..L-1 are GIN layers, stage L is the head."""
+    if i == len(params["layers"]):
+        return _dense(params["head"], h)
+    layer = params["layers"][i]
+    agg = engine.aggregate(h)  # Σ neighbors (+ self, via self-loop plan)
+    z = agg + layer["eps"] * h  # (1+ε)h + Σ_{u∈N(v)}: self-loop gives 1·h
+    z = jax.nn.relu(_dense(layer["mlp1"], z))
+    return jax.nn.relu(_dense(layer["mlp2"], z))
+
+
 def gin_apply(params: Dict, engine: GNNEngine, x: jax.Array) -> jax.Array:
     h = x
-    for layer in params["layers"]:
-        agg = engine.aggregate(h)  # Σ neighbors (+ self, via self-loop plan)
-        z = agg + layer["eps"] * h  # (1+ε)h + Σ_{u∈N(v)}: self-loop gives 1·h
-        z = jax.nn.relu(_dense(layer["mlp1"], z))
-        h = jax.nn.relu(_dense(layer["mlp2"], z))
-    return _dense(params["head"], h)
+    for i in range(len(params["layers"]) + 1):
+        h = gin_stage(params, engine, h, i)
+    return h
 
 
 def sage_init(key, in_dim: int, num_classes: int, hidden: int = 32,
@@ -191,14 +209,20 @@ def sage_init(key, in_dim: int, num_classes: int, hidden: int = 32,
     ])
 
 
+def sage_stage(params: Dict, engine: GNNEngine, h: jax.Array,
+               i: int) -> jax.Array:
+    layer = params["layers"][i]
+    agg = engine.mean_aggregate(h)
+    h = _dense(layer["self"], h) + _dense(layer["nbr"], agg)
+    if i < len(params["layers"]) - 1:
+        h = jax.nn.relu(h)
+    return h
+
+
 def sage_apply(params: Dict, engine: GNNEngine, x: jax.Array) -> jax.Array:
     h = x
-    n = len(params["layers"])
-    for i, layer in enumerate(params["layers"]):
-        agg = engine.mean_aggregate(h)
-        h = _dense(layer["self"], h) + _dense(layer["nbr"], agg)
-        if i < n - 1:
-            h = jax.nn.relu(h)
+    for i in range(len(params["layers"])):
+        h = sage_stage(params, engine, h, i)
     return h
 
 
@@ -233,22 +257,28 @@ def gat_init(key, in_dim: int, num_classes: int, hidden: int = 32,
     return dict(layers=layers)
 
 
+def gat_stage(params: Dict, engine: GNNEngine, h: jax.Array,
+              i: int) -> jax.Array:
+    layer = params["layers"][i]
+    nh = layer["a_l"].shape[0]                 # heads (static)
+    z = _dense(layer["w"], h)                  # (N, H·hd)
+    npad, total = z.shape
+    hd = total // nh
+    zh = z.reshape(npad, nh, hd)
+    s = jnp.einsum("nhd,hd->nh", zh, layer["a_l"])
+    e = jnp.exp(jax.nn.leaky_relu(s, 0.2))     # source weights (N, H)
+    num = engine.aggregate((zh * e[..., None]).reshape(npad, total))
+    den = engine.aggregate(jnp.repeat(e, hd, axis=1))
+    out = (num / jnp.maximum(den, 1e-9)).astype(h.dtype)
+    if i < len(params["layers"]) - 1:
+        out = jax.nn.elu(out)
+    return out
+
+
 def gat_apply(params: Dict, engine: GNNEngine, x: jax.Array) -> jax.Array:
     h = x
-    n = len(params["layers"])
-    for i, layer in enumerate(params["layers"]):
-        nh = layer["a_l"].shape[0]                 # heads (static)
-        z = _dense(layer["w"], h)                  # (N, H·hd)
-        npad, total = z.shape
-        hd = total // nh
-        zh = z.reshape(npad, nh, hd)
-        s = jnp.einsum("nhd,hd->nh", zh, layer["a_l"])
-        e = jnp.exp(jax.nn.leaky_relu(s, 0.2))     # source weights (N, H)
-        num = engine.aggregate((zh * e[..., None]).reshape(npad, total))
-        den = engine.aggregate(jnp.repeat(e, hd, axis=1))
-        h = (num / jnp.maximum(den, 1e-9)).astype(h.dtype)
-        if i < n - 1:
-            h = jax.nn.elu(h)
+    for i in range(len(params["layers"])):
+        h = gat_stage(params, engine, h, i)
     return h
 
 
@@ -258,3 +288,36 @@ MODEL_ZOO = {
     "sage": (sage_init, sage_apply, dict(hidden=32, num_layers=2)),
     "gat": (gat_init, gat_apply, dict(hidden=16, num_layers=2, heads=4)),
 }
+
+# ---------------------------------------------------------------------------
+# stage-wise access (the serving subsystem resumes inference from a cached
+# layer-1 table; folding the SAME stage functions guarantees bitwise equality
+# between the served logits and the offline *_apply full pass)
+# ---------------------------------------------------------------------------
+
+MODEL_STAGES = {
+    "gcn": gcn_stage,
+    "gin": gin_stage,
+    "sage": sage_stage,
+    "gat": gat_stage,
+}
+
+
+def num_stages(model: str, params: Dict) -> int:
+    """Stages in ``model``'s forward pass (GIN's head dense is a stage)."""
+    n = len(params["layers"])
+    return n + 1 if model == "gin" else n
+
+
+def apply_stage(model: str, params: Dict, engine: GNNEngine, h: jax.Array,
+                i: int) -> jax.Array:
+    return MODEL_STAGES[model](params, engine, h, i)
+
+
+def apply_from_stage(model: str, params: Dict, engine: GNNEngine,
+                     h: jax.Array, start: int) -> jax.Array:
+    """Fold stages ``start..`` — ``apply_from_stage(m, p, e, x, 0)`` is the
+    full forward, identical to ``MODEL_ZOO[m][1](p, e, x)``."""
+    for i in range(start, num_stages(model, params)):
+        h = apply_stage(model, params, engine, h, i)
+    return h

@@ -25,6 +25,8 @@ __all__ = [
     "power_law",
     "paper_dataset",
     "PAPER_DATASETS",
+    "neighbors_of",
+    "khop_in_frontier",
 ]
 
 
@@ -72,12 +74,64 @@ class CSRGraph:
         new_idx[new_ptr[1:] - 1] = np.arange(self.num_nodes, dtype=np.int32)
         return CSRGraph(new_ptr, new_idx, self.num_nodes)
 
+    def transpose(self) -> "CSRGraph":
+        """The reverse graph: row ``u`` lists the nodes ``v`` with an edge
+        ``u → v`` in this graph (i.e. out-neighbors under the in-edge CSR).
+
+        Serving uses this for cache invalidation: a feature change at ``u``
+        dirties the layer-1 aggregates of exactly ``transpose().row(u)``.
+        """
+        dst = np.repeat(np.arange(self.num_nodes, dtype=np.int32),
+                        self.degrees)
+        order = np.argsort(self.indices, kind="stable")
+        counts = np.bincount(self.indices, minlength=self.num_nodes)
+        indptr = np.zeros(self.num_nodes + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return CSRGraph(indptr, dst[order], self.num_nodes)
+
     def to_dense(self) -> np.ndarray:
         """Dense adjacency (tests only — O(N^2)); multi-edges accumulate."""
         a = np.zeros((self.num_nodes, self.num_nodes), dtype=np.float32)
         row_ids = np.repeat(np.arange(self.num_nodes), self.degrees)
         np.add.at(a, (row_ids, self.indices), 1.0)
         return a
+
+
+def neighbors_of(graph: CSRGraph, nodes: np.ndarray) -> np.ndarray:
+    """Concatenated in-neighbor lists of ``nodes`` (duplicates kept).
+
+    Vectorized CSR range gather — the serving frontier extractor calls this
+    per hop, so no per-node Python loop.
+    """
+    nodes = np.asarray(nodes, dtype=np.int64)
+    starts = graph.indptr[nodes]
+    lens = graph.indptr[nodes + 1] - starts
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int32)
+    # flat positions: for each node, starts[i] + (0..lens[i])
+    offs = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(lens) - lens, lens)
+    return graph.indices[np.repeat(starts, lens) + offs]
+
+
+def khop_in_frontier(graph: CSRGraph, seeds: np.ndarray,
+                     k: int) -> np.ndarray:
+    """Sorted node set reachable from ``seeds`` over ≤ ``k`` reverse hops.
+
+    These are exactly the nodes whose embeddings a ``k``-layer GNN reads to
+    predict ``seeds`` (the receptive field): hop 0 is the seeds themselves,
+    hop ``i`` adds the in-neighbors of hop ``i-1``.
+    """
+    frontier = np.unique(np.asarray(seeds, dtype=np.int64))
+    seen = frontier
+    for _ in range(int(k)):
+        nxt = np.unique(neighbors_of(graph, frontier).astype(np.int64))
+        frontier = nxt[~np.isin(nxt, seen)]
+        if frontier.size == 0:
+            break
+        seen = np.union1d(seen, frontier)
+    return seen.astype(np.int64)
 
 
 def _from_edges(dst: np.ndarray, src: np.ndarray, num_nodes: int) -> CSRGraph:

@@ -45,6 +45,7 @@ __all__ = [
     "unpad_table",
     "pad_embeddings",
     "unpad_embeddings",
+    "pgas_rows",
 ]
 
 
@@ -322,6 +323,16 @@ def unpad_table(bounds: np.ndarray, rows: int, x: np.ndarray) -> np.ndarray:
         lb, ub = int(bounds[dev]), int(bounds[dev + 1])
         out[lb:ub] = x[dev * rows : dev * rows + (ub - lb)]
     return out
+
+
+def pgas_rows(plan: AggregationPlan, ids: np.ndarray) -> np.ndarray:
+    """Global node ids → row offsets in the plan's padded PGAS table.
+
+    The serving engine uses this to turn request seed ids into gather rows
+    of the (sharded) logits/embedding tables.
+    """
+    return _padded_offset(plan.bounds, plan.rows_per_dev,
+                          np.asarray(ids, dtype=np.int64))
 
 
 def pad_embeddings(plan: AggregationPlan, x: np.ndarray) -> np.ndarray:

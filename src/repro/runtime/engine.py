@@ -196,11 +196,20 @@ class DynamicGNNEngine:
         return self._set_config(nxt)
 
     def retune(self, graph: Optional[CSRGraph] = None,
-               d_feat: Optional[int] = None) -> bool:
+               d_feat: Optional[int] = None, *,
+               force: bool = False) -> bool:
         """Drift entry point: the workload changed (graph grew, features
         resized).  Recomputes the WorkloadShape; if it drifted past the
         tuner's threshold the search re-opens (warm-started from the old
-        best) and the engine rebuilds against the new graph."""
+        best) and the engine rebuilds against the new graph.
+
+        ``force=True`` re-opens the search even when the WorkloadShape is
+        unchanged.  This is the *traffic*-drift path: a serving frontend
+        (see repro.serve.gnn) observes request statistics the shape cannot
+        see — hot-set rotations, burst load — and the measured latency
+        surface under the new traffic is stale evidence either way, so the
+        caller's drift signal overrides the shape comparison.
+        """
         if graph is not None:
             self.graph = graph
         if d_feat is None:
@@ -209,6 +218,9 @@ class DynamicGNNEngine:
         shape = WorkloadShape.from_graph(
             g, self.mesh.shape[self.axis_name], int(d_feat))
         reopened = self.tuner.observe_shape(shape)
+        if force and not reopened:
+            self.tuner.reopen()
+            reopened = True
         if reopened:
             self.shape = shape
             self.committed = False

@@ -164,6 +164,16 @@ class OnlineTuner:
                             trajectory=list(self.trajectory),
                             table=dict(self.table))
 
+    def reopen(self) -> None:
+        """Re-open the search, warm-started from the best config seen.
+
+        Owns the reopen bookkeeping for every drift path — shape drift
+        (:meth:`observe_shape`) and caller-forced traffic drift
+        (``DynamicGNNEngine.retune(force=True)``) alike.
+        """
+        self.reopens += 1
+        self.reset(warm_start=self.best)
+
     def observe_shape(self, shape: WorkloadShape) -> bool:
         """Report the live workload shape; True ⇔ drift re-opened the search."""
         if self._shape is None:
@@ -172,8 +182,7 @@ class OnlineTuner:
         if shape_drift(self._shape, shape) <= self.drift_threshold:
             return False
         self._shape = shape
-        self.reopens += 1
-        self.reset(warm_start=self.best)
+        self.reopen()
         return True
 
     # -- the search as a generator (identical control flow to the offline

@@ -1,2 +1,25 @@
-"""Serving substrate."""
+"""Serving substrate: LM token decoding + online GNN inference.
+
+* :mod:`repro.serve.engine` — continuous-batching LM generation
+  (``ServeEngine``);
+* :mod:`repro.serve.gnn` — online GNN node-prediction serving with
+  traffic-driven re-tuning (``GNNServeEngine``, see docs/serving.md);
+* :mod:`repro.serve.stats` — sliding-window request statistics + drift
+  signal (``WorkloadStats``);
+* :mod:`repro.serve.hotcache` — MG-GCN-style layer-1 aggregate cache
+  (``HotNodeCache``);
+* :mod:`repro.serve.traffic` — Zipfian phase-shifted traffic generator
+  (``ZipfTraffic``).
+"""
 from .engine import ServeEngine, GenerationResult
+from .gnn import GNNServeEngine, ServeResult, run_trace
+from .hotcache import HotNodeCache
+from .stats import TrafficSnapshot, WorkloadStats
+from .traffic import TrafficEvent, TrafficPhase, ZipfTraffic
+
+__all__ = [
+    "ServeEngine", "GenerationResult",
+    "GNNServeEngine", "ServeResult", "run_trace",
+    "HotNodeCache", "TrafficSnapshot", "WorkloadStats",
+    "TrafficEvent", "TrafficPhase", "ZipfTraffic",
+]

@@ -1,14 +1,22 @@
 """Batched serving engine: prefill + decode over fixed batch slots.
 
-Wave-scheduled continuous batching: requests are admitted into a fixed
-number of batch slots; one jitted ``decode_step`` advances every active
-slot; finished slots (EOS / budget) are frozen via the active mask and
-refilled from the queue at the next wave boundary.  Greedy or temperature
-sampling.  This is the serving loop the ``decode_*`` dry-run cells lower.
+Continuous batching: requests are admitted into a fixed number of batch
+slots; one jitted ``decode_step`` advances every active slot; a slot that
+finishes (EOS / budget) is refilled from the queue **at the next step**,
+not at a wave boundary — the decode cache stays live and a long request
+never blocks admission of short ones behind it (no head-of-line barrier).
+
+Each admission prefills alone (batch 1, exact prompt length — no left-pad
+tokens polluting attention) and its cache is scattered into the shared
+decode cache at the slot index, so per-slot results are identical to
+running that prompt solo.  Greedy or temperature sampling; temperature
+sampling is vectorized over slots via the Gumbel-max trick (one argmax,
+no per-row ``rng.choice`` loop).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -44,55 +52,89 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, pos, c: transformer.decode_step(
                 p, cfg, t, pos, c, ctx=self.ctx))
+        # scatter one prefilled batch-1 cache into slot j of the shared
+        # decode cache (every cache leaf carries batch at axis 1, under the
+        # layer/group stack axis)
+        self._scatter = jax.jit(
+            lambda cache, c1, j: jax.tree.map(
+                lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), j, axis=1), cache, c1))
 
     def _sample(self, logits: np.ndarray, temperature: float,
                 rng: np.random.Generator) -> np.ndarray:
+        """Vectorized over rows: argmax (greedy) or Gumbel-max (categorical
+        at ``temperature``) — no per-row rng.choice loop."""
         if temperature <= 0:
             return logits.argmax(-1).astype(np.int32)
-        z = logits / temperature
-        z = z - z.max(-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(-1, keepdims=True)
-        return np.array([rng.choice(p.shape[-1], p=p[i])
-                         for i in range(p.shape[0])], np.int32)
+        z = logits.astype(np.float64) / temperature
+        g = rng.gumbel(size=z.shape)
+        return (z + g).argmax(-1).astype(np.int32)
 
     def generate(self, prompts: List[np.ndarray], *, max_new: int = 32,
                  temperature: float = 0.0, seed: int = 0
                  ) -> List[GenerationResult]:
-        """Wave-batched generation over all prompts."""
+        """Continuously batched generation over all prompts."""
         rng = np.random.default_rng(seed)
         results: List[Optional[GenerationResult]] = [None] * len(prompts)
-        queue = list(range(len(prompts)))
-        while queue:
-            wave, queue = queue[: self.B], queue[self.B :]
-            plen = max(len(prompts[i]) for i in wave)
-            b = len(wave)
-            toks = np.zeros((b, plen), np.int32)
-            for j, i in enumerate(wave):
-                toks[j, -len(prompts[i]):] = prompts[i]  # left-pad
-            cache = transformer.init_cache(
-                self.cfg, b, min(self.max_seq, plen + max_new),
-                dtype=jnp.float32)
-            logits, cache = self._prefill(
-                self.params, jnp.asarray(toks), cache)
-            out_tokens = [[] for _ in wave]
-            active = np.ones(b, bool)
-            cur = self._sample(np.asarray(logits), temperature, rng)
-            pos = np.full((b,), plen, np.int32)
-            for step in range(max_new):
-                for j in range(b):
-                    if active[j]:
-                        out_tokens[j].append(int(cur[j]))
-                        if self.eos_id is not None and cur[j] == self.eos_id:
-                            active[j] = False
-                if not active.any():
-                    break
-                logits, cache = self._decode(
-                    self.params, jnp.asarray(cur), jnp.asarray(pos), cache)
-                cur = self._sample(np.asarray(logits), temperature, rng)
-                pos = pos + 1
-            for j, i in enumerate(wave):
-                results[i] = GenerationResult(
-                    tokens=out_tokens[j], prompt_len=len(prompts[i]),
-                    steps=len(out_tokens[j]))
+        if not prompts:
+            return []
+        queue = deque(range(len(prompts)))
+        L = min(self.max_seq, max(len(p) for p in prompts) + max_new)
+        cache = transformer.init_cache(self.cfg, self.B, L,
+                                       dtype=jnp.float32)
+        slot_req = [-1] * self.B                 # request index per slot
+        out_tokens: List[List[int]] = [[] for _ in range(self.B)]
+        cur = np.zeros(self.B, np.int32)          # next token to emit/feed
+        pos = np.zeros(self.B, np.int32)
+        active = np.zeros(self.B, bool)
+
+        def finalize(j: int) -> None:
+            i = slot_req[j]
+            results[i] = GenerationResult(
+                tokens=out_tokens[j], prompt_len=len(prompts[i]),
+                steps=len(out_tokens[j]))
+            slot_req[j] = -1
+            active[j] = False
+            cur[j] = 0
+            pos[j] = 0
+
+        while queue or active.any():
+            # -- refill every free slot from the queue (per step, not per
+            #    wave: finished slots re-admit immediately) ----------------
+            for j in range(self.B):
+                if slot_req[j] >= 0 or not queue:
+                    continue
+                i = queue.popleft()
+                toks = np.asarray(prompts[i], np.int32)[None, :]
+                c1 = transformer.init_cache(self.cfg, 1, L,
+                                            dtype=jnp.float32)
+                logits1, c1 = self._prefill(self.params, jnp.asarray(toks),
+                                            c1)
+                cache = self._scatter(cache, c1, j)
+                cur[j] = self._sample(np.asarray(logits1), temperature,
+                                      rng)[0]
+                pos[j] = toks.shape[1]
+                slot_req[j] = i
+                out_tokens[j] = []
+                active[j] = True
+
+            # -- emit the sampled token for every active slot; finished
+            #    slots free up for the refill at the top of the next step --
+            for j in range(self.B):
+                if not active[j]:
+                    continue
+                out_tokens[j].append(int(cur[j]))
+                if ((self.eos_id is not None and cur[j] == self.eos_id)
+                        or len(out_tokens[j]) >= max_new):
+                    finalize(j)
+            if not active.any():
+                continue  # refill (or exit) without a wasted decode
+
+            # -- one decode step advances every active slot ----------------
+            logits, cache = self._decode(
+                self.params, jnp.asarray(cur),
+                jnp.asarray(np.minimum(pos, L - 1)), cache)
+            nxt = self._sample(np.asarray(logits), temperature, rng)
+            cur = np.where(active, nxt, cur).astype(np.int32)
+            pos = pos + active.astype(np.int32)
         return results  # type: ignore[return-value]

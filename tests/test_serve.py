@@ -35,3 +35,43 @@ def test_wave_batching_multiple_prompts():
     assert len(res) == 3
     assert all(len(r.tokens) == 4 for r in res)
     assert all(0 <= t for r in res for t in r.tokens)
+
+
+def test_continuous_batching_matches_solo_runs():
+    """Per-slot prefill + cache scatter keeps slots isolated: batching 5
+    prompts through 2 slots must reproduce each prompt's solo generation."""
+    cfg = dataclasses.replace(configs.get_smoke_config("codeqwen1.5-7b"),
+                              compute_dtype="float32", remat=False)
+    params = T.init_params(jax.random.key(2), cfg, vocab_multiple=4)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab, size=rng.integers(2, 7))
+               .astype(np.int32) for _ in range(5)]
+    batched = eng.generate(prompts, max_new=6)
+    for i, p in enumerate(prompts):
+        solo = eng.generate([p], max_new=6)[0]
+        assert batched[i].tokens == solo.tokens, (i, batched[i], solo)
+
+
+def test_eos_frees_slot_for_refill():
+    """A slot finishing on EOS must hand its slot to the next queued
+    request (continuous refill), and the EOS token terminates its output."""
+    cfg = dataclasses.replace(configs.get_smoke_config("codeqwen1.5-7b"),
+                              compute_dtype="float32", remat=False)
+    params = T.init_params(jax.random.key(4), cfg, vocab_multiple=4)
+    probe = ServeEngine(params, cfg, batch_slots=1, max_seq=64)
+    prompt = np.array([5, 2, 7], np.int32)
+    free_run = probe.generate([prompt], max_new=6)[0]
+    # EOS := the LAST first-occurrence in the stream, so truncation happens
+    # mid-stream at a known position (cut = that value's first appearance)
+    cut = max(i for i, t in enumerate(free_run.tokens)
+              if t not in free_run.tokens[:i])
+    eos = free_run.tokens[cut]
+    assert cut > 0  # the run must actually exercise mid-stream truncation
+
+    eng = ServeEngine(params, cfg, batch_slots=1, max_seq=64, eos_id=eos)
+    prompts = [prompt, np.array([1, 3], np.int32)]
+    res = eng.generate(prompts, max_new=6)
+    assert res[0].tokens == free_run.tokens[:cut + 1]  # truncated at EOS
+    assert res[0].tokens[-1] == eos
+    assert len(res[1].tokens) >= 1                    # refilled + served

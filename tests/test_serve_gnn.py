@@ -1,0 +1,250 @@
+"""repro.serve.gnn: frontier extraction, layer-1 cache, drift → retune,
+and served-vs-offline equality (single device; the 8-device path runs via
+tests/multidev/serve_gnn.py through test_system.py)."""
+import numpy as np
+import jax
+import pytest
+
+import repro.core as C
+from repro.dist import flat_ring_mesh
+from repro.runtime import DynamicGNNEngine, ProfileConfig
+from repro.serve import (GNNServeEngine, HotNodeCache, TrafficPhase,
+                         WorkloadStats, ZipfTraffic, run_trace)
+
+
+def _reference_khop(g, seeds, k):
+    """Naive per-node BFS over in-edges (the oracle for khop_in_frontier)."""
+    seen = set(int(s) for s in seeds)
+    frontier = set(seen)
+    for _ in range(k):
+        nxt = set()
+        for v in frontier:
+            nxt.update(int(u) for u in g.row(v))
+        frontier = nxt - seen
+        seen |= frontier
+    return np.array(sorted(seen), dtype=np.int64)
+
+
+def _setup(model="gcn", n=240, n_dev=1, seed=0, dynamic=False):
+    g = C.power_law(n, avg_degree=6.0, locality=0.3, seed=seed)
+    D, ncls = 12, 5
+    x = np.random.default_rng(seed).normal(
+        size=(g.num_nodes, D)).astype(np.float32)
+    mesh = flat_ring_mesh(n_dev)
+    if dynamic:
+        eng = DynamicGNNEngine.build(
+            g, mesh, d_feat=D, ps_space=(4, 8), dist_space=(1,),
+            pb_space=(1,), window=ProfileConfig(warmup=1, iters=1))
+    else:
+        eng = C.GNNEngine.build(g, mesh, ps=8, dist=1)
+    init, apply, kw = C.MODEL_ZOO[model]
+    params = init(jax.random.key(seed), D, ncls, **kw)
+    return g, x, eng, params, apply
+
+
+# ---------------------------------------------------------------------------
+# frontier extraction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [0, 1, 2, 3])
+def test_khop_frontier_matches_reference(k):
+    g = C.power_law(150, avg_degree=5.0, seed=3).with_self_loops()
+    rng = np.random.default_rng(k)
+    seeds = rng.choice(g.num_nodes, size=4, replace=False)
+    got = C.khop_in_frontier(g, seeds, k)
+    ref = _reference_khop(g, seeds, k)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_neighbors_of_concatenates_rows():
+    g = C.power_law(80, avg_degree=4.0, seed=1)
+    nodes = np.array([0, 17, 42, 17])
+    got = C.neighbors_of(g, nodes)
+    ref = np.concatenate([g.row(v) for v in nodes]) if len(nodes) else []
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_transpose_is_reverse_graph():
+    g = C.power_law(60, avg_degree=4.0, seed=2)
+    rev = g.transpose()
+    np.testing.assert_allclose(rev.to_dense(), g.to_dense().T)
+
+
+# ---------------------------------------------------------------------------
+# hot-node cache
+# ---------------------------------------------------------------------------
+
+def test_hotcache_hit_miss_and_invalidate():
+    cache = HotNodeCache(10)
+    assert cache.lookup(np.array([1, 2, 3])) == 3   # cold: all miss
+    cache.store(object())
+    assert cache.lookup(np.array([1, 2])) == 0      # warm: all hit
+    assert cache.ready(np.array([1, 2]))
+    n = cache.invalidate(np.array([2, 5]))
+    assert n == 2
+    assert not cache.ready(np.array([1, 2]))
+    assert cache.ready(np.array([1, 3]))
+    assert cache.lookup(np.array([2])) == 1
+    assert 0.0 < cache.hit_rate < 1.0
+
+
+def test_hotcache_capacity_keeps_only_hot_nodes():
+    cache = HotNodeCache(10, capacity=2)
+    cache.store(object(), hot_nodes=[7, 3, 5])
+    assert cache.ready(np.array([7, 3]))
+    assert not cache.ready(np.array([5]))
+
+
+def test_serving_cache_invalidation_tracks_reverse_edges():
+    g, x, eng, params, apply = _setup()
+    srv = GNNServeEngine(eng, params, "gcn", x, g, slots=4)
+    srv.submit(np.array([1, 2]))
+    srv.step()                                       # full pass → cache warm
+    assert srv.cache.valid.all()
+    node = 5
+    dirty = srv.g_full.transpose().row(node)
+    n_inv = srv.update_features(node, np.ones(x.shape[1], np.float32))
+    assert n_inv == len(dirty)
+    assert not srv.cache.valid[dirty].any()
+    mask = np.ones(g.num_nodes, bool)
+    mask[dirty] = False
+    assert srv.cache.valid[mask].all()               # everyone else untouched
+
+
+# ---------------------------------------------------------------------------
+# served outputs == offline full-graph inference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["gcn", "gin", "sage"])
+def test_served_logits_bitwise_match_offline(model):
+    g, x, eng, params, apply = _setup(model=model)
+    srv = GNNServeEngine(eng, params, model, x, g, slots=4)
+    traffic = ZipfTraffic(g.num_nodes, x.shape[1], [
+        TrafficPhase(requests=20, alpha=1.2, seeds_max=3)], seed=7)
+    results = run_trace(srv, traffic)
+    assert len(results) == 20 and srv.report()["dropped"] == 0
+    assert any(r.cached for r in results)            # cache path exercised
+    assert srv.cache.hit_rate > 0
+    # offline reference: the jitted full-graph forward (jit, like serving)
+    xp = eng.shard(eng.pad(srv.x))
+    offline = C.unpad_embeddings(
+        eng.plan, np.asarray(jax.jit(lambda p, t: apply(p, eng, t))(
+            params, xp)))
+    for r in results:
+        np.testing.assert_array_equal(r.logits, offline[r.seeds])
+
+
+def test_deep_feature_update_not_served_stale():
+    """Cached serving must gate on the (k-1)-hop frontier: with a 3-layer
+    GCN, a feature update 2 reverse hops from the seed dirties h₁ rows
+    outside the seed's 1-hop frontier — the next request must NOT be
+    served from the cache with stale logits."""
+    g = C.power_law(240, avg_degree=6.0, locality=0.3, seed=0)
+    D, ncls = 12, 5
+    x = np.random.default_rng(0).normal(
+        size=(g.num_nodes, D)).astype(np.float32)
+    eng = C.GNNEngine.build(g, flat_ring_mesh(1), ps=8, dist=1)
+    params = C.MODEL_ZOO["gcn"][0](jax.random.key(0), D, ncls,
+                                   hidden=16, num_layers=3)
+    srv = GNNServeEngine(eng, params, "gcn", x, g, slots=4)
+    seed = 3
+    srv.submit(np.array([seed]))
+    srv.step()                                       # warm the cache
+    # a node at exactly 2 hops (outside the 1-hop frontier)
+    f1 = C.khop_in_frontier(srv.g_full, np.array([seed]), 1)
+    f2 = C.khop_in_frontier(srv.g_full, np.array([seed]), 2)
+    deep = np.setdiff1d(f2, f1)
+    if deep.size == 0:
+        pytest.skip("graph too dense: no strictly-2-hop node")
+    srv.update_features(int(deep[0]), 7.0 * np.ones(D, np.float32))
+    srv.submit(np.array([seed]))
+    (r,) = srv.step()
+    xp = eng.shard(eng.pad(srv.x))
+    apply = C.MODEL_ZOO["gcn"][1]
+    offline = C.unpad_embeddings(
+        eng.plan, np.asarray(jax.jit(lambda p, t: apply(p, eng, t))(
+            params, xp)))
+    np.testing.assert_array_equal(r.logits, offline[[seed]])
+
+
+def test_feature_update_changes_served_logits_consistently():
+    g, x, eng, params, apply = _setup()
+    srv = GNNServeEngine(eng, params, "gcn", x, g, slots=4)
+    seeds = np.array([3, 4])
+    srv.submit(seeds)
+    before = srv.step()[0].logits
+    # update a node inside the seeds' receptive field
+    target = int(C.khop_in_frontier(srv.g_full, seeds, 2)[0])
+    srv.update_features(target, 5.0 * np.ones(x.shape[1], np.float32))
+    srv.submit(seeds)
+    after = srv.step()[0].logits
+    assert not np.array_equal(before, after)
+    xp = eng.shard(eng.pad(srv.x))
+    offline = C.unpad_embeddings(
+        eng.plan, np.asarray(jax.jit(lambda p, t: apply(p, eng, t))(
+            params, xp)))
+    np.testing.assert_array_equal(after, offline[seeds])
+
+
+# ---------------------------------------------------------------------------
+# stats + drift → retune
+# ---------------------------------------------------------------------------
+
+def test_workload_stats_rate_and_drift():
+    s = WorkloadStats(window=8, top_k=4)
+    for i in range(8):
+        s.record(t=i * 0.1, seeds=np.array([1, 2, 3]), frontier_size=20)
+    base = s.snapshot()
+    assert base.rate == pytest.approx(10.0)
+    assert base.mean_frontier == pytest.approx(20.0)
+    assert base.hot_nodes == (1, 2, 3)
+    assert WorkloadStats.drift(base, base) == 0.0
+    # rotate the hot set: drift must hit 1 - overlap = 1
+    for i in range(8, 16):
+        s.record(t=i * 0.1, seeds=np.array([7, 8, 9]), frontier_size=20)
+    rot = s.snapshot()
+    assert WorkloadStats.drift(base, rot) == pytest.approx(1.0)
+    # burst: 4x the rate on the same nodes
+    s2 = WorkloadStats(window=8, top_k=4)
+    for i in range(8):
+        s2.record(t=i * 0.025, seeds=np.array([1, 2, 3]), frontier_size=20)
+    burst = s2.snapshot()
+    assert WorkloadStats.drift(base, burst) == pytest.approx(3.0)
+
+
+def test_traffic_drift_triggers_forced_retune():
+    g, x, eng, params, apply = _setup(dynamic=True)
+    srv = GNNServeEngine(eng, params, "gcn", x, g, slots=4,
+                         stats=WorkloadStats(window=8, top_k=8),
+                         drift_threshold=0.5, check_every=2, min_records=4)
+    phases = [
+        TrafficPhase(requests=40, alpha=1.4, rate=100.0, seeds_max=3),
+        TrafficPhase(requests=40, alpha=1.4, rate=400.0, rotate=True,
+                     seeds_max=3),
+    ]
+    traffic = ZipfTraffic(g.num_nodes, x.shape[1], phases, seed=11)
+    results = run_trace(srv, traffic)
+    rep = srv.report()
+    assert rep["dropped"] == 0 and len(results) == 80
+    assert rep["retunes"] >= 1                        # drift re-opened search
+    assert eng.tuner.reopens >= 1
+    assert rep["cache_hit_rate"] > 0
+    # serving survived the retune: post-drift answers equal offline under
+    # the FINAL committed config (allclose: earlier configs reorder sums)
+    xp = eng.shard(eng.pad(srv.x))
+    offline = C.unpad_embeddings(
+        eng.plan, np.asarray(jax.jit(lambda p, t: apply(p, eng, t))(
+            params, xp)))
+    tail = results[-5:]
+    for r in tail:
+        np.testing.assert_allclose(r.logits, offline[r.seeds],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_oversized_request_rejected_at_admission():
+    g, x, eng, params, _ = _setup()
+    srv = GNNServeEngine(eng, params, "gcn", x, g, slots=2)
+    with pytest.raises(ValueError):
+        srv.submit(np.array([1, 2, 3]))
+    with pytest.raises(ValueError):
+        srv.submit(np.array([g.num_nodes + 5]))

@@ -33,6 +33,7 @@ def test_dryrun_machinery_small_mesh():
     "elastic_restore.py",    # 2-dev checkpoint → 8-dev mesh restore
     "collectives_property.py",  # property sweep over 1/2/4/8-dev meshes
     "ring_tp.py",            # ring-pipelined TP matmuls == SPMD defaults
+    "serve_gnn.py",          # 8-dev serving: drift → retune, cache, equality
 ])
 def test_multidevice_subprocess(script):
     """8 fake CPU devices in a fresh process (XLA flag set pre-import) —
