@@ -12,10 +12,14 @@ graph — steady, hot-set rotation, burst — served twice:
   re-optimizes on live micro-batch times.
 
 Reported per mode: p50/p99 request latency, layer-1 cache hit rate,
-retunes fired, dropped requests (must be 0).  ``--smoke`` (wired into
+retunes fired, dropped requests (must be 0).  GIN and GAT serving rows
+(``fig11_serving_gin`` / ``fig11_serving_gat``) run the same trace under
+a static config alongside the GCN pair, so every MODEL_STAGES family is
+exercised by the serving path.  ``--smoke`` (wired into
 ``benchmarks/run.py --smoke`` → CI) shrinks the graph/traffic and
 *asserts* the acceptance criteria: ≥ 1 drift retune, hit rate > 0, no
-drops, and served logits equal to the offline full-graph forward.
+drops, and served logits equal to the offline full-graph forward — for
+GIN/GAT too.
 """
 from __future__ import annotations
 
@@ -45,9 +49,9 @@ def _phases(n_req: int) -> list:
     ]
 
 
-def _serve(g, x, params, apply_fn, engine, *, smoke: bool):
+def _serve(g, x, params, apply_fn, engine, *, smoke: bool, model: str = "gcn"):
     srv = GNNServeEngine(
-        engine, params, "gcn", x, g, slots=8,
+        engine, params, model, x, g, slots=8,
         stats=WorkloadStats(window=8 if smoke else 24, top_k=8),
         drift_threshold=0.5, check_every=2 if smoke else 4,
         min_records=4)
@@ -111,6 +115,26 @@ def run(as_json: bool, smoke: bool = False) -> list:
                  f"retunes={rep_d['retunes']};"
                  f"rebuilds={rep_d['rebuilds']};"
                  f"config={rep_d['config']}")))
+
+    # GIN / GAT serving alongside GCN (static config; every MODEL_STAGES
+    # family flows through the serving path + offline-equality check)
+    for model in ("gin", "gat"):
+        init_m, apply_m, kw_m = C.MODEL_ZOO[model]
+        params_m = init_m(jax.random.key(1), d, 8, **kw_m)
+        eng_m = C.GNNEngine.build(g, mesh, ps=min(spaces["ps_space"]),
+                                  dist=1)
+        _res_m, lat_m, rep_m = _serve(g, x, params_m, apply_m, eng_m,
+                                      smoke=smoke, model=model)
+        rows.append(dict(
+            name=f"fig11_serving_{model}",
+            us_per_call=round(float(np.percentile(lat_m, 50)) * 1e6, 1),
+            derived=(f"p99_us={np.percentile(lat_m, 99) * 1e6:.0f};"
+                     f"hit_rate={rep_m['cache_hit_rate']};"
+                     f"dropped={rep_m['dropped']};"
+                     f"config={rep_m['config']}")))
+        if smoke:
+            assert rep_m["dropped"] == 0, (model, rep_m)
+            assert rep_m["cache_hit_rate"] > 0, (model, rep_m)
 
     if smoke:
         assert rep_d["retunes"] >= 1, \

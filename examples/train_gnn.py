@@ -3,15 +3,20 @@
 paper's §4 intelligent runtime:
 
     PYTHONPATH=src python examples/train_gnn.py [--steps 100] [--model gin]
-        [--dynamic-tune] [--tune-cache /tmp/mgg_tuned.json]
+        [--dynamic-tune] [--per-layer-tune] [--fuse-update]
+        [--tune-cache /tmp/mgg_tuned.json]
 
 ``--dynamic-tune`` wraps the engine in repro.runtime.DynamicGNNEngine:
 every training iteration's wall time feeds the online ps → dist → wpb
 search, and whenever the tuner moves, the aggregation plan is rebuilt and
 the step re-jitted — model parameters never change, so the loss curve is
 the same one the static engine would produce config-for-config.
-``--tune-cache`` persists the converged config keyed by workload shape +
-hardware, so the next run warm-starts from it.
+``--per-layer-tune`` lifts the search to one config per GNN layer
+(PerLayerTuner over the model's aggregation widths, warm-started from the
+global optimum); ``--fuse-update`` runs each layer's dense ·W update
+inside the ring (fused with the tile transfers).  ``--tune-cache``
+persists the converged config(s) keyed by workload shape + hardware, so
+the next run warm-starts from it.
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -35,14 +40,21 @@ from repro.train import checkpoint as ck
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--model", default="gcn", choices=["gcn", "gin", "sage"])
+    ap.add_argument("--model", default="gcn",
+                    choices=["gcn", "gin", "sage", "gat"])
     ap.add_argument("--dataset", default="products")
     ap.add_argument("--workdir", default="")
     ap.add_argument("--dynamic-tune", action="store_true",
                     help="online cross-iteration (ps, dist, pb) tuning")
+    ap.add_argument("--per-layer-tune", action="store_true",
+                    help="tune one (ps, dist, pb) per GNN layer "
+                         "(implies --dynamic-tune)")
+    ap.add_argument("--fuse-update", action="store_true",
+                    help="run the dense ·W update inside the ring")
     ap.add_argument("--tune-cache", default="",
                     help="JSON path persisting tuned configs across runs")
     args = ap.parse_args()
+    args.dynamic_tune = args.dynamic_tune or args.per_layer_tune
 
     g, meta = C.paper_dataset(args.dataset, scale=0.5)
     # demo-friendly label space (the full #Class makes a 100-step CPU demo
@@ -52,20 +64,26 @@ def main():
     x, y, train_mask = graph_features(g.num_nodes, dim, ncls, seed=0)
 
     mesh = flat_ring_mesh(len(jax.devices()))
+    init, apply, kw = C.MODEL_ZOO[args.model]
+    params = init(jax.random.key(0), dim, ncls, **kw)
+
     if args.dynamic_tune:
+        layer_dims = C.aggregation_widths(args.model, params,
+                                          fused=args.fuse_update) \
+            if args.per_layer_tune else None
         eng = DynamicGNNEngine.build(
             g, mesh, d_feat=dim,
             ps_space=(1, 2, 4, 8, 16, 32), dist_space=(1, 2, 4),
             pb_space=(1, 2, 4),
             window=ProfileConfig(warmup=1, iters=2),
             cache_path=args.tune_cache or None,
+            fuse_update=args.fuse_update,
+            layer_dims=layer_dims,
             log_fn=print,
         )
     else:
-        eng = C.GNNEngine.build(g, mesh, ps=16, dist=2)
-
-    init, apply, kw = C.MODEL_ZOO[args.model]
-    params = init(jax.random.key(0), dim, ncls, **kw)
+        eng = C.GNNEngine.build(g, mesh, ps=16, dist=2,
+                                fuse_update=args.fuse_update)
     opt = adamw_init(params)
     ocfg = AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=args.steps,
                        weight_decay=0.0)

@@ -12,7 +12,12 @@ from .partition import (
 )
 from .placement import (
     AggregationPlan,
+    SharedPartition,
+    LayerPlan,
+    build_partition,
+    plan_from_partition,
     build_plan,
+    build_layer_plans,
     build_bulk_plan,
     build_fetch_plan,
     pad_table,
@@ -35,6 +40,8 @@ from .autotune import (
     estimate_latency,
     cross_iteration_optimize,
     WorkloadShape,
+    layer_workload_shapes,
 )
 from .gnn import (GNNEngine, MODEL_ZOO, MODEL_STAGES, masked_cross_entropy,
-                  num_stages, apply_stage, apply_from_stage)
+                  num_stages, apply_stage, apply_from_stage,
+                  aggregation_widths)

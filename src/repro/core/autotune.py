@@ -39,6 +39,8 @@ __all__ = [
     "TPU_V5E",
     "A100_NVSWITCH",
     "estimate_latency",
+    "estimate_pipeline_latency",
+    "layer_workload_shapes",
     "vmem_bytes",
     "cross_iteration_optimize",
     "SearchResult",
@@ -111,6 +113,25 @@ class WorkloadShape:
         rows = int((bounds[1:] - bounds[:-1]).max())
         return WorkloadShape(n_dev, d_feat, rows, le, re, itemsize)
 
+    def with_d_feat(self, d_feat: int) -> "WorkloadShape":
+        """Same graph/partition statistics at another feature width."""
+        return dataclasses.replace(self, d_feat=int(d_feat))
+
+
+def layer_workload_shapes(
+    graph: CSRGraph, n_dev: int, dims: "List[int]", itemsize: int = 4,
+) -> "List[WorkloadShape]":
+    """Per-layer workload shapes sharing ONE partition-statistics pass.
+
+    GNN layers differ only in feature width ``D`` (the topology — and hence
+    the edge/row statistics — is shared), so the per-layer latency model is
+    the same :func:`estimate_latency` evaluated at each layer's ``D``.
+    """
+    if not dims:
+        raise ValueError("need at least one layer width")
+    base = WorkloadShape.from_graph(graph, n_dev, int(dims[0]), itemsize)
+    return [base.with_d_feat(d) for d in dims]
+
 
 def estimate_latency(
     w: WorkloadShape,
@@ -119,6 +140,8 @@ def estimate_latency(
     pb: int,
     hw: HardwareSpec = TPU_V5E,
     interleave: bool = True,
+    d_out: Optional[int] = None,
+    fuse: bool = False,
 ) -> float:
     """Modeled per-aggregation latency (seconds) for one device.
 
@@ -130,10 +153,21 @@ def estimate_latency(
     Fig. 7a vs 7b).  Padding inefficiency from partition granularity is
     modeled by rounding edges up to multiples of ps per node — the same
     waste the mask slots represent at runtime.
+
+    ``d_out`` adds the layer's dense ``·W`` update phase
+    (``2 · rows · D · D_out`` FLOPs per device): serial after the ring when
+    ``fuse=False`` (the cuBLAS-after-aggregation dataflow), or folded into
+    each ring step's compute when ``fuse=True`` — which is exactly when
+    fusion wins: the MXU term hides under ``max(comm, comp)`` whenever the
+    step is transfer-bound.  ``d_out=None`` models aggregation only
+    (backward-compatible).
     """
+    t_update = 0.0
+    if d_out is not None:
+        t_update = 2.0 * w.rows_per_dev * w.d_feat * d_out / hw.peak_flops
     if w.n_dev == 1:
         bytes_local = 2 * w.local_edges_max * w.d_feat * w.itemsize
-        return bytes_local / hw.hbm_bw
+        return bytes_local / hw.hbm_bw + t_update
     tile_rows = -(-w.rows_per_dev // dist)
     steps = (w.n_dev - 1) * dist
     tile_bytes = tile_rows * w.d_feat * w.itemsize
@@ -149,10 +183,44 @@ def estimate_latency(
     # spills VMEM.  Modeled as a mild efficiency curve peaking at pb where the
     # block fits VMEM (hard constraint checked by the caller).
     eff = min(1.0, 0.55 + 0.15 * np.log2(max(1, pb)))
+    t_step_update = t_update / steps if fuse else 0.0
     if interleave:
-        per_step = max(t_comm, (t_remote + t_local) / eff)
-        return steps * per_step + t_comm  # + pipeline fill
-    return lc_bytes / hw.hbm_bw / eff + steps * (t_comm + t_remote / eff)
+        per_step = max(t_comm, (t_remote + t_local) / eff + t_step_update)
+        t = steps * per_step + t_comm  # + pipeline fill
+    else:
+        t = lc_bytes / hw.hbm_bw / eff \
+            + steps * (t_comm + t_remote / eff + t_step_update)
+    return t if fuse else t + t_update
+
+
+def estimate_pipeline_latency(
+    shapes: "List[WorkloadShape]",
+    configs: "List[Dict[str, int]]",
+    hw: HardwareSpec = TPU_V5E,
+    interleave: bool = True,
+    d_outs: Optional["List[Optional[int]]"] = None,
+    fuse: bool = False,
+) -> float:
+    """Whole-forward model: Σ over layers of the per-layer estimate.
+
+    ``shapes[i]`` carries layer ``i``'s feature width (see
+    :func:`layer_workload_shapes`); ``configs[i]`` its ``(ps, dist, pb)``.
+    The analytical counterpart of the per-layer tuner's objective — the
+    tuner itself descends MEASURED full-forward latencies (it never calls
+    this); use it for offline what-if modeling and roofline reports.  The
+    ``fuse`` term is uncalibrated against the measured fig9d rows
+    (ROADMAP item) — treat fused-vs-unfused model deltas as directional.
+    """
+    if len(shapes) != len(configs):
+        raise ValueError("one config per layer required")
+    if d_outs is None:
+        d_outs = [None] * len(shapes)
+    return sum(
+        estimate_latency(s, int(c["ps"]), int(c["dist"]), int(c["pb"]),
+                         hw=hw, interleave=interleave, d_out=d_outs[i],
+                         fuse=fuse)
+        for i, (s, c) in enumerate(zip(shapes, configs))
+    )
 
 
 @dataclasses.dataclass

@@ -9,9 +9,16 @@ Two models, with the paper's exact settings:
 
 plus GraphSAGE-mean as a third example model.  The sparse Â·X / Σ-neighbor
 products run through :func:`repro.core.pipeline.mgg_aggregate`; the dense
-``·W`` updates are plain (replicated-weight) matmuls, mirroring the paper's
-use of cuBLAS for the update phase.  Symmetric normalization is folded into
-per-node scalings so the aggregation kernel stays a pure masked gather-sum.
+``·W`` updates are plain (replicated-weight) matmuls (mirroring the paper's
+use of cuBLAS for the update phase) — unless a layer's
+:class:`~repro.core.placement.LayerPlan` sets ``fuse_update``, in which case
+the update matmul runs *inside* the ring so its FLOPs overlap the next
+tile's transfer.  Symmetric normalization is folded into per-node scalings
+so the aggregation kernel stays a pure masked gather-sum.
+
+Every model stage consumes its own LayerPlan (``engine.layer_plan(i)``):
+layers can run different ``(ps, dist, pb, interleave)`` schedules over one
+shared graph partition and PGAS layout.
 
 Everything operates in the padded PGAS layout (placement.pad_embeddings);
 ``deg`` vectors are padded alongside.
@@ -28,12 +35,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .graph import CSRGraph
-from .placement import AggregationPlan, build_plan, pad_embeddings, pad_table
+from .placement import (AggregationPlan, LayerPlan, SharedPartition,
+                        build_layer_plans, build_partition, pad_embeddings,
+                        pad_table)
 from .pipeline import mgg_aggregate
 
 __all__ = ["GNNEngine", "gcn_init", "gcn_apply", "gin_init", "gin_apply",
            "sage_init", "sage_apply", "gat_init", "gat_apply",
-           "masked_cross_entropy", "MODEL_ZOO",
+           "masked_cross_entropy", "MODEL_ZOO", "aggregation_widths",
            "MODEL_STAGES", "num_stages", "apply_stage", "apply_from_stage"]
 
 
@@ -41,17 +50,27 @@ __all__ = ["GNNEngine", "gcn_init", "gcn_apply", "gin_init", "gin_apply",
 class GNNEngine:
     """Bundles graph partitioning state + the pipelined aggregation op.
 
-    One engine per (graph, mesh, knob set).  ``aggregate`` is the Â-free
-    neighbor sum; ``gcn_norm_aggregate`` applies the symmetric normalization.
+    One engine per (graph, mesh, knob sets).  The engine holds one
+    :class:`~repro.core.placement.LayerPlan` per GNN layer, all derived
+    from a single shared graph partition: layers may run radically
+    different ``(ps, dist, pb, interleave)`` schedules (GCN's wide input
+    layer vs its 16-dim hidden layer want different knobs) while sharing
+    one PGAS embedding layout, so activations flow between layers without
+    re-padding.  A single-config engine is the degenerate case of one
+    LayerPlan shared by every layer.
+
+    ``aggregate`` is the Â-free neighbor sum; ``gcn_norm_aggregate``
+    applies the symmetric normalization; the ``*_update`` variants run the
+    layer's dense ``·W`` update fused into the ring (see
+    pipeline.mgg_aggregate ``update_w``).
     """
 
-    plan: AggregationPlan
+    layer_plans: List[LayerPlan]
     mesh: Mesh
     axis_name: str = "ring"
-    interleave: bool = True
     use_kernel: bool = False
-    pb: Optional[int] = None  # paper wpb: kernel partition-block height
     deg: Optional[jax.Array] = None  # padded (N_pad,) float32, degree of A+I
+    partition: Optional[SharedPartition] = None
 
     @staticmethod
     def build(
@@ -65,18 +84,79 @@ class GNNEngine:
         interleave: bool = True,
         use_kernel: bool = False,
         self_loops: bool = True,
+        fuse_update: bool = False,
+        layer_configs: Optional[Sequence[Dict]] = None,
+        partition: Optional[SharedPartition] = None,
     ) -> "GNNEngine":
+        """Build an engine; ``layer_configs`` (one ``{ps, dist, pb, ...}``
+        dict per layer) selects per-layer plans, otherwise the single
+        ``(ps, dist, pb)`` config is shared by every layer.  ``partition``
+        reuses a previously built :class:`SharedPartition` (it must match
+        this graph *after* self-loop handling and this mesh's device
+        count) — the dynamic runtime passes it so tuner moves re-derive
+        schedules without re-partitioning the graph."""
         g = graph.with_self_loops() if self_loops else graph
         n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names])) \
             if axis_name == "__all__" else mesh.shape[axis_name]
-        plan = build_plan(g, n_dev, ps=ps, dist=dist)
-        deg = pad_table(plan.bounds, plan.rows_per_dev,
+        if layer_configs is None:
+            layer_configs = [dict(ps=ps, dist=dist, pb=pb)]
+        part = partition if partition is not None \
+            else build_partition(g, n_dev)
+        plans = build_layer_plans(g, n_dev, layer_configs, partition=part,
+                                  interleave=interleave,
+                                  fuse_update=fuse_update)
+        plan0 = plans[0].plan
+        deg = pad_table(plan0.bounds, plan0.rows_per_dev,
                         g.degrees.astype(np.float32)[:, None])[:, 0]
         return GNNEngine(
-            plan=plan, mesh=mesh, axis_name=axis_name,
-            interleave=interleave, use_kernel=use_kernel, pb=pb,
+            layer_plans=plans, mesh=mesh, axis_name=axis_name,
+            use_kernel=use_kernel,
             deg=jnp.asarray(np.maximum(deg, 1.0)),
+            partition=part,
         )
+
+    # -- layer plan access ---------------------------------------------------
+
+    def layer_plan(self, layer: int) -> LayerPlan:
+        """The plan driving aggregation stage ``layer`` (clamped: stages
+        beyond the configured depth reuse the last layer's plan — e.g.
+        GIN's head dense, which never aggregates)."""
+        return self.layer_plans[min(layer, len(self.layer_plans) - 1)]
+
+    @property
+    def num_layer_plans(self) -> int:
+        return len(self.layer_plans)
+
+    @property
+    def per_layer(self) -> bool:
+        return len(self.layer_plans) > 1
+
+    @property
+    def plan(self) -> AggregationPlan:
+        """Layer 0's schedule; every layer shares its PGAS layout
+        (``bounds`` / ``rows_per_dev``), so layout consumers (padding,
+        pgas_rows, serving) can keep using this single handle."""
+        return self.layer_plans[0].plan
+
+    @property
+    def interleave(self) -> bool:
+        return self.layer_plans[0].interleave
+
+    @property
+    def pb(self) -> Optional[int]:
+        return self.layer_plans[0].pb
+
+    @property
+    def config(self) -> Dict[str, int]:
+        """Layer 0's (ps, dist, pb) — THE knob set for single-config
+        engines; per-layer engines expose ``layer_configs``."""
+        return self.layer_plans[0].config
+
+    @property
+    def layer_configs(self) -> List[Dict[str, int]]:
+        return [lp.config for lp in self.layer_plans]
+
+    # -- layout --------------------------------------------------------------
 
     def pad(self, x: np.ndarray) -> np.ndarray:
         return pad_embeddings(self.plan, x)
@@ -85,28 +165,46 @@ class GNNEngine:
         spec = P(self.axis_name) if x.ndim == 1 else P(self.axis_name, None)
         return jax.device_put(x, NamedSharding(self.mesh, spec))
 
-    def aggregate(self, x: jax.Array) -> jax.Array:
+    # -- aggregation ---------------------------------------------------------
+
+    def aggregate(self, x: jax.Array, layer: int = 0,
+                  update_w: Optional[jax.Array] = None) -> jax.Array:
+        lp = self.layer_plan(layer)
         return mgg_aggregate(
-            x, self.plan, self.mesh,
+            x, lp.plan, self.mesh,
             axis_name=self.axis_name,
-            interleave=self.interleave,
+            interleave=lp.interleave,
             use_kernel=self.use_kernel,
-            pb=self.pb,
+            pb=lp.pb,
+            update_w=update_w,
         )
 
-    @property
-    def config(self) -> Dict[str, int]:
-        """The live (ps, dist, pb) knob set — the tuner's search point."""
-        return dict(ps=self.plan.ps, dist=self.plan.dist,
-                    pb=self.pb if self.pb is not None else 1)
+    def aggregate_update(self, x: jax.Array, w: jax.Array,
+                         layer: int = 0) -> jax.Array:
+        """Fused ``(A x) @ W``: the update matmul runs inside the ring."""
+        return self.aggregate(x, layer=layer, update_w=w)
 
-    def gcn_norm_aggregate(self, x: jax.Array) -> jax.Array:
+    def gcn_norm_aggregate(self, x: jax.Array, layer: int = 0) -> jax.Array:
         """Â x with Â = D^{-1/2}(A+I)D^{-1/2} (self-loops already in plan)."""
         dinv = jax.lax.rsqrt(self.deg)[:, None].astype(x.dtype)
-        return self.aggregate(x * dinv) * dinv
+        return self.aggregate(x * dinv, layer=layer) * dinv
 
-    def mean_aggregate(self, x: jax.Array) -> jax.Array:
-        return self.aggregate(x) / self.deg[:, None].astype(x.dtype)
+    def gcn_norm_aggregate_update(self, x: jax.Array, w: jax.Array,
+                                  layer: int = 0) -> jax.Array:
+        """Fused ``(Â x) @ W``: the left diagonal scaling commutes with the
+        right matmul, so ``D^{-1/2}((A (D^{-1/2} x)) W)`` is exact."""
+        dinv = jax.lax.rsqrt(self.deg)[:, None].astype(x.dtype)
+        return self.aggregate_update(x * dinv, w, layer=layer) * dinv
+
+    def mean_aggregate(self, x: jax.Array, layer: int = 0) -> jax.Array:
+        return self.aggregate(x, layer=layer) \
+            / self.deg[:, None].astype(x.dtype)
+
+    def mean_aggregate_update(self, x: jax.Array, w: jax.Array,
+                              layer: int = 0) -> jax.Array:
+        """Fused ``(D^{-1} A x) @ W`` (same commutation as gcn_norm)."""
+        return self.aggregate_update(x, w, layer=layer) \
+            / self.deg[:, None].astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -139,17 +237,24 @@ def gcn_stage(params: Dict, engine: GNNEngine, h: jax.Array,
               i: int) -> jax.Array:
     """Layer ``i`` of the GCN: one aggregation + dense update (+ relu).
 
-    Update-before-aggregate when it shrinks the feature dim (D_in > D_out),
-    else aggregate-first — the standard dataflow optimization; MGG's kernel
-    is agnostic to the order.
+    Three dataflows, selected by the layer's plan: fused (update inside the
+    ring — ``(Â h) W`` with per-tile partial matmuls), else
+    update-before-aggregate when it shrinks the feature dim (D_in > D_out),
+    else aggregate-first.  All three compute the same math (matmul
+    associativity); MGG's kernel is agnostic to the order.
     """
     n = len(params["layers"])
     layer = params["layers"][i]
     d_in, d_out = layer["w"].shape
-    if d_in >= d_out:
-        h = engine.gcn_norm_aggregate(_dense(layer, h))
+    if engine.layer_plan(i).fuse_update:
+        h = engine.gcn_norm_aggregate_update(h, layer["w"], layer=i) \
+            + layer["b"]
+    elif d_in >= d_out:
+        # transform-first; bias after aggregation (PyG convention) so all
+        # three dataflows compute identical math up to summation order
+        h = engine.gcn_norm_aggregate(h @ layer["w"], layer=i) + layer["b"]
     else:
-        h = _dense(layer, engine.gcn_norm_aggregate(h))
+        h = _dense(layer, engine.gcn_norm_aggregate(h, layer=i))
     if i < n - 1:
         h = jax.nn.relu(h)
     return h
@@ -181,13 +286,23 @@ def gin_init(key, in_dim: int, num_classes: int, hidden: int = 64,
 
 def gin_stage(params: Dict, engine: GNNEngine, h: jax.Array,
               i: int) -> jax.Array:
-    """GIN stage ``i``: layers 0..L-1 are GIN layers, stage L is the head."""
+    """GIN stage ``i``: layers 0..L-1 are GIN layers, stage L is the head.
+
+    Fused dataflow: ``((A h) + ε h) W₁ = (A h) W₁ + ε (h W₁)`` — the
+    aggregate's ·W₁ runs inside the ring, the ε-scaled self term is a
+    plain local matmul.
+    """
     if i == len(params["layers"]):
         return _dense(params["head"], h)
     layer = params["layers"][i]
-    agg = engine.aggregate(h)  # Σ neighbors (+ self, via self-loop plan)
-    z = agg + layer["eps"] * h  # (1+ε)h + Σ_{u∈N(v)}: self-loop gives 1·h
-    z = jax.nn.relu(_dense(layer["mlp1"], z))
+    if engine.layer_plan(i).fuse_update:
+        z = engine.aggregate_update(h, layer["mlp1"]["w"], layer=i) \
+            + layer["eps"] * (h @ layer["mlp1"]["w"]) + layer["mlp1"]["b"]
+        z = jax.nn.relu(z)
+    else:
+        agg = engine.aggregate(h, layer=i)  # Σ nbrs (+ self via self-loops)
+        z = agg + layer["eps"] * h  # (1+ε)h + Σ_{u∈N(v)}: self-loop gives 1·h
+        z = jax.nn.relu(_dense(layer["mlp1"], z))
     return jax.nn.relu(_dense(layer["mlp2"], z))
 
 
@@ -212,8 +327,12 @@ def sage_init(key, in_dim: int, num_classes: int, hidden: int = 32,
 def sage_stage(params: Dict, engine: GNNEngine, h: jax.Array,
                i: int) -> jax.Array:
     layer = params["layers"][i]
-    agg = engine.mean_aggregate(h)
-    h = _dense(layer["self"], h) + _dense(layer["nbr"], agg)
+    if engine.layer_plan(i).fuse_update:
+        nbr = engine.mean_aggregate_update(h, layer["nbr"]["w"], layer=i) \
+            + layer["nbr"]["b"]
+    else:
+        nbr = _dense(layer["nbr"], engine.mean_aggregate(h, layer=i))
+    h = _dense(layer["self"], h) + nbr
     if i < len(params["layers"]) - 1:
         h = jax.nn.relu(h)
     return h
@@ -259,6 +378,9 @@ def gat_init(key, in_dim: int, num_classes: int, hidden: int = 32,
 
 def gat_stage(params: Dict, engine: GNNEngine, h: jax.Array,
               i: int) -> jax.Array:
+    # GAT's dense W is applied BEFORE aggregation (attention needs Wh per
+    # source), so there is no post-aggregation update to fuse: the layer's
+    # fuse_update flag is a no-op and fused == unfused bitwise.
     layer = params["layers"][i]
     nh = layer["a_l"].shape[0]                 # heads (static)
     z = _dense(layer["w"], h)                  # (N, H·hd)
@@ -267,8 +389,8 @@ def gat_stage(params: Dict, engine: GNNEngine, h: jax.Array,
     zh = z.reshape(npad, nh, hd)
     s = jnp.einsum("nhd,hd->nh", zh, layer["a_l"])
     e = jnp.exp(jax.nn.leaky_relu(s, 0.2))     # source weights (N, H)
-    num = engine.aggregate((zh * e[..., None]).reshape(npad, total))
-    den = engine.aggregate(jnp.repeat(e, hd, axis=1))
+    num = engine.aggregate((zh * e[..., None]).reshape(npad, total), layer=i)
+    den = engine.aggregate(jnp.repeat(e, hd, axis=1), layer=i)
     out = (num / jnp.maximum(den, 1e-9)).astype(h.dtype)
     if i < len(params["layers"]) - 1:
         out = jax.nn.elu(out)
@@ -288,6 +410,32 @@ MODEL_ZOO = {
     "sage": (sage_init, sage_apply, dict(hidden=32, num_layers=2)),
     "gat": (gat_init, gat_apply, dict(hidden=16, num_layers=2, heads=4)),
 }
+
+
+def aggregation_widths(model: str, params: Dict,
+                       fused: bool = False) -> List[int]:
+    """Feature width crossing the ring at each aggregation layer.
+
+    This is the per-layer ``D`` the autotuner's latency model needs: GCN's
+    input layer aggregates at a very different width than its 16-dim hidden
+    layer, which is exactly why one global ``(ps, dist, pb)`` is the wrong
+    shape.  ``fused`` widths reflect the fused dataflow (the ring carries
+    the pre-update features).
+    """
+    widths: List[int] = []
+    for layer in params["layers"]:
+        if model == "gcn":
+            d_in, d_out = layer["w"].shape
+            widths.append(d_in if fused else min(d_in, d_out))
+        elif model == "gin":
+            widths.append(layer["mlp1"]["w"].shape[0])
+        elif model == "sage":
+            widths.append(layer["nbr"]["w"].shape[0])
+        elif model == "gat":
+            widths.append(layer["w"]["w"].shape[1])
+        else:
+            raise ValueError(f"unknown model {model!r}")
+    return widths
 
 # ---------------------------------------------------------------------------
 # stage-wise access (the serving subsystem resumes inference from a cached

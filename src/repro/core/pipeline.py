@@ -17,6 +17,13 @@ partitions are spread across ring steps so every step carries both
 latency-bound (remote) and compute-bound (local) work; ``interleave=False``
 is the paper's Fig. 9(b) baseline.
 
+The *fused update* path (``update_w``) additionally folds the dense ``·W``
+update phase into the ring: each step's partial aggregate performs its own
+``(P, D) @ (D, D_out)`` matmul before the scatter-add, so the update GEMM's
+FLOPs — which otherwise run as a separate kernel after the ring drains —
+overlap the in-flight ppermute of the next tile (the MaxK-GNN-style fused
+aggregation+update kernel shape, expressed at ring-tile granularity).
+
 Three baselines used throughout benchmarks:
 
 * :func:`bulk_aggregate` — all-gather the full embedding table, then a purely
@@ -106,6 +113,7 @@ def mgg_aggregate(
     use_kernel: bool = False,
     acc_dtype=jnp.float32,
     pb: Optional[int] = None,
+    update_w: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Pipelined sum-aggregation: ``out[v] = Σ_{u ∈ N(v)} x[u]``.
 
@@ -113,6 +121,16 @@ def mgg_aggregate(
     sharded by rows over ``axis_name`` (see placement.pad_embeddings); the
     output has the same layout/sharding.  ``pb`` is the paper's wpb knob:
     the partition-block height of the kernel variant (kernel path only).
+
+    ``update_w`` (``(D, D_out)``, replicated) selects the **fused update**
+    path: the output becomes ``(A x) @ W`` and each ring step performs its
+    tile's partial ``·W`` matmul right after the gather+reduce, inside the
+    same step that already issued the next tile's ppermute — so the update
+    phase's MXU FLOPs overlap the next tile's ICI transfer instead of
+    running as a separate post-ring matmul.  Because matmul distributes
+    over the partial sums, ``Σ_s (partial_s @ W) == (Σ_s partial_s) @ W``
+    exactly in reals; in floats the two paths differ only by summation
+    order (tolerance-tested in tests/test_layer_plans.py).
     """
     n_dev, dist, tile_rows = plan.n_dev, plan.dist, plan.tile_rows
     arrays = jax.tree.map(jnp.asarray, plan_device_arrays(plan))
@@ -127,22 +145,28 @@ def mgg_aggregate(
         use_kernel=use_kernel,
         acc_dtype=acc_dtype,
         pb=pb,
+        fused=update_w is not None,
     )
+    in_specs = [P(axis_name), _plan_specs(axis_name)]
+    args = [x, arrays]
+    if update_w is not None:
+        in_specs.append(P(None, None))  # replicated update weight
+        args.append(update_w)
     fn = jax.shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(axis_name), _plan_specs(axis_name)),
+        in_specs=tuple(in_specs),
         out_specs=P(axis_name),
         # Pallas calls inside the body produce vma-less ShapeDtypeStructs;
         # skip the varying-manual-axes check (correctness is oracle-tested).
         check_vma=False,
     )
-    return fn(x, arrays)
+    return fn(*args)
 
 
 def _mgg_shard_body(
-    x, arrays, *, axis_name, n_dev, dist, tile_rows, interleave, use_kernel,
-    acc_dtype, pb=None,
+    x, arrays, w=None, *, axis_name, n_dev, dist, tile_rows, interleave,
+    use_kernel, acc_dtype, pb=None, fused=False,
 ):
     # Per-device blocks: squeeze the device-major axis.
     l_nbrs = arrays["local_nbrs"][0]        # (PL, ps)
@@ -153,9 +177,19 @@ def _mgg_shard_body(
     r_tgt = arrays["remote_targets"][0]     # (S, PR)
 
     rows, d_feat = x.shape
+    if fused:
+        wacc = w.astype(acc_dtype)
+        d_out = wacc.shape[1]
+        # Fused update: every partial aggregate does its ·W matmul before
+        # the scatter-add, so the MXU work lands inside the ring step whose
+        # next-tile ppermute is already in flight.
+        update = lambda partial: partial @ wacc
+    else:
+        d_out = d_feat
+        update = lambda partial: partial
     # Mark the accumulator as device-varying so it can be carried through the
     # ring fori_loop (shard_map vma typing).
-    out = jnp.zeros((rows, d_feat), acc_dtype)
+    out = jnp.zeros((rows, d_out), acc_dtype)
     if hasattr(lax, "pcast"):
         out = lax.pcast(out, (axis_name,), to="varying")
     else:  # older jax
@@ -174,7 +208,7 @@ def _mgg_shard_body(
         # Paper Fig. 9(b) baseline: all local partitions up front, then the
         # (non-overlapped-with-local) remote rounds.
         out = out.at[l_tgt].add(
-            _gather_sum(x, l_nbrs, l_mask, use_kernel, acc_dtype, pb)
+            update(_gather_sum(x, l_nbrs, l_mask, use_kernel, acc_dtype, pb))
         )
 
     if n_dev == 1:
@@ -189,13 +223,13 @@ def _mgg_shard_body(
         mask = lax.dynamic_index_in_dim(r_mask, idx, 0, keepdims=False)
         tgt = lax.dynamic_index_in_dim(r_tgt, idx, 0, keepdims=False)
         out = out.at[tgt].add(
-            _gather_sum(cur, nbrs, mask, use_kernel, acc_dtype, pb))
+            update(_gather_sum(cur, nbrs, mask, use_kernel, acc_dtype, pb)))
         if interleave:
             ln = lax.dynamic_index_in_dim(l_nbrs_s, idx, 0, keepdims=False)
             lm = lax.dynamic_index_in_dim(l_mask_s, idx, 0, keepdims=False)
             lt = lax.dynamic_index_in_dim(l_tgt_s, idx, 0, keepdims=False)
             out = out.at[lt].add(
-                _gather_sum(x, ln, lm, use_kernel, acc_dtype, pb))
+                update(_gather_sum(x, ln, lm, use_kernel, acc_dtype, pb)))
         return out
 
     # One double-buffered ring per tile chunk (chunk-major, so every chunk

@@ -24,13 +24,15 @@ DGCL's minutes-long partitioner).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .graph import CSRGraph
 from .partition import (
     NeighborPartitions,
+    VirtualGraphs,
     edge_balanced_node_split,
     locality_edge_split,
     neighbor_partitions,
@@ -38,7 +40,12 @@ from .partition import (
 
 __all__ = [
     "AggregationPlan",
+    "SharedPartition",
+    "LayerPlan",
+    "build_partition",
+    "plan_from_partition",
     "build_plan",
+    "build_layer_plans",
     "build_bulk_plan",
     "build_fetch_plan",
     "pad_table",
@@ -121,27 +128,67 @@ def _pad_parts(parts: NeighborPartitions, p_max: int) -> Tuple[np.ndarray, np.nd
     return nbrs, mask, tgt
 
 
-def build_plan(
-    graph: CSRGraph,
-    n_dev: int,
-    ps: int,
-    dist: int = 1,
-    bounds: Optional[np.ndarray] = None,
-) -> AggregationPlan:
-    """Build the full MGG plan: node split → locality split → neighbor split
-    → ring-step bucketing, with the PGAS offset remap of paper Fig. 5."""
+@dataclasses.dataclass(frozen=True)
+class SharedPartition:
+    """The layer-independent half of plan construction (paper §3.1–3.2).
+
+    Node split + per-device locality edge split are functions of the *graph*
+    only; the neighbor-partition schedules (``ps``) and ring-tile bucketing
+    (``dist``) are per-layer knobs.  Building one :class:`SharedPartition`
+    and deriving every layer's :class:`AggregationPlan` from it keeps a
+    single neighbor table source — per-layer plans differ only in schedule,
+    never in topology — and makes per-layer plan construction O(schedules)
+    instead of O(layers × locality splits).
+    """
+
+    bounds: np.ndarray                 # (n_dev + 1,) global node ranges
+    n_dev: int
+    vgs: Tuple[VirtualGraphs, ...]     # per-device local/remote virtual CSRs
+    base_rows: int                     # unpadded max shard height
+
+    @property
+    def node_counts(self) -> np.ndarray:
+        return (self.bounds[1:] - self.bounds[:-1]).astype(np.int32)
+
+
+def build_partition(
+    graph: CSRGraph, n_dev: int, bounds: Optional[np.ndarray] = None
+) -> SharedPartition:
+    """Node split + locality split, shared by every layer's plan."""
     if bounds is None:
         bounds = edge_balanced_node_split(graph.indptr, n_dev)
-    rows = int((bounds[1:] - bounds[:-1]).max())
-    # Pad shard height to a multiple of dist so ring tiles are uniform.
-    rows = ((rows + dist - 1) // dist) * dist
+    bounds = np.asarray(bounds, dtype=np.int64)
+    vgs = tuple(locality_edge_split(graph, bounds, d) for d in range(n_dev))
+    return SharedPartition(
+        bounds=bounds, n_dev=n_dev, vgs=vgs,
+        base_rows=int((bounds[1:] - bounds[:-1]).max()),
+    )
+
+
+def plan_from_partition(
+    part: SharedPartition,
+    ps: int,
+    dist: int = 1,
+    rows_multiple: int = 1,
+) -> AggregationPlan:
+    """Derive one (ps, dist) aggregation schedule from a shared partition.
+
+    ``rows_multiple`` forces the padded shard height to a common multiple so
+    plans with *different* ``dist`` can share one PGAS embedding layout
+    (build_layer_plans passes the lcm of every layer's dist).
+    """
+    n_dev, bounds = part.n_dev, part.bounds
+    # Pad shard height to a multiple of dist (uniform ring tiles) and of
+    # rows_multiple (cross-layer shared layout).
+    m = dist * rows_multiple // math.gcd(dist, rows_multiple)
+    rows = ((part.base_rows + m - 1) // m) * m
     tile_rows = rows // dist
     n_steps = (n_dev - 1) * dist if n_dev > 1 else 0
 
     per_dev_local = []
     per_dev_remote = []  # list of lists: [dev][step] -> NeighborPartitions
     for d in range(n_dev):
-        vg = locality_edge_split(graph, bounds, d)
+        vg = part.vgs[d]
         # --- local virtual graph: global ids -> my local offsets (Fig. 5) ---
         local_csr = CSRGraph(
             vg.local.indptr,
@@ -162,8 +209,8 @@ def build_plan(
             r = s // dist + 1  # rotation count
             c = s % dist  # chunk id
             o = (d - r) % n_dev  # owner whose tile arrives at this step
-            m = (owner == o) & (chunk == c)
-            sel_rows, sel_off = rows_ids[m], tile_off[m]
+            m_sel = (owner == o) & (chunk == c)
+            sel_rows, sel_off = rows_ids[m_sel], tile_off[m_sel]
             counts = np.bincount(sel_rows, minlength=vg.remote.num_nodes)
             indptr = np.zeros(vg.remote.num_nodes + 1, dtype=np.int64)
             np.cumsum(counts, out=indptr[1:])
@@ -192,7 +239,6 @@ def build_plan(
             (remote_nbrs[d, s], remote_mask[d, s],
              remote_targets[d, s]) = _pad_parts(per_dev_remote[d][s], pr_max)
 
-    node_counts = (bounds[1:] - bounds[:-1]).astype(np.int32)
     return AggregationPlan(
         local_nbrs=local_nbrs,
         local_mask=local_mask,
@@ -200,14 +246,102 @@ def build_plan(
         remote_nbrs=remote_nbrs,
         remote_mask=remote_mask,
         remote_targets=remote_targets,
-        node_counts=node_counts,
-        bounds=np.asarray(bounds, dtype=np.int64),
+        node_counts=part.node_counts,
+        bounds=bounds,
         n_dev=n_dev,
         rows_per_dev=rows,
         tile_rows=tile_rows,
         ps=ps,
         dist=dist,
     )
+
+
+def build_plan(
+    graph: CSRGraph,
+    n_dev: int,
+    ps: int,
+    dist: int = 1,
+    bounds: Optional[np.ndarray] = None,
+) -> AggregationPlan:
+    """Build the full MGG plan: node split → locality split → neighbor split
+    → ring-step bucketing, with the PGAS offset remap of paper Fig. 5."""
+    return plan_from_partition(build_partition(graph, n_dev, bounds),
+                               ps=ps, dist=dist)
+
+
+# ---------------------------------------------------------------------------
+# per-layer pipeline plans (shared partition, per-layer schedules)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One GNN layer's pipeline configuration: an aggregation schedule plus
+    the runtime knobs that select how it executes.
+
+    ``plan`` may be SHARED between layers whose ``(ps, dist)`` coincide (see
+    :func:`build_layer_plans`) — a LayerPlan never owns topology, only the
+    schedule + mapping knobs:
+
+    * ``interleave`` — §3.3 local/remote workload interleaving;
+    * ``pb``         — the paper's wpb: kernel partition-block height;
+    * ``fuse_update`` — run this layer's dense ``·W`` update *inside* the
+      ring (one partial matmul per tile), so update FLOPs overlap the next
+      tile's transfer (pipeline.mgg_aggregate ``update_w``).
+    """
+
+    plan: AggregationPlan
+    interleave: bool = True
+    pb: Optional[int] = None
+    fuse_update: bool = False
+
+    @property
+    def config(self) -> Dict[str, int]:
+        return dict(ps=self.plan.ps, dist=self.plan.dist,
+                    pb=self.pb if self.pb is not None else 1)
+
+
+def build_layer_plans(
+    graph: CSRGraph,
+    n_dev: int,
+    configs: Sequence[Dict],
+    *,
+    partition: Optional[SharedPartition] = None,
+    interleave: bool = True,
+    fuse_update: bool = False,
+) -> List[LayerPlan]:
+    """Per-layer plans from ONE shared partition.
+
+    ``configs`` is one dict per layer with keys ``ps`` and ``dist`` (and
+    optionally ``pb``, ``interleave``, ``fuse_update`` overriding the
+    call-level defaults).  All plans share the partition's neighbor tables
+    and — because shard heights are padded to the lcm of every layer's
+    ``dist`` — one PGAS embedding layout, so activations flow between
+    layers without re-padding.  Layers with identical ``(ps, dist)`` share
+    the SAME AggregationPlan object (no duplicated schedule arrays).
+    """
+    if not configs:
+        raise ValueError("need at least one layer config")
+    part = partition if partition is not None \
+        else build_partition(graph, n_dev)
+    lcm = 1
+    for cfg in configs:
+        d = int(cfg["dist"])
+        lcm = lcm * d // math.gcd(lcm, d)
+    memo: Dict[Tuple[int, int], AggregationPlan] = {}
+    out: List[LayerPlan] = []
+    for cfg in configs:
+        key = (int(cfg["ps"]), int(cfg["dist"]))
+        if key not in memo:
+            memo[key] = plan_from_partition(part, ps=key[0], dist=key[1],
+                                            rows_multiple=lcm)
+        pb = cfg.get("pb")
+        out.append(LayerPlan(
+            plan=memo[key],
+            interleave=bool(cfg.get("interleave", interleave)),
+            pb=int(pb) if pb is not None else None,
+            fuse_update=bool(cfg.get("fuse_update", fuse_update)),
+        ))
+    return out
 
 
 def _padded_offset(bounds: np.ndarray, rows: int, ids: np.ndarray) -> np.ndarray:

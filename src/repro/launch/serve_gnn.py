@@ -6,6 +6,9 @@
 
 Reports p50/p99 request latency per phase, the layer-1 cache hit rate,
 and the retune trail (config history) when ``--dynamic-tune`` is on.
+``--per-layer-tune`` re-optimizes one (ps, dist, pb) per GNN layer
+(implies --dynamic-tune); ``--fuse-update`` serves with the dense ·W
+update fused into the ring.
 """
 import os
 import sys
@@ -50,10 +53,16 @@ def main() -> None:
                     help="phase-2 rate multiplier (burst load)")
     ap.add_argument("--update-frac", type=float, default=0.02)
     ap.add_argument("--dynamic-tune", action="store_true")
+    ap.add_argument("--per-layer-tune", action="store_true",
+                    help="one (ps, dist, pb) per GNN layer "
+                         "(implies --dynamic-tune)")
+    ap.add_argument("--fuse-update", action="store_true",
+                    help="run the dense ·W update inside the ring")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0)
     args = ap.parse_args()
+    args.dynamic_tune = args.dynamic_tune or args.per_layer_tune
 
     g, meta = C.paper_dataset(args.dataset, scale=args.scale)
     dim = min(int(meta["dim"]), 64)
@@ -62,17 +71,23 @@ def main() -> None:
         size=(g.num_nodes, dim)).astype(np.float32)
     mesh = flat_ring_mesh(len(jax.devices()))
 
+    init, _apply, kw = C.MODEL_ZOO[args.model]
+    params = init(jax.random.key(args.seed), dim, ncls, **kw)
+
     if args.dynamic_tune:
+        layer_dims = C.aggregation_widths(args.model, params,
+                                          fused=args.fuse_update) \
+            if args.per_layer_tune else None
         eng = DynamicGNNEngine.build(
             g, mesh, d_feat=dim,
             ps_space=(1, 2, 4, 8, 16), dist_space=(1, 2, 4),
             pb_space=(1,),
-            window=ProfileConfig(warmup=1, iters=2), log_fn=print)
+            window=ProfileConfig(warmup=1, iters=2),
+            fuse_update=args.fuse_update, layer_dims=layer_dims,
+            log_fn=print)
     else:
-        eng = C.GNNEngine.build(g, mesh, ps=8, dist=1)
-
-    init, _apply, kw = C.MODEL_ZOO[args.model]
-    params = init(jax.random.key(args.seed), dim, ncls, **kw)
+        eng = C.GNNEngine.build(g, mesh, ps=8, dist=1,
+                                fuse_update=args.fuse_update)
     srv = GNNServeEngine(eng, params, args.model, x, g, slots=args.slots,
                          use_cache=not args.no_cache, log_fn=print)
 

@@ -11,25 +11,28 @@ Four pieces (see docs/runtime.md):
   ``AggregateProfiler``);
 * :mod:`repro.runtime.tuner` — the online ps → dist → wpb coordinate
   descent with retreat, stop-at-top-3, warm start, budget, and
-  workload-drift re-exploration (``OnlineTuner``, ``make_vmem_check``,
-  ``shape_drift``);
+  workload-drift re-exploration (``OnlineTuner``), plus the layer-wise
+  lift (``PerLayerTuner``: per-layer searches over full-forward times,
+  warm-started from the global optimum, shared budget);
 * :mod:`repro.runtime.cache` — persistent JSON config cache keyed by
-  workload-shape + hardware fingerprint (``ConfigCache``);
+  workload-shape + hardware fingerprint, global or per-layer entries
+  (``ConfigCache``);
 * :mod:`repro.runtime.engine` — ``DynamicGNNEngine``: a
   :class:`repro.core.gnn.GNNEngine` wrapper that rebuilds plans/kernels
-  when the tuner commits a new ``(ps, dist, pb)`` without touching model
-  parameters.
+  when the tuner commits a new config — one global ``(ps, dist, pb)`` or
+  one per layer — without touching model parameters.
 """
 from repro.runtime.cache import (ConfigCache, hardware_fingerprint,
-                                 shape_fingerprint)
+                                 layers_fingerprint, shape_fingerprint)
 from repro.runtime.engine import DynamicGNNEngine
 from repro.runtime.profiler import (AggregateProfiler, LatencyWindow,
                                     ProfileConfig, time_jitted)
-from repro.runtime.tuner import OnlineTuner, make_vmem_check, shape_drift
+from repro.runtime.tuner import (OnlineTuner, PerLayerTuner, make_vmem_check,
+                                 shape_drift)
 
 __all__ = [
     "ProfileConfig", "LatencyWindow", "time_jitted", "AggregateProfiler",
-    "OnlineTuner", "make_vmem_check", "shape_drift",
+    "OnlineTuner", "PerLayerTuner", "make_vmem_check", "shape_drift",
     "ConfigCache", "hardware_fingerprint", "shape_fingerprint",
-    "DynamicGNNEngine",
+    "layers_fingerprint", "DynamicGNNEngine",
 ]

@@ -13,9 +13,15 @@ Robustness rules (this file lives across jobs and may be shared):
 * writes are atomic (tmp file + ``os.replace``) — a preempted writer never
   corrupts the cache;
 * a corrupt or version-mismatched file reads as empty (tuning simply
-  starts cold) rather than raising;
+  starts cold) rather than raising — in particular, pre-per-layer (v1)
+  cache files are silently discarded, never a crash;
 * entries keep the latency and shape they were tuned at, for debugging
   and for future staleness policies.
+
+Schema v2 adds **per-layer** entries: a tuned config may be either one
+global ``{ps, dist, pb}`` or ``{"layers": [{ps, dist, pb}, ...]}`` keyed
+by the joint fingerprint of every layer's WorkloadShape (the per-layer
+tuner's warm start).
 """
 from __future__ import annotations
 
@@ -23,13 +29,21 @@ import dataclasses
 import json
 import os
 import tempfile
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core.autotune import WorkloadShape
 
-__all__ = ["ConfigCache", "hardware_fingerprint", "shape_fingerprint"]
+__all__ = ["ConfigCache", "hardware_fingerprint", "shape_fingerprint",
+           "layers_fingerprint"]
 
-_VERSION = 1
+_VERSION = 2
+
+_KNOBS = ("ps", "dist", "pb")
+
+
+def _valid_cfg(cfg: Any) -> bool:
+    return (isinstance(cfg, dict)
+            and all(isinstance(cfg.get(k), int) for k in _KNOBS))
 
 
 def hardware_fingerprint() -> str:
@@ -50,6 +64,13 @@ def hardware_fingerprint() -> str:
 def shape_fingerprint(w: WorkloadShape) -> str:
     return (f"ndev{w.n_dev}_d{w.d_feat}_rows{w.rows_per_dev}"
             f"_le{w.local_edges_max}_re{w.remote_edges_max}_it{w.itemsize}")
+
+
+def layers_fingerprint(shapes: Sequence[WorkloadShape]) -> str:
+    """Joint fingerprint of a per-layer shape stack (the topology part is
+    shared, so only the widths vary between segments)."""
+    dims = "-".join(str(w.d_feat) for w in shapes)
+    return f"L{len(shapes)}_d{dims}|{shape_fingerprint(shapes[0])}"
 
 
 class ConfigCache:
@@ -100,19 +121,49 @@ class ConfigCache:
         if not isinstance(entry, dict):
             return None
         cfg = entry.get("config")
-        if (isinstance(cfg, dict)
-                and all(isinstance(cfg.get(k), int)
-                        for k in ("ps", "dist", "pb"))):
-            return {k: int(cfg[k]) for k in ("ps", "dist", "pb")}
+        if _valid_cfg(cfg):
+            return {k: int(cfg[k]) for k in _KNOBS}
         return None
 
     def put(self, shape: WorkloadShape, config: Dict[str, int],
             latency: float, hw: Optional[str] = None) -> None:
         entries = self._load()
         entries[self.key(shape, hw)] = dict(
-            config={k: int(config[k]) for k in ("ps", "dist", "pb")},
+            config={k: int(config[k]) for k in _KNOBS},
             latency=float(latency),
             shape=dataclasses.asdict(shape),
+            hw=hw or self.hw,
+        )
+        self._store(entries)
+
+    # -- per-layer entries (schema v2) ----------------------------------------
+
+    def layers_key(self, shapes: Sequence[WorkloadShape],
+                   hw: Optional[str] = None) -> str:
+        return f"{layers_fingerprint(shapes)}|{hw or self.hw}"
+
+    def get_layers(self, shapes: Sequence[WorkloadShape],
+                   hw: Optional[str] = None) -> Optional[List[Dict[str, int]]]:
+        """The cached per-layer configs for this shape stack, or None."""
+        entry = self._load().get(self.layers_key(shapes, hw))
+        if not isinstance(entry, dict):
+            return None
+        cfg = entry.get("config")
+        layers = cfg.get("layers") if isinstance(cfg, dict) else None
+        if (isinstance(layers, list) and len(layers) == len(shapes)
+                and all(_valid_cfg(c) for c in layers)):
+            return [{k: int(c[k]) for k in _KNOBS} for c in layers]
+        return None
+
+    def put_layers(self, shapes: Sequence[WorkloadShape],
+                   configs: Sequence[Dict[str, int]], latency: float,
+                   hw: Optional[str] = None) -> None:
+        entries = self._load()
+        entries[self.layers_key(shapes, hw)] = dict(
+            config=dict(layers=[{k: int(c[k]) for k in _KNOBS}
+                                for c in configs]),
+            latency=float(latency),
+            shape=[dataclasses.asdict(s) for s in shapes],
             hw=hw or self.hw,
         )
         self._store(entries)

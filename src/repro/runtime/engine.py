@@ -28,30 +28,49 @@ when this run's search closes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.autotune import HardwareSpec, TPU_V5E, WorkloadShape
+from repro.core.autotune import (HardwareSpec, TPU_V5E, WorkloadShape,
+                                 layer_workload_shapes)
 from repro.core.gnn import GNNEngine
 from repro.core.graph import CSRGraph
 from repro.runtime.cache import ConfigCache
 from repro.runtime.profiler import LatencyWindow, ProfileConfig
 from repro.runtime.tuner import (DEFAULT_DIST, DEFAULT_PB, DEFAULT_PS,
-                                 OnlineTuner, make_vmem_check)
+                                 OnlineTuner, PerLayerTuner, make_vmem_check)
 
 __all__ = ["DynamicGNNEngine"]
 
 
+def _as_config_dict(cfg) -> Dict:
+    """Normalize a tuner proposal: a per-layer list becomes
+    ``{"layers": [...]}`` so every config in histories/caches/logs is a
+    plain dict."""
+    if isinstance(cfg, list):
+        return dict(layers=[dict(c) for c in cfg])
+    return dict(cfg)
+
+
 class DynamicGNNEngine:
-    """A GNNEngine whose (ps, dist, pb) re-optimizes across iterations."""
+    """A GNNEngine whose (ps, dist, pb) re-optimizes across iterations.
+
+    Two tuning modes share one protocol:
+
+    * **global** (an :class:`OnlineTuner`) — one (ps, dist, pb) for every
+      layer; configs are ``{ps, dist, pb}`` dicts.
+    * **per-layer** (a :class:`PerLayerTuner`, selected by passing
+      ``layer_dims`` to :meth:`build`) — each layer runs its own plan over
+      the shared partition; configs are ``{"layers": [{ps, dist, pb}, …]}``.
+    """
 
     def __init__(
         self,
         graph: CSRGraph,
         mesh,
         *,
-        tuner: OnlineTuner,
+        tuner,
         shape: WorkloadShape,
         window: ProfileConfig = ProfileConfig(warmup=1, iters=3),
         cache: Optional[ConfigCache] = None,
@@ -59,6 +78,9 @@ class DynamicGNNEngine:
         interleave: bool = True,
         use_kernel: bool = False,
         self_loops: bool = True,
+        fuse_update: bool = False,
+        layer_dims: Optional[Sequence[int]] = None,
+        hw: HardwareSpec = TPU_V5E,
         log_fn: Callable[[str], None] = lambda _s: None,
     ):
         self.graph = graph
@@ -66,23 +88,39 @@ class DynamicGNNEngine:
         self.tuner = tuner
         self.shape = shape
         self.cache = cache
+        self.hw = hw
         self.axis_name = axis_name
         self.interleave = interleave
         self.use_kernel = use_kernel
         self.self_loops = self_loops
+        self.fuse_update = fuse_update
+        self.layer_dims = list(layer_dims) if layer_dims is not None else None
         self.log = log_fn
         self._window = LatencyWindow(window)
         self.step_count = 0
         self.committed = False
+        self._layer_shapes: Optional[List[WorkloadShape]] = None
+        # the MODEL's feature width as reported by the caller — in per-layer
+        # mode self.shape holds the max aggregation width instead, so the
+        # retune() unchanged-d_feat check needs this separately (build()
+        # overwrites it with the true model width)
+        self._model_d_feat = shape.d_feat
+        self._partition = None   # SharedPartition, reused across tuner moves
         self.history: List[Tuple[int, Dict[str, int]]] = []
         cfg0 = tuner.propose()
         if cfg0 is None:  # empty search space ⇒ static engine at defaults
             cfg0 = dict(ps=DEFAULT_PS[0], dist=DEFAULT_DIST[0],
                         pb=DEFAULT_PB[0])
+            if self.per_layer:
+                cfg0 = [cfg0] * len(self.layer_dims)
             self.committed = True
-        self._config = dict(cfg0)
+        self._config = _as_config_dict(cfg0)
         self.engine = self._build_engine(self._config)
         self.history.append((0, dict(self._config)))
+
+    @property
+    def per_layer(self) -> bool:
+        return self.layer_dims is not None
 
     # -- construction --------------------------------------------------------
 
@@ -105,11 +143,16 @@ class DynamicGNNEngine:
         interleave: bool = True,
         use_kernel: bool = False,
         self_loops: bool = True,
+        fuse_update: bool = False,
+        layer_dims: Optional[Sequence[int]] = None,
         log_fn: Callable[[str], None] = lambda _s: None,
     ) -> "DynamicGNNEngine":
+        """``layer_dims`` (one aggregation feature width per layer, e.g.
+        ``aggregation_widths(model, params)``) selects per-layer tuning:
+        a :class:`PerLayerTuner` searches each layer's (ps, dist, pb) over
+        one shared partition, warm-started from the global search."""
         n_dev = mesh.shape[axis_name]
         g = graph.with_self_loops() if self_loops else graph
-        shape = WorkloadShape.from_graph(g, n_dev, int(d_feat))
         if not use_kernel:
             # pb only reaches the partition-blocked Pallas kernel; on the
             # jnp path every pb builds the identical computation, so probing
@@ -117,31 +160,85 @@ class DynamicGNNEngine:
             # noise.  Collapse the dimension instead of searching it.
             pb_space = (min(pb_space),)
         cache = ConfigCache(cache_path) if cache_path else None
-        warm = cache.get(shape) if cache is not None else None
-        if warm is not None and warm["pb"] not in pb_space:
-            warm = dict(warm, pb=pb_space[0])
-        tuner = OnlineTuner(
-            ps_space, dist_space, pb_space,
-            vmem_check=make_vmem_check(shape, hw),
-            budget=budget, drift_threshold=drift_threshold,
-            warm_start=warm,
-        )
-        tuner.observe_shape(shape)
+        if layer_dims is not None:
+            shapes = layer_workload_shapes(g, n_dev, list(layer_dims))
+            shape = max(shapes, key=lambda s: s.d_feat)
+            warm = cache.get_layers(shapes) if cache is not None else None
+            if warm is None and cache is not None:
+                # a previous GLOBAL run's entry still seeds phase 1 — look
+                # it up under the key global mode writes (d_feat, not the
+                # aggregation width, which differs e.g. for unfused GCN)
+                warm = cache.get(shapes[0].with_d_feat(int(d_feat)))
+            warm = cls._clamp_pb(warm, pb_space)
+            tuner = PerLayerTuner(
+                len(shapes), ps_space, dist_space, pb_space,
+                vmem_checks=[make_vmem_check(s, hw) for s in shapes],
+                budget=budget, drift_threshold=drift_threshold,
+                warm_start=warm,
+            )
+            tuner.observe_shape(shapes)
+        else:
+            shape = WorkloadShape.from_graph(g, n_dev, int(d_feat))
+            warm = cache.get(shape) if cache is not None else None
+            warm = cls._clamp_pb(warm, pb_space)
+            tuner = OnlineTuner(
+                ps_space, dist_space, pb_space,
+                vmem_check=make_vmem_check(shape, hw),
+                budget=budget, drift_threshold=drift_threshold,
+                warm_start=warm,
+            )
+            tuner.observe_shape(shape)
         if warm is not None:
             log_fn(f"[runtime] warm start from cache: {warm}")
-        return cls(graph, mesh, tuner=tuner, shape=shape, window=window,
-                   cache=cache, axis_name=axis_name, interleave=interleave,
-                   use_kernel=use_kernel, self_loops=self_loops,
-                   log_fn=log_fn)
+        eng = cls(graph, mesh, tuner=tuner, shape=shape, window=window,
+                  cache=cache, axis_name=axis_name, interleave=interleave,
+                  use_kernel=use_kernel, self_loops=self_loops,
+                  fuse_update=fuse_update, layer_dims=layer_dims, hw=hw,
+                  log_fn=log_fn)
+        if layer_dims is not None:
+            eng._layer_shapes = shapes
+        eng._model_d_feat = int(d_feat)
+        return eng
 
-    def _build_engine(self, cfg: Dict[str, int]) -> GNNEngine:
-        return GNNEngine.build(
-            self.graph, self.mesh, axis_name=self.axis_name,
-            ps=int(cfg["ps"]), dist=int(cfg["dist"]),
-            pb=int(cfg["pb"]) if self.use_kernel else None,
-            interleave=self.interleave, use_kernel=self.use_kernel,
-            self_loops=self.self_loops,
-        )
+    @staticmethod
+    def _clamp_pb(warm, pb_space):
+        """Cached pb values outside the live space fall back to its floor."""
+        if warm is None:
+            return None
+        if isinstance(warm, list):
+            return [dict(c, pb=c["pb"] if c["pb"] in pb_space else pb_space[0])
+                    for c in warm]
+        if warm["pb"] not in pb_space:
+            warm = dict(warm, pb=pb_space[0])
+        return warm
+
+    def _build_engine(self, cfg: Dict) -> GNNEngine:
+        def _lc(c):
+            return dict(ps=int(c["ps"]), dist=int(c["dist"]),
+                        pb=int(c["pb"]) if self.use_kernel else None)
+
+        # The node split + locality split depend only on (graph, n_dev):
+        # build them once and re-derive only the schedules on tuner moves
+        # (invalidated in retune() when the topology changes).
+        if "layers" in cfg:
+            eng = GNNEngine.build(
+                self.graph, self.mesh, axis_name=self.axis_name,
+                layer_configs=[_lc(c) for c in cfg["layers"]],
+                interleave=self.interleave, use_kernel=self.use_kernel,
+                self_loops=self.self_loops, fuse_update=self.fuse_update,
+                partition=self._partition,
+            )
+        else:
+            eng = GNNEngine.build(
+                self.graph, self.mesh, axis_name=self.axis_name,
+                ps=int(cfg["ps"]), dist=int(cfg["dist"]),
+                pb=int(cfg["pb"]) if self.use_kernel else None,
+                interleave=self.interleave, use_kernel=self.use_kernel,
+                self_loops=self.self_loops, fuse_update=self.fuse_update,
+                partition=self._partition,
+            )
+        self._partition = eng.partition
+        return eng
 
     # -- GNNEngine surface (delegation: models take either engine) -----------
 
@@ -150,11 +247,22 @@ class DynamicGNNEngine:
         return self.engine.plan
 
     @property
+    def layer_plans(self):
+        return self.engine.layer_plans
+
+    def layer_plan(self, layer: int):
+        return self.engine.layer_plan(layer)
+
+    @property
+    def layer_configs(self) -> List[Dict[str, int]]:
+        return self.engine.layer_configs
+
+    @property
     def deg(self):
         return self.engine.deg
 
     @property
-    def config(self) -> Dict[str, int]:
+    def config(self) -> Dict:
         return dict(self._config)
 
     def pad(self, x: np.ndarray) -> np.ndarray:
@@ -163,14 +271,23 @@ class DynamicGNNEngine:
     def shard(self, x):
         return self.engine.shard(x)
 
-    def aggregate(self, x):
-        return self.engine.aggregate(x)
+    def aggregate(self, x, layer: int = 0, update_w=None):
+        return self.engine.aggregate(x, layer=layer, update_w=update_w)
 
-    def gcn_norm_aggregate(self, x):
-        return self.engine.gcn_norm_aggregate(x)
+    def aggregate_update(self, x, w, layer: int = 0):
+        return self.engine.aggregate_update(x, w, layer=layer)
 
-    def mean_aggregate(self, x):
-        return self.engine.mean_aggregate(x)
+    def gcn_norm_aggregate(self, x, layer: int = 0):
+        return self.engine.gcn_norm_aggregate(x, layer=layer)
+
+    def gcn_norm_aggregate_update(self, x, w, layer: int = 0):
+        return self.engine.gcn_norm_aggregate_update(x, w, layer=layer)
+
+    def mean_aggregate(self, x, layer: int = 0):
+        return self.engine.mean_aggregate(x, layer=layer)
+
+    def mean_aggregate_update(self, x, w, layer: int = 0):
+        return self.engine.mean_aggregate_update(x, w, layer=layer)
 
     # -- the online tuning protocol ------------------------------------------
 
@@ -193,15 +310,21 @@ class DynamicGNNEngine:
         nxt = self.tuner.propose()
         if self.tuner.converged:
             return self._commit()
-        return self._set_config(nxt)
+        return self._set_config(_as_config_dict(nxt))
 
     def retune(self, graph: Optional[CSRGraph] = None,
                d_feat: Optional[int] = None, *,
+               layer_dims: Optional[Sequence[int]] = None,
                force: bool = False) -> bool:
         """Drift entry point: the workload changed (graph grew, features
         resized).  Recomputes the WorkloadShape; if it drifted past the
         tuner's threshold the search re-opens (warm-started from the old
         best) and the engine rebuilds against the new graph.
+
+        Per-layer engines report width changes via ``layer_dims`` (one
+        aggregation width per layer — a single ``d_feat`` cannot describe
+        them); passing a changed ``d_feat`` alone there is an error rather
+        than a silently dropped drift signal.
 
         ``force=True`` re-opens the search even when the WorkloadShape is
         unchanged.  This is the *traffic*-drift path: a serving frontend
@@ -212,24 +335,52 @@ class DynamicGNNEngine:
         """
         if graph is not None:
             self.graph = graph
+            self._partition = None   # topology changed: re-partition
+        if self.per_layer and d_feat is not None \
+                and int(d_feat) != self._model_d_feat and layer_dims is None:
+            raise ValueError(
+                "per-layer engine: report feature-width changes via "
+                "retune(layer_dims=[...]) — a lone d_feat cannot describe "
+                "per-layer aggregation widths")
         if d_feat is None:
-            d_feat = self.shape.d_feat
+            d_feat = self._model_d_feat if self.per_layer \
+                else self.shape.d_feat
+        self._model_d_feat = int(d_feat)
+        if layer_dims is not None:
+            if not self.per_layer:
+                raise ValueError("layer_dims on a global-mode engine")
+            self.layer_dims = list(layer_dims)
         g = (self.graph.with_self_loops() if self.self_loops else self.graph)
-        shape = WorkloadShape.from_graph(
-            g, self.mesh.shape[self.axis_name], int(d_feat))
-        reopened = self.tuner.observe_shape(shape)
+        n_dev = self.mesh.shape[self.axis_name]
+        if self.per_layer:
+            shapes = layer_workload_shapes(g, n_dev, self.layer_dims)
+            shape = max(shapes, key=lambda s: s.d_feat)
+            reopened = self.tuner.observe_shape(shapes)
+        else:
+            shapes = None
+            shape = WorkloadShape.from_graph(g, n_dev, int(d_feat))
+            reopened = self.tuner.observe_shape(shape)
         if force and not reopened:
             self.tuner.reopen()
             reopened = True
+        if reopened and self.per_layer:
+            # the layer count / per-layer widths may have moved: resize the
+            # search and rebuild the VMEM feasibility predicates against the
+            # LIVE shapes (stale checks would admit configs that spill)
+            self.tuner.reconfigure(
+                num_layers=len(shapes),
+                vmem_checks=[make_vmem_check(s, self.hw) for s in shapes])
         if reopened:
             self.shape = shape
+            self._layer_shapes = shapes
             self.committed = False
             self._window.reset()
             self.log(f"[runtime] workload drift → search re-opened "
                      f"(reopen #{self.tuner.reopens})")
             nxt = self.tuner.propose()
             if nxt is not None:
-                self._set_config(nxt, force_rebuild=graph is not None)
+                self._set_config(_as_config_dict(nxt),
+                                 force_rebuild=graph is not None)
         elif graph is not None:
             # same shape class, new topology: rebuild the plan in place
             self.engine = self._build_engine(self._config)
@@ -243,13 +394,17 @@ class DynamicGNNEngine:
         if best is None:  # nothing measurable (all configs vmem-rejected)
             return False
         if self.cache is not None:
-            self.cache.put(self.shape, best, self.tuner.best_latency)
+            if self.per_layer and self._layer_shapes is not None:
+                self.cache.put_layers(self._layer_shapes, best,
+                                      self.tuner.best_latency)
+            elif not self.per_layer:
+                self.cache.put(self.shape, best, self.tuner.best_latency)
         self.log(f"[runtime] tuning converged after "
                  f"{self.tuner.measured} measurements: {best} "
                  f"({self.tuner.best_latency * 1e3:.2f} ms)")
-        return self._set_config(best)
+        return self._set_config(_as_config_dict(best))
 
-    def _set_config(self, cfg: Dict[str, int],
+    def _set_config(self, cfg: Dict,
                     force_rebuild: bool = False) -> bool:
         if cfg == self._config and not force_rebuild:
             return False

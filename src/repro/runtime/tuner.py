@@ -34,12 +34,12 @@ Extras over the offline search, per the paper's runtime:
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.autotune import (HardwareSpec, TPU_V5E, SearchResult,
                                  WorkloadShape, vmem_bytes)
 
-__all__ = ["OnlineTuner", "make_vmem_check", "shape_drift"]
+__all__ = ["OnlineTuner", "PerLayerTuner", "make_vmem_check", "shape_drift"]
 
 Key = Tuple[int, int, int]
 
@@ -275,3 +275,246 @@ class OnlineTuner:
                     nk[dim] = space[j]
                     out.append(tuple(nk))
         return out
+
+
+class PerLayerTuner:
+    """Layer-wise (ps, dist, wpb) search over full-forward step times.
+
+    GNN layers have radically different shapes (GCN: wide input layer vs a
+    16-dim hidden layer), so one global config leaves latency on the table.
+    This tuner lifts the paper's coordinate descent one level: the *layer*
+    becomes the outer coordinate.
+
+    Phases (one :class:`OnlineTuner` each, identical inner control flow):
+
+    1. **global** — every layer shares the candidate config; warm-started
+       from the cached config if one exists.  This is the pre-refactor
+       search, kept as the cheap first approximation.
+    2. **per-layer ℓ = 0..L-1** — layer ℓ's knobs move, every other layer
+       is pinned (layers < ℓ at their committed optimum, layers > ℓ at the
+       global optimum); each phase warm-starts from the global best, so
+       its first measurement re-validates the incumbent under the current
+       pinning.
+
+    Every ``observe`` is the latency of the FULL forward under the proposed
+    per-layer configs, so each phase's table is a valid surface for its
+    free layer.  The measurement ``budget`` is shared across all phases —
+    when it runs out the search commits the best configs seen so far.
+    The public protocol mirrors :class:`OnlineTuner` with per-layer lists
+    in place of single config dicts.
+    """
+
+    def __init__(
+        self,
+        num_layers: int,
+        ps_space: Tuple[int, ...] = DEFAULT_PS,
+        dist_space: Tuple[int, ...] = DEFAULT_DIST,
+        pb_space: Tuple[int, ...] = DEFAULT_PB,
+        *,
+        vmem_checks=None,   # None | callable | per-layer sequence of callables
+        top_k: int = 3,
+        budget: Optional[int] = None,
+        drift_threshold: float = 0.25,
+        warm_start=None,    # None | global dict | per-layer list of dicts
+        tune_global_first: bool = True,
+    ):
+        if num_layers < 1:
+            raise ValueError("num_layers must be >= 1")
+        self.num_layers = int(num_layers)
+        self.ps_space = tuple(sorted(ps_space))
+        self.dist_space = tuple(sorted(dist_space))
+        self.pb_space = tuple(sorted(pb_space))
+        if vmem_checks is None or callable(vmem_checks):
+            vmem_checks = [vmem_checks] * self.num_layers
+        if len(vmem_checks) != self.num_layers:
+            raise ValueError("one vmem check per layer required")
+        self.vmem_checks = list(vmem_checks)
+        self.top_k = int(top_k)
+        self.budget = budget
+        self.drift_threshold = float(drift_threshold)
+        self.tune_global_first = bool(tune_global_first)
+        self.measured = 0
+        self.reopens = 0
+        self._shapes: Optional[List[WorkloadShape]] = None
+        self.trajectory: List[Tuple[List[Dict[str, int]], float]] = []
+        self.reset(warm_start=warm_start)
+
+    # -- public protocol -----------------------------------------------------
+
+    def reset(self, warm_start=None) -> None:
+        """(Re-)open the search; stale measurements are discarded."""
+        self.trajectory = []
+        self._best_lat = math.inf
+        self._best_cfgs: Optional[List[Dict[str, int]]] = None
+        default = dict(ps=self.ps_space[0], dist=self.dist_space[0],
+                       pb=self.pb_space[0])
+        if isinstance(warm_start, dict):
+            global_warm, layer_warms = dict(warm_start), None
+        elif warm_start is not None:          # per-layer warm start
+            layer_warms = [dict(c) for c in warm_start]
+            if len(layer_warms) != self.num_layers:
+                raise ValueError("one warm config per layer required")
+            global_warm = None
+        else:
+            global_warm, layer_warms = None, None
+        self._configs = (list(layer_warms) if layer_warms is not None
+                         else [dict(global_warm or default)] * self.num_layers)
+        self._phases: List[Tuple] = []
+        if self.tune_global_first and layer_warms is None:
+            self._phases.append(("global", global_warm))
+        for i in range(self.num_layers):
+            self._phases.append(("layer", i))
+        self._sub: Optional[OnlineTuner] = None
+        self._sub_layer: Optional[int] = None
+        self._done = False
+        self._start_next_phase()
+
+    @property
+    def converged(self) -> bool:
+        return self._done
+
+    def propose(self) -> Optional[List[Dict[str, int]]]:
+        """Per-layer configs awaiting a measurement (the best once done)."""
+        if self._done:
+            return self.best
+        cand = self._sub.propose()
+        if self._sub_layer is None:           # global phase
+            return [dict(cand)] * self.num_layers
+        out = [dict(c) for c in self._configs]
+        out[self._sub_layer] = dict(cand)
+        return out
+
+    def observe(self, latency: float) -> None:
+        """Deliver the full-forward latency for the proposed configs."""
+        if self._done:
+            raise RuntimeError("observe() on a converged tuner — call "
+                               "reset() or reopen() to re-open")
+        latency = float(latency)
+        cfgs = self.propose()
+        self.measured += 1
+        self.trajectory.append((cfgs, latency))
+        if latency < self._best_lat:
+            self._best_lat, self._best_cfgs = latency, cfgs
+        self._sub.observe(latency)
+        while not self._done and self._sub.converged:
+            self._commit_phase()
+        if (self.budget is not None and self.measured >= self.budget
+                and not self._done):
+            self._commit_phase(exhausted=True)
+
+    @property
+    def best(self) -> Optional[List[Dict[str, int]]]:
+        """Best *measured* joint configs (never worse than any phase pick)."""
+        if self._best_cfgs is None:
+            return None
+        return [dict(c) for c in self._best_cfgs]
+
+    @property
+    def best_latency(self) -> float:
+        return self._best_lat
+
+    def reopen(self) -> None:
+        """Re-open per-layer phases, warm-started from the best configs
+        (traffic/shape drift made the measured surface stale)."""
+        self.reopens += 1
+        self.reset(warm_start=self.best or self._configs)
+
+    def reconfigure(
+        self,
+        num_layers: Optional[int] = None,
+        vmem_checks=None,
+        warm_start=None,
+    ) -> None:
+        """Re-shape an already-reopened search: the layer count and/or the
+        feasibility predicates changed (drift moved the per-layer widths or
+        the model gained/lost layers).  The warm start — the previous best
+        by default — is resized to the new layer count (extra layers seed
+        from the last known config).  Does NOT count as another reopen;
+        callers invoke it right after the reopen that detected the change.
+        """
+        if num_layers is not None:
+            if num_layers < 1:
+                raise ValueError("num_layers must be >= 1")
+            self.num_layers = int(num_layers)
+        if vmem_checks is not None:
+            if callable(vmem_checks):
+                vmem_checks = [vmem_checks] * self.num_layers
+            if len(vmem_checks) != self.num_layers:
+                raise ValueError("one vmem check per layer required")
+            self.vmem_checks = list(vmem_checks)
+        elif len(self.vmem_checks) != self.num_layers:
+            self.vmem_checks = (self.vmem_checks
+                                + [self.vmem_checks[-1]] * self.num_layers
+                                )[:self.num_layers]
+        if warm_start is None:
+            warm_start = self.best or self._configs
+        if isinstance(warm_start, list) and warm_start:
+            warm_start = ([dict(c) for c in warm_start]
+                          + [dict(warm_start[-1])] * self.num_layers
+                          )[:self.num_layers]
+        self.reset(warm_start=warm_start)
+
+    def observe_shape(self, shapes) -> bool:
+        """Report live per-layer shapes; True ⇔ drift re-opened the search."""
+        if isinstance(shapes, WorkloadShape):
+            shapes = [shapes]
+        shapes = list(shapes)
+        if self._shapes is None:
+            self._shapes = shapes
+            return False
+        drift = max(shape_drift(a, b)
+                    for a, b in zip(self._shapes, shapes)) \
+            if len(shapes) == len(self._shapes) else math.inf
+        if drift <= self.drift_threshold:
+            return False
+        self._shapes = shapes
+        self.reopen()
+        return True
+
+    # -- internals -----------------------------------------------------------
+
+    def _layer_check(self, layer: Optional[int]):
+        if layer is not None:
+            return self.vmem_checks[layer]
+        checks = [c for c in self.vmem_checks if c is not None]
+        if not checks:
+            return None
+        return lambda ps, dist, pb: all(c(ps, dist, pb) for c in checks)
+
+    def _start_next_phase(self) -> None:
+        while self._phases:
+            phase = self._phases.pop(0)
+            if phase[0] == "global":
+                self._sub_layer = None
+                warm = phase[1]
+            else:
+                self._sub_layer = phase[1]
+                warm = dict(self._configs[self._sub_layer])
+            self._sub = OnlineTuner(
+                self.ps_space, self.dist_space, self.pb_space,
+                vmem_check=self._layer_check(self._sub_layer),
+                top_k=self.top_k, warm_start=warm,
+            )
+            if not self._sub.converged:
+                return
+            self._apply_sub_best()  # degenerate space: nothing to measure
+        self._done = True
+        self._sub = None
+
+    def _apply_sub_best(self) -> None:
+        best = self._sub.best
+        if best is None:
+            return
+        if self._sub_layer is None:
+            self._configs = [dict(best)] * self.num_layers
+        else:
+            self._configs[self._sub_layer] = dict(best)
+
+    def _commit_phase(self, exhausted: bool = False) -> None:
+        self._apply_sub_best()
+        if exhausted:
+            self._phases = []
+            self._done = True
+            self._sub = None
+            return
+        self._start_next_phase()

@@ -20,7 +20,15 @@ Request path (one micro-batch)::
 Because both passes fold the *same* stage functions
 (:func:`repro.core.gnn.apply_stage`) over the *same* tables, served logits
 are bitwise-identical to the offline ``*_apply`` full-graph forward under
-the active config.
+the active config.  This holds for per-layer engines too: each stage
+consumes its own :class:`~repro.core.placement.LayerPlan` (including
+fused-update layers), and because every layer plan shares one PGAS layout
+*within a build*, ``engine.plan`` remains the single layout handle for
+seed-row gathers and padding.  A per-layer re-tune goes through the same
+rebuild path as the global one: ``_on_rebuild`` re-pads the feature
+table, re-jits both serve steps against the rebuilt plans, and
+invalidates the h₁ cache (a ``dist`` move changes the lcm-padded layout,
+so cached rows would no longer line up).
 
 Traffic-driven re-tuning: every ``check_every`` micro-batches the engine
 snapshots :class:`~repro.serve.stats.WorkloadStats` and compares it to the

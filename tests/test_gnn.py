@@ -32,10 +32,11 @@ def test_gcn_layer_matches_dense():
         params["layers"][0]["b"])
     w2, b2 = np.asarray(params["layers"][1]["w"]), np.asarray(
         params["layers"][1]["b"])
-    # layer 1: d_in >= d_out → transform-then-aggregate (same math)
-    h = np.maximum(ahat @ (x @ w1 + b1), 0)
-    want = ahat @ (h @ w2 + b2) if h.shape[1] >= w2.shape[1] \
-        else (ahat @ h) @ w2 + b2
+    # bias is applied post-aggregation (PyG convention), so every engine
+    # dataflow (aggregate-first / transform-first / fused) matches this one
+    # reference: Â (X W) + b == (Â X) W + b
+    h = np.maximum(ahat @ (x @ w1) + b1, 0)
+    want = ahat @ (h @ w2) + b2
     np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
 
 

@@ -1,0 +1,524 @@
+"""Per-layer pipeline plans + fused update-phase overlap.
+
+Covers the per-layer refactor's contracts:
+
+* plan sharing — every LayerPlan derives from ONE SharedPartition; layers
+  with identical (ps, dist) share the same AggregationPlan object; mixed
+  ``dist`` layers share one PGAS layout (lcm row padding);
+* bitwise equality — a per-layer engine whose layers all carry one config
+  is bit-for-bit the old single-plan path;
+* fused update — ``(A x) W`` with the per-tile matmul inside the ring
+  matches the unfused aggregate-then-matmul path across GCN/GIN/SAGE/GAT
+  within the documented tolerance (rtol=atol=2e-4: the two dataflows
+  differ only in float summation order), in training (forward + grads)
+  and in cached serving;
+* per-layer tuning — the PerLayerTuner converges to *different* per-layer
+  configs on a skewed-width surface, under a shared budget, warm-started
+  from the global config;
+* ConfigCache v2 — per-layer entries round-trip; pre-refactor (v1) cache
+  files are silently discarded, never a crash.
+"""
+import json
+import math
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.placement import plan_from_partition
+from repro.dist import flat_ring_mesh
+from repro.runtime import (ConfigCache, DynamicGNNEngine, PerLayerTuner,
+                           ProfileConfig)
+
+RNG = np.random.default_rng(0)
+
+# Documented tolerance for fused-vs-unfused equivalence: the fused path
+# computes Σ_s (partial_s @ W), the unfused path (Σ_s partial_s) @ W —
+# identical in exact arithmetic, reordered float summation otherwise.
+FUSED_RTOL = FUSED_ATOL = 2e-4
+
+
+def _graph(n=240, d=12, seed=5):
+    g = C.power_law(n, avg_degree=7.0, locality=0.4, seed=seed)
+    x = RNG.normal(size=(n, d)).astype(np.float32)
+    return g, x
+
+
+def _forward(engine, apply_fn, params, x):
+    out = apply_fn(params, engine, engine.shard(engine.pad(x)))
+    return C.unpad_embeddings(engine.plan, np.asarray(out))
+
+
+# ---------------------------------------------------------------------------
+# shared partition / plan construction
+# ---------------------------------------------------------------------------
+
+def test_plan_from_partition_matches_build_plan():
+    g, _ = _graph()
+    part = C.build_partition(g, 4)
+    for ps, dist in [(4, 1), (8, 2), (16, 4)]:
+        a = plan_from_partition(part, ps=ps, dist=dist)
+        b = C.build_plan(g, 4, ps=ps, dist=dist)
+        for f in ("local_nbrs", "local_mask", "local_targets", "remote_nbrs",
+                  "remote_mask", "remote_targets", "bounds", "node_counts"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+        assert (a.rows_per_dev, a.tile_rows) == (b.rows_per_dev, b.tile_rows)
+
+
+def test_identical_layer_configs_share_one_plan_object():
+    g, _ = _graph()
+    plans = C.build_layer_plans(g, 2, [dict(ps=8, dist=2), dict(ps=8, dist=2),
+                                       dict(ps=4, dist=2)])
+    assert plans[0].plan is plans[1].plan          # no duplicated tables
+    assert plans[2].plan is not plans[0].plan
+    assert plans[0].config == dict(ps=8, dist=2, pb=1)
+
+
+def test_mixed_dist_layers_share_pgas_layout():
+    g, x = _graph()
+    # layout invariants on a 2-device split (host-side, no mesh needed)
+    plans = C.build_layer_plans(g, 2, [dict(ps=4, dist=3), dict(ps=8, dist=2)])
+    p0, p1 = plans[0].plan, plans[1].plan
+    assert p0.rows_per_dev == p1.rows_per_dev      # one embedding layout
+    assert p0.rows_per_dev % 6 == 0                # lcm(3, 2) padding
+    assert (p0.tile_rows * 3 == p0.rows_per_dev
+            and p1.tile_rows * 2 == p1.rows_per_dev)
+    # both schedules aggregate correctly over that shared layout (1-device
+    # mesh here; the 8-device ring runs in tests/multidev/mgg_equivalence.py)
+    want = C.reference_aggregate(g.indptr, g.indices, x)
+    mesh = flat_ring_mesh(1)
+    plans1 = C.build_layer_plans(g, 1, [dict(ps=4, dist=3),
+                                        dict(ps=8, dist=2)])
+    q0, q1 = plans1[0].plan, plans1[1].plan
+    assert q0.rows_per_dev == q1.rows_per_dev and q0.rows_per_dev % 6 == 0
+    xp = jnp.asarray(C.pad_embeddings(q0, x))
+    for p in (q0, q1):
+        got = C.unpad_embeddings(p, np.asarray(
+            C.mgg_aggregate(xp, p, mesh)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# per-layer engine == single-plan engine (bitwise) when configs coincide
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["gcn", "gin", "sage", "gat"])
+def test_per_layer_engine_bitwise_matches_single_plan(model):
+    g, x = _graph()
+    mesh = flat_ring_mesh(1)
+    init, apply_fn, kw = C.MODEL_ZOO[model]
+    params = init(jax.random.key(3), x.shape[1], 5, **kw)
+    single = C.GNNEngine.build(g, mesh, ps=8, dist=2)
+    n_layers = len(params["layers"])
+    per_layer = C.GNNEngine.build(
+        g, mesh, layer_configs=[dict(ps=8, dist=2)] * n_layers)
+    assert per_layer.per_layer and not single.per_layer
+    got = _forward(per_layer, apply_fn, params, x)
+    want = _forward(single, apply_fn, params, x)
+    np.testing.assert_array_equal(got, want)       # bitwise, not allclose
+
+
+def test_per_layer_engine_distinct_configs_still_correct():
+    g, x = _graph()
+    mesh = flat_ring_mesh(1)
+    init, apply_fn, kw = C.MODEL_ZOO["gcn"]
+    params = init(jax.random.key(3), x.shape[1], 5, **kw)
+    ref = _forward(C.GNNEngine.build(g, mesh, ps=8, dist=1),
+                   apply_fn, params, x)
+    eng = C.GNNEngine.build(g, mesh, layer_configs=[
+        dict(ps=16, dist=2, interleave=False), dict(ps=2, dist=1)])
+    assert eng.layer_configs[0] != eng.layer_configs[1]
+    np.testing.assert_allclose(_forward(eng, apply_fn, params, x), ref,
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused update == unfused (documented tolerance), all four models
+# ---------------------------------------------------------------------------
+
+def test_fused_mgg_aggregate_matches_matmul_after_ring():
+    g, x = _graph()
+    w = RNG.normal(size=(x.shape[1], 7)).astype(np.float32)
+    want = C.reference_aggregate(g.indptr, g.indices, x) @ w
+    mesh = flat_ring_mesh(1)   # the 8-dev ring: tests/multidev/mgg_equivalence
+    for ps, dist, interleave in [(4, 1, True), (8, 2, True), (16, 2, False)]:
+        plan = C.build_plan(g, 1, ps=ps, dist=dist)
+        out = C.mgg_aggregate(
+            jnp.asarray(C.pad_embeddings(plan, x)), plan, mesh,
+            interleave=interleave, update_w=jnp.asarray(w))
+        got = C.unpad_embeddings(plan, np.asarray(out))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("model", ["gcn", "gin", "sage", "gat"])
+def test_fused_update_matches_unfused_forward_and_grads(model):
+    g, x = _graph()
+    mesh = flat_ring_mesh(1)
+    init, apply_fn, kw = C.MODEL_ZOO[model]
+    params = init(jax.random.key(7), x.shape[1], 5, **kw)
+    unfused = C.GNNEngine.build(g, mesh, ps=8, dist=2)
+    fused = C.GNNEngine.build(g, mesh, ps=8, dist=2, fuse_update=True)
+    assert all(lp.fuse_update for lp in fused.layer_plans)
+    np.testing.assert_allclose(
+        _forward(fused, apply_fn, params, x),
+        _forward(unfused, apply_fn, params, x),
+        rtol=FUSED_RTOL, atol=FUSED_ATOL)
+
+    # training: gradients through the fused ring match the unfused ones
+    def loss(p, eng):
+        xp = eng.shard(eng.pad(x))
+        return (apply_fn(p, eng, xp).astype(jnp.float32) ** 2).mean()
+
+    gu = jax.grad(lambda p: loss(p, unfused))(params)
+    gf = jax.grad(lambda p: loss(p, fused))(params)
+    for a, b in zip(jax.tree.leaves(gu), jax.tree.leaves(gf)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("model", ["gcn", "gin", "sage", "gat"])
+def test_fused_cached_serving_matches_unfused_offline(model):
+    """Cached serving on a fused engine: bitwise vs the fused offline
+    forward (same stage functions), tolerance vs the unfused path."""
+    from repro.serve import GNNServeEngine, TrafficPhase, ZipfTraffic, \
+        run_trace
+
+    g, x = _graph(seed=9)
+    mesh = flat_ring_mesh(1)
+    init, apply_fn, kw = C.MODEL_ZOO[model]
+    params = init(jax.random.key(1), x.shape[1], 5, **kw)
+    fused = C.GNNEngine.build(g, mesh, ps=8, dist=1, fuse_update=True)
+    srv = GNNServeEngine(fused, params, model, x, g, slots=4)
+    traffic = ZipfTraffic(g.num_nodes, x.shape[1], [
+        TrafficPhase(requests=12, alpha=1.2, seeds_max=3)], seed=2)
+    results = run_trace(srv, traffic)
+    assert any(r.cached for r in results)
+
+    # offline references must be JITTED like the serve steps (eager XLA
+    # fuses differently in the low bits)
+    def _jit_forward(eng):
+        xp = eng.shard(eng.pad(x))
+        out = jax.jit(lambda p, t: apply_fn(p, eng, t))(params, xp)
+        return C.unpad_embeddings(eng.plan, np.asarray(out))
+
+    off_fused = _jit_forward(fused)
+    off_unfused = _jit_forward(C.GNNEngine.build(g, mesh, ps=8, dist=1))
+    for r in results:
+        np.testing.assert_array_equal(r.logits, off_fused[r.seeds])
+        np.testing.assert_allclose(r.logits, off_unfused[r.seeds],
+                                   rtol=FUSED_RTOL, atol=FUSED_ATOL)
+
+
+# ---------------------------------------------------------------------------
+# per-layer tuning
+# ---------------------------------------------------------------------------
+
+def _skewed_surface(widths, cfgs):
+    """Deterministic skewed-width latency: wide layers are bandwidth-bound
+    (ps overhead amortized → want large ps), narrow layers are
+    overhead-bound (padding waste dominates → want small ps).  The measured
+    analogue runs as benchmarks/fig9_ablations.py fig9c (CI --smoke)."""
+    t = 0.0
+    for w, c in zip(widths, cfgs):
+        opt = 16 if w >= 64 else 2
+        t += (w / 64.0) * (1.0 + 0.3 * abs(math.log2(c["ps"])
+                                           - math.log2(opt))
+                           + 0.1 * (c["dist"] - 1) + 0.05 * (c["pb"] - 1))
+    return t
+
+
+def test_per_layer_tuner_converges_to_distinct_configs():
+    widths = (96, 8)  # skewed: wide input layer, narrow hidden layer
+    t = PerLayerTuner(2, (2, 4, 8, 16), (1, 2), (1,), budget=40)
+    while not t.converged:
+        t.observe(_skewed_surface(widths, t.propose()))
+    best = t.best
+    assert best[0]["ps"] == 16 and best[1]["ps"] == 2
+    assert best[0] != best[1]                    # ≥ 2 distinct configs
+    assert t.measured <= 40
+
+
+def test_per_layer_tuner_budget_and_warm_start():
+    widths = (96, 8)
+    # warm start from a global config: it is the FIRST thing measured
+    t = PerLayerTuner(2, (2, 4, 8, 16), (1, 2), (1,),
+                      warm_start=dict(ps=8, dist=1, pb=1))
+    first = t.propose()
+    assert first == [dict(ps=8, dist=1, pb=1)] * 2
+    while not t.converged:
+        t.observe(_skewed_surface(widths, t.propose()))
+    full_measurements = t.measured
+    # a hard budget commits the best-seen and stops
+    tb = PerLayerTuner(2, (2, 4, 8, 16), (1, 2), (1,), budget=3)
+    while not tb.converged:
+        tb.observe(_skewed_surface(widths, tb.propose()))
+    assert tb.measured == 3 < full_measurements
+    assert tb.best is not None
+
+
+def test_per_layer_tuner_reopen_warm_starts_from_best():
+    widths = (96, 8)
+    t = PerLayerTuner(2, (2, 4, 8, 16), (1,), (1,))
+    while not t.converged:
+        t.observe(_skewed_surface(widths, t.propose()))
+    best = t.best
+    t.reopen()
+    assert t.reopens == 1 and not t.converged
+    assert t.propose() == best  # per-layer warm start, no global re-phase
+
+
+def test_per_layer_dynamic_engine_commits_distinct_configs():
+    g, x = _graph(n=160)
+    eng = DynamicGNNEngine.build(
+        g, flat_ring_mesh(1), d_feat=x.shape[1], layer_dims=[96, 8],
+        ps_space=(2, 4, 8, 16), dist_space=(1, 2), pb_space=(1,),
+        window=ProfileConfig(warmup=0, iters=1))
+    assert eng.per_layer
+    gsl = g.with_self_loops()
+    ref = C.reference_aggregate(gsl.indptr, gsl.indices, x)
+    for _ in range(200):
+        out = C.unpad_embeddings(
+            eng.plan, np.asarray(eng.aggregate(eng.shard(eng.pad(x)))))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+        eng.observe_step(_skewed_surface((96, 8), eng.config["layers"]))
+        if eng.committed:
+            break
+    assert eng.committed
+    layers = eng.config["layers"]
+    assert layers[0]["ps"] == 16 and layers[1]["ps"] == 2
+    assert len({tuple(sorted(c.items())) for c in layers}) >= 2
+    # the live engine really runs per-layer plans
+    assert eng.engine.per_layer
+    assert eng.layer_configs == layers
+
+
+def test_per_layer_dynamic_engine_bitwise_matches_static_per_layer():
+    g, x = _graph(n=160)
+    mesh = flat_ring_mesh(1)
+    init, apply_fn, kw = C.MODEL_ZOO["gcn"]
+    params = init(jax.random.key(0), x.shape[1], 4, **kw)
+    eng = DynamicGNNEngine.build(
+        g, mesh, d_feat=x.shape[1], layer_dims=[96, 8],
+        ps_space=(2, 4), dist_space=(1,), pb_space=(1,),
+        window=ProfileConfig(warmup=0, iters=1))
+    for _ in range(100):
+        eng.observe_step(_skewed_surface((96, 8), eng.config["layers"]))
+        if eng.committed:
+            break
+    assert eng.committed
+    static = C.GNNEngine.build(g, mesh, layer_configs=eng.config["layers"])
+    np.testing.assert_array_equal(_forward(eng.engine, apply_fn, params, x),
+                                  _forward(static, apply_fn, params, x))
+
+
+def test_per_layer_retune_resizes_tuner_on_layer_count_change():
+    """retune(layer_dims=...) with a NEW layer count resizes the search:
+    proposals carry one config per live layer, fresh feasibility checks
+    are built from the live shapes, and the committed cache entry has
+    matching lengths (so warm start keeps working)."""
+    g, x = _graph(n=160)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        eng = DynamicGNNEngine.build(
+            g, flat_ring_mesh(1), d_feat=x.shape[1], layer_dims=[96, 8],
+            ps_space=(2, 4), dist_space=(1,), pb_space=(1,),
+            window=ProfileConfig(warmup=0, iters=1), cache_path=path)
+        for _ in range(100):
+            eng.observe_step(_skewed_surface((96, 8), eng.config["layers"]))
+            if eng.committed:
+                break
+        assert eng.committed
+        # the model grew a layer
+        assert eng.retune(layer_dims=[96, 8, 8])
+        assert eng.tuner.num_layers == 3
+        assert len(eng.tuner.vmem_checks) == 3
+        assert len(eng.config["layers"]) == 3       # proposals resized
+        assert len(eng.engine.layer_plans) == 3     # engine rebuilt to match
+        for _ in range(200):
+            eng.observe_step(_skewed_surface(
+                (96, 8, 8), eng.config["layers"]))
+            if eng.committed:
+                break
+        assert eng.committed and len(eng.config["layers"]) == 3
+        # the committed per-layer entry round-trips at the new length
+        from repro.core.autotune import layer_workload_shapes
+        shapes3 = layer_workload_shapes(g.with_self_loops(), 1, [96, 8, 8])
+        assert ConfigCache(path).get_layers(shapes3) == eng.config["layers"]
+
+
+def test_dynamic_engine_reuses_partition_across_tuner_moves():
+    """Tuner moves re-derive schedules only — the node split + locality
+    split (SharedPartition) is built once and reused until the topology
+    changes (retune(graph=...))."""
+    g, x = _graph(n=160)
+    eng = DynamicGNNEngine.build(
+        g, flat_ring_mesh(1), d_feat=x.shape[1], layer_dims=[96, 8],
+        ps_space=(2, 4, 8), dist_space=(1, 2), pb_space=(1,),
+        window=ProfileConfig(warmup=0, iters=1))
+    part0 = eng.engine.partition
+    assert part0 is not None
+    rebuilds = 0
+    for _ in range(200):
+        rebuilds += bool(eng.observe_step(
+            _skewed_surface((96, 8), eng.config["layers"])))
+        if eng.committed:
+            break
+    assert eng.committed and rebuilds >= 2
+    assert eng.engine.partition is part0          # shared across every move
+    # a topology change invalidates it
+    g2 = C.power_law(g.num_nodes, avg_degree=12.0, locality=0.3, seed=1)
+    eng.retune(graph=g2)
+    assert eng.engine.partition is not part0
+
+
+def test_pipeline_latency_model_sums_per_layer_terms():
+    from repro.core.autotune import (estimate_latency,
+                                     estimate_pipeline_latency)
+
+    g, _ = _graph()
+    shapes = C.layer_workload_shapes(g, 4, [96, 8])
+    assert [s.d_feat for s in shapes] == [96, 8]
+    assert shapes[0].local_edges_max == shapes[1].local_edges_max
+    cfgs = [dict(ps=16, dist=2, pb=1), dict(ps=2, dist=1, pb=1)]
+    total = estimate_pipeline_latency(shapes, cfgs)
+    assert total == pytest.approx(sum(
+        estimate_latency(s, c["ps"], c["dist"], c["pb"])
+        for s, c in zip(shapes, cfgs)))
+    # the update term: fused folds FLOPs under the ring steps, unfused pays
+    # them serially after — fused is never modeled slower
+    fused = estimate_pipeline_latency(shapes, cfgs, d_outs=[16, 4], fuse=True)
+    unfused = estimate_pipeline_latency(shapes, cfgs, d_outs=[16, 4])
+    assert fused <= unfused
+    assert unfused > total  # the update phase costs something
+    with pytest.raises(ValueError):
+        estimate_pipeline_latency(shapes, cfgs[:1])
+
+
+# ---------------------------------------------------------------------------
+# ConfigCache v2
+# ---------------------------------------------------------------------------
+
+def test_cache_per_layer_roundtrip_and_warm_start():
+    from repro.core.autotune import WorkloadShape
+
+    shapes = [WorkloadShape(n_dev=2, d_feat=96, rows_per_dev=50,
+                            local_edges_max=200, remote_edges_max=80),
+              WorkloadShape(n_dev=2, d_feat=8, rows_per_dev=50,
+                            local_edges_max=200, remote_edges_max=80)]
+    cfgs = [dict(ps=16, dist=1, pb=1), dict(ps=2, dist=1, pb=1)]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        cache = ConfigCache(path, hw="test:hw:2")
+        assert cache.get_layers(shapes) is None
+        cache.put_layers(shapes, cfgs, 1.5e-3)
+        assert cache.get_layers(shapes) == cfgs
+        # per-layer and global entries coexist under distinct keys
+        cache.put(shapes[0], dict(ps=4, dist=2, pb=1), 2e-3)
+        assert cache.get(shapes[0]) == dict(ps=4, dist=2, pb=1)
+        assert cache.get_layers(shapes) == cfgs
+        # a different width stack misses
+        other = [shapes[0], shapes[0].with_d_feat(16)]
+        assert cache.get_layers(other) is None
+
+
+def test_cache_v1_files_silently_discarded():
+    """Pre-refactor cache files (schema v1) read as empty — never a crash,
+    and the next put writes a clean v2 file."""
+    from repro.core.autotune import WorkloadShape
+
+    shape = WorkloadShape(n_dev=2, d_feat=16, rows_per_dev=50,
+                          local_edges_max=200, remote_edges_max=80)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        cache = ConfigCache(path, hw="test:hw:2")
+        v1 = dict(version=1, entries={
+            cache.key(shape): dict(config=dict(ps=8, dist=2, pb=4),
+                                   latency=1e-3)})
+        with open(path, "w") as f:
+            json.dump(v1, f)
+        assert cache.get(shape) is None            # discarded, no crash
+        assert cache.get_layers([shape]) is None
+        assert len(cache) == 0
+        cache.put(shape, dict(ps=4, dist=1, pb=1), 1e-3)
+        assert cache.get(shape) == dict(ps=4, dist=1, pb=1)
+        with open(path) as f:
+            assert json.load(f)["version"] == 2
+
+
+def test_per_layer_warm_starts_from_global_cache_entry():
+    """A previous GLOBAL run's cached config seeds the per-layer search —
+    including for unfused GCN, whose aggregation widths exclude the input
+    d_feat the global entry is keyed under."""
+    g, x = _graph(n=160, d=96)
+    mesh = flat_ring_mesh(1)
+    init, _apply, kw = C.MODEL_ZOO["gcn"]
+    params = init(jax.random.key(0), 96, 4, **kw)
+    dims = C.aggregation_widths("gcn", params)    # [16, 4]: no 96 anywhere
+    assert 96 not in dims
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        e1 = DynamicGNNEngine.build(
+            g, mesh, d_feat=96, ps_space=(2, 4, 8), dist_space=(1,),
+            pb_space=(1,), window=ProfileConfig(warmup=0, iters=1),
+            cache_path=path)
+        for _ in range(100):
+            e1.observe_step(1.0 + abs(e1.config["ps"] - 4))
+            if e1.committed:
+                break
+        assert e1.committed and e1.config["ps"] == 4
+        e2 = DynamicGNNEngine.build(
+            g, mesh, d_feat=96, layer_dims=dims,
+            ps_space=(2, 4, 8), dist_space=(1,), pb_space=(1,),
+            window=ProfileConfig(warmup=0, iters=1), cache_path=path)
+        # global entry found → the warm global config is measured first
+        assert e2.config["layers"] == [dict(ps=4, dist=1, pb=1)] * len(dims)
+
+
+def test_per_layer_retune_takes_layer_dims_not_d_feat():
+    g, x = _graph(n=160)
+    eng = DynamicGNNEngine.build(
+        g, flat_ring_mesh(1), d_feat=x.shape[1], layer_dims=[96, 8],
+        ps_space=(2, 4), dist_space=(1,), pb_space=(1,),
+        window=ProfileConfig(warmup=0, iters=1))
+    for _ in range(100):
+        eng.observe_step(_skewed_surface((96, 8), eng.config["layers"]))
+        if eng.committed:
+            break
+    assert eng.committed
+    # the UNCHANGED model d_feat is fine (e.g. reporting graph growth only),
+    # even though per-layer mode stores the max aggregation width internally
+    assert not eng.retune(d_feat=x.shape[1])
+    # a lone changed d_feat cannot describe per-layer widths: explicit error
+    with pytest.raises(ValueError):
+        eng.retune(d_feat=512)
+    # widths reported per layer re-open the search past the drift threshold
+    assert eng.retune(layer_dims=[512, 8])
+    assert eng.layer_dims == [512, 8] and not eng.committed
+    assert eng.tuner.reopens == 1
+
+
+def test_per_layer_dynamic_engine_warm_starts_from_layer_cache():
+    g, x = _graph(n=160)
+    mesh = flat_ring_mesh(1)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        e1 = DynamicGNNEngine.build(
+            g, mesh, d_feat=x.shape[1], layer_dims=[96, 8],
+            ps_space=(2, 4, 8, 16), dist_space=(1,), pb_space=(1,),
+            window=ProfileConfig(warmup=0, iters=1), cache_path=path)
+        for _ in range(200):
+            e1.observe_step(_skewed_surface((96, 8), e1.config["layers"]))
+            if e1.committed:
+                break
+        assert e1.committed
+        best = e1.config["layers"]
+        # second engine: the cached per-layer stack is its starting config
+        e2 = DynamicGNNEngine.build(
+            g, mesh, d_feat=x.shape[1], layer_dims=[96, 8],
+            ps_space=(2, 4, 8, 16), dist_space=(1,), pb_space=(1,),
+            cache_path=path)
+        assert e2.config["layers"] == best

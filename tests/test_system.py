@@ -26,19 +26,40 @@ def test_dryrun_machinery_small_mesh():
     assert "PASSED" in out
 
 
-@pytest.mark.parametrize("script", [
+MULTIDEV_SCRIPTS = [
     "collectives.py",        # ring collectives + EF compression vs dense refs
-    "mgg_equivalence.py",    # MGG ring (all knobs) + baselines vs oracle
+    "mgg_equivalence.py",    # MGG ring (all knobs, per-layer, fused) vs oracle
     "gnn_training.py",       # end-to-end 8-device GCN training
     "elastic_restore.py",    # 2-dev checkpoint → 8-dev mesh restore
     "collectives_property.py",  # property sweep over 1/2/4/8-dev meshes
     "ring_tp.py",            # ring-pipelined TP matmuls == SPMD defaults
     "serve_gnn.py",          # 8-dev serving: drift → retune, cache, equality
-])
+]
+
+# dryrun_lite.py runs via test_dryrun_machinery_small_mesh above
+_MULTIDEV_NON_PARAMETRIZED = {"dryrun_lite.py"}
+
+
+@pytest.mark.parametrize("script", MULTIDEV_SCRIPTS)
 def test_multidevice_subprocess(script):
     """8 fake CPU devices in a fresh process (XLA flag set pre-import) —
     the pytest process itself must keep seeing exactly one device."""
     assert "PASSED" in _run(script)
+
+
+def test_every_multidev_script_is_registered():
+    """CI guard: a tests/multidev/ script that is not parametrized above
+    would exit nonzero in isolation yet never run — i.e. be silently
+    skipped.  Fail the suite (and hence the workflow) instead."""
+    on_disk = {f for f in os.listdir(MULTIDEV)
+               if f.endswith(".py") and not f.startswith("_")}
+    registered = set(MULTIDEV_SCRIPTS) | _MULTIDEV_NON_PARAMETRIZED
+    missing = on_disk - registered
+    assert not missing, (
+        f"multidev scripts never executed by the suite: {sorted(missing)} — "
+        f"add them to MULTIDEV_SCRIPTS in tests/test_system.py")
+    stale = registered - on_disk
+    assert not stale, f"registered multidev scripts missing on disk: {stale}"
 
 
 def test_collective_parser_on_synthetic_hlo():
