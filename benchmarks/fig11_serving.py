@@ -15,15 +15,29 @@ Reported per mode: p50/p99 request latency, layer-1 cache hit rate,
 retunes fired, dropped requests (must be 0).  GIN and GAT serving rows
 (``fig11_serving_gin`` / ``fig11_serving_gat``) run the same trace under
 a static config alongside the GCN pair, so every MODEL_STAGES family is
-exercised by the serving path.  ``--smoke`` (wired into
-``benchmarks/run.py --smoke`` → CI) shrinks the graph/traffic and
-*asserts* the acceptance criteria: ≥ 1 drift retune, hit rate > 0, no
-drops, and served logits equal to the offline full-graph forward — for
-GIN/GAT too.
+exercised by the serving path.
+
+**Cluster rows** (``fig11_cluster_*``) scale the retune mode out through
+:class:`repro.serve.cluster.ServeCluster`: 1 vs 2 vs 4 replicas, locality
+vs least-load routing, all replicas sharing one ConfigCache and
+staggering their drift retunes (drain → shadow-retune → rejoin).  Both
+sides of the cluster comparison are *pre-converged* on a steady warm-up
+trace so p99 reflects how each mode absorbs the drift — the single
+engine re-searches inline (re-jits land on live requests), the cluster
+routes around the draining replica.
+
+``--smoke`` (wired into ``benchmarks/run.py --smoke`` → CI) shrinks the
+graph/traffic and *asserts* the acceptance criteria: ≥ 1 drift retune,
+hit rate > 0, no drops, served logits equal to the offline full-graph
+forward (GIN/GAT too) — and for the cluster: ≥ 1 staggered retune, zero
+drops cluster-wide, and cluster p99 ≤ single-replica p99 under the
+rotation + burst phases.
 """
 from __future__ import annotations
 
+import os
 import sys
+import tempfile
 
 from benchmarks._common import emit, force_devices_from_env
 
@@ -35,8 +49,8 @@ import numpy as np  # noqa: E402
 import repro.core as C  # noqa: E402
 from repro.dist import flat_ring_mesh  # noqa: E402
 from repro.runtime import DynamicGNNEngine, ProfileConfig  # noqa: E402
-from repro.serve import (GNNServeEngine, TrafficPhase, WorkloadStats,  # noqa: E402
-                         ZipfTraffic, run_trace)
+from repro.serve import (GNNServeEngine, ServeCluster, TrafficPhase,  # noqa: E402
+                         WorkloadStats, ZipfTraffic, make_router, run_trace)
 
 
 def _phases(n_req: int) -> list:
@@ -67,6 +81,81 @@ def _serve(g, x, params, apply_fn, engine, *, smoke: bool, model: str = "gcn"):
         np.asarray(jax.jit(lambda p, t: apply_fn(p, engine, t))(params, xp)))
     for r in results[-10:]:
         np.testing.assert_allclose(r.logits, offline[r.seeds],
+                                   rtol=1e-5, atol=1e-5)
+    return results, lat, rep
+
+
+def _mk_dyn(g, d, mesh, spaces, smoke, cache_path=None):
+    return DynamicGNNEngine.build(
+        g, mesh, d_feat=d, **spaces,
+        window=ProfileConfig(warmup=1, iters=1 if smoke else 2),
+        cache_path=cache_path)
+
+
+def _mk_replica(g, x, params, engine, smoke):
+    return GNNServeEngine(
+        engine, params, "gcn", x, g, slots=8,
+        stats=WorkloadStats(window=8 if smoke else 24, top_k=8),
+        drift_threshold=0.5, check_every=2 if smoke else 4,
+        min_records=4)
+
+
+def _preconverge(run_fn, converged, num_nodes, d, smoke):
+    """Steady warm-up traffic until the initial searches commit, so the
+    measured trace isolates how each mode absorbs the *drift* retune."""
+    for rnd in range(4):
+        if converged():
+            break
+        run_fn(ZipfTraffic(num_nodes, d, [
+            TrafficPhase(requests=30 if smoke else 80, alpha=1.3,
+                         rate=150.0, seeds_max=4)], seed=123 + rnd))
+
+
+def _offline_for(srv, apply_fn, params):
+    eng = srv.eng
+    xp = eng.shard(eng.pad(srv.x))
+    return C.unpad_embeddings(eng.plan, np.asarray(
+        jax.jit(lambda p, t: apply_fn(p, eng, t))(params, xp)))
+
+
+def _serve_single_preconverged(g, x, params, apply_fn, spaces, mesh, *,
+                               smoke):
+    d = x.shape[1]
+    srv = _mk_replica(g, x, params, _mk_dyn(g, d, mesh, spaces, smoke),
+                      smoke)
+    _preconverge(lambda tr: run_trace(srv, tr),
+                 lambda: not srv._tuning, g.num_nodes, d, smoke)
+    results = run_trace(srv, ZipfTraffic(
+        g.num_nodes, d, _phases(30 if smoke else 120), seed=9))
+    offline = _offline_for(srv, apply_fn, params)
+    for r in results[-10:]:
+        np.testing.assert_allclose(r.logits, offline[r.seeds],
+                                   rtol=1e-5, atol=1e-5)
+    return results, np.array([r.latency for r in results]), srv.report()
+
+
+def _serve_cluster(g, x, params, apply_fn, n_rep, router_name, spaces,
+                   mesh, *, smoke, cache_path):
+    d = x.shape[1]
+    replicas = [
+        _mk_replica(g, x, params,
+                    _mk_dyn(g, d, mesh, spaces, smoke, cache_path), smoke)
+        for _ in range(n_rep)]
+    cluster = ServeCluster(replicas, router=make_router(router_name))
+    _preconverge(cluster.run_trace,
+                 lambda: all(not r._tuning for r in replicas),
+                 g.num_nodes, d, smoke)
+    results = cluster.run_trace(ZipfTraffic(
+        g.num_nodes, d, _phases(30 if smoke else 120), seed=9))
+    lat = np.array([r.latency for r in results])
+    rep = cluster.report()
+    # tail correctness per replica (final committed configs may differ)
+    offline = {}
+    for r in results[-10:]:
+        i = cluster.replica_of(r.request_id)
+        if i not in offline:
+            offline[i] = _offline_for(replicas[i], apply_fn, params)
+        np.testing.assert_allclose(r.logits, offline[i][r.seeds],
                                    rtol=1e-5, atol=1e-5)
     return results, lat, rep
 
@@ -142,6 +231,52 @@ def run(as_json: bool, smoke: bool = False) -> list:
         assert rep_d["dropped"] == 0 and rep_s["dropped"] == 0
         assert rep_d["cache_hit_rate"] > 0 and rep_s["cache_hit_rate"] > 0
         assert any(r.cached for r in res_d)
+
+    # ---- cluster scale-out: replicated engines, shared ConfigCache ----
+    with tempfile.TemporaryDirectory(prefix="fig11-cluster-") as tmpdir:
+        rows += _cluster_rows(g, x, params, apply_fn, spaces, mesh,
+                              smoke=smoke, tmpdir=tmpdir)
+    return rows
+
+
+def _cluster_rows(g, x, params, apply_fn, spaces, mesh, *, smoke, tmpdir):
+    rows = []
+    _res_1, lat_1, rep_1 = _serve_single_preconverged(
+        g, x, params, apply_fn, spaces, mesh, smoke=smoke)
+    rows.append(dict(
+        name="fig11_cluster_single",
+        us_per_call=round(float(np.percentile(lat_1, 50)) * 1e6, 1),
+        derived=(f"p99_us={np.percentile(lat_1, 99) * 1e6:.0f};"
+                 f"retunes={rep_1['retunes']};"
+                 f"dropped={rep_1['dropped']}")))
+    combos = [(2, "locality")] if smoke else [
+        (1, "locality"), (2, "load"), (2, "locality"),
+        (4, "load"), (4, "locality")]
+    for n_rep, router_name in combos:
+        cache_path = os.path.join(tmpdir,
+                                  f"tuned-{n_rep}-{router_name}.json")
+        _res_c, lat_c, rep_c = _serve_cluster(
+            g, x, params, apply_fn, n_rep, router_name, spaces, mesh,
+            smoke=smoke, cache_path=cache_path)
+        hits = [p["cache_hit_rate"] for p in rep_c["per_replica"]]
+        rows.append(dict(
+            name=f"fig11_cluster_{n_rep}_{router_name}",
+            us_per_call=round(float(np.percentile(lat_c, 50)) * 1e6, 1),
+            derived=(f"p99_us={np.percentile(lat_c, 99) * 1e6:.0f};"
+                     f"staggered={rep_c['staggered_retunes']};"
+                     f"deferred={rep_c['deferred_retunes']};"
+                     f"dropped={rep_c['dropped']};"
+                     f"hit_rates={hits}")))
+        if smoke:
+            assert rep_c["dropped"] == 0, rep_c
+            assert rep_c["staggered_retunes"] >= 1, \
+                f"smoke: no staggered cluster retune fired: {rep_c}"
+            p99_c = float(np.percentile(lat_c, 99))
+            p99_s = float(np.percentile(lat_1, 99))
+            assert rep_1["retunes"] >= 1, rep_1
+            assert p99_c <= p99_s, (
+                f"smoke: cluster p99 {p99_c * 1e3:.1f} ms above "
+                f"single-replica p99 {p99_s * 1e3:.1f} ms")
     return rows
 
 

@@ -9,6 +9,12 @@ and the retune trail (config history) when ``--dynamic-tune`` is on.
 ``--per-layer-tune`` re-optimizes one (ps, dist, pb) per GNN layer
 (implies --dynamic-tune); ``--fuse-update`` serves with the dense ·W
 update fused into the ring.
+
+``--replicas N`` scales the engine out behind a router
+(``--router {load,locality}``, see docs/cluster.md): N independent
+serving replicas share one tuned-config cache (``--tune-cache`` or an
+auto temp file), stagger their drift retunes through the cluster's
+drain → retune → rejoin protocol, and never drop a request.
 """
 import os
 import sys
@@ -21,6 +27,7 @@ else:
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
+import tempfile
 
 import numpy as np
 import jax
@@ -28,8 +35,8 @@ import jax
 import repro.core as C
 from repro.dist import flat_ring_mesh
 from repro.runtime import DynamicGNNEngine, ProfileConfig
-from repro.serve import (GNNServeEngine, TrafficPhase, ZipfTraffic,
-                         run_trace)
+from repro.serve import (GNNServeEngine, ServeCluster, TrafficPhase,
+                         ZipfTraffic, make_router, run_trace)
 
 
 def _pct(lat, q):
@@ -59,6 +66,14 @@ def main() -> None:
     ap.add_argument("--fuse-update", action="store_true",
                     help="run the dense ·W update inside the ring")
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas behind the router")
+    ap.add_argument("--router", default="locality",
+                    choices=["load", "locality"],
+                    help="cluster routing policy (--replicas > 1)")
+    ap.add_argument("--tune-cache", default=None,
+                    help="shared ConfigCache path (replicas warm-start "
+                         "each other's retunes through it)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0)
     args = ap.parse_args()
@@ -74,22 +89,31 @@ def main() -> None:
     init, _apply, kw = C.MODEL_ZOO[args.model]
     params = init(jax.random.key(args.seed), dim, ncls, **kw)
 
-    if args.dynamic_tune:
-        layer_dims = C.aggregation_widths(args.model, params,
-                                          fused=args.fuse_update) \
-            if args.per_layer_tune else None
-        eng = DynamicGNNEngine.build(
-            g, mesh, d_feat=dim,
-            ps_space=(1, 2, 4, 8, 16), dist_space=(1, 2, 4),
-            pb_space=(1,),
-            window=ProfileConfig(warmup=1, iters=2),
-            fuse_update=args.fuse_update, layer_dims=layer_dims,
-            log_fn=print)
-    else:
-        eng = C.GNNEngine.build(g, mesh, ps=8, dist=1,
-                                fuse_update=args.fuse_update)
-    srv = GNNServeEngine(eng, params, args.model, x, g, slots=args.slots,
-                         use_cache=not args.no_cache, log_fn=print)
+    cache_path = args.tune_cache
+    if args.dynamic_tune and args.replicas > 1 and cache_path is None:
+        # replicas must share ONE cache for cross-replica warm starts
+        cache_path = os.path.join(
+            tempfile.mkdtemp(prefix="mgg-serve-"), "tuned.json")
+        print(f"[serve_gnn] shared config cache: {cache_path}")
+
+    def build_replica():
+        if args.dynamic_tune:
+            layer_dims = C.aggregation_widths(args.model, params,
+                                              fused=args.fuse_update) \
+                if args.per_layer_tune else None
+            eng = DynamicGNNEngine.build(
+                g, mesh, d_feat=dim,
+                ps_space=(1, 2, 4, 8, 16), dist_space=(1, 2, 4),
+                pb_space=(1,),
+                window=ProfileConfig(warmup=1, iters=2),
+                fuse_update=args.fuse_update, layer_dims=layer_dims,
+                cache_path=cache_path, log_fn=print)
+        else:
+            eng = C.GNNEngine.build(g, mesh, ps=8, dist=1,
+                                    fuse_update=args.fuse_update)
+        return GNNServeEngine(eng, params, args.model, x, g,
+                              slots=args.slots,
+                              use_cache=not args.no_cache, log_fn=print)
 
     phases = [
         TrafficPhase(requests=args.requests, alpha=args.alpha,
@@ -101,8 +125,31 @@ def main() -> None:
                      update_frac=args.update_frac),
     ]
     traffic = ZipfTraffic(g.num_nodes, dim, phases, seed=args.seed)
-    results = run_trace(srv, traffic)
 
+    if args.replicas > 1:
+        replicas = [build_replica() for _ in range(args.replicas)]
+        cluster = ServeCluster(replicas, router=make_router(args.router),
+                               log_fn=print)
+        results = cluster.run_trace(traffic)
+        lat = [r.latency for r in results]
+        rep = cluster.report()
+        print(f"cluster: {rep['replicas']} replicas, "
+              f"router={rep['router']}, served {rep['served']} "
+              f"(dropped {rep['dropped']}, shadow {rep['shadow_served']})")
+        print(f"latency p50 {_pct(lat, 50) * 1e3:.2f} ms  "
+              f"p99 {_pct(lat, 99) * 1e3:.2f} ms")
+        print(f"staggered retunes {rep['staggered_retunes']} "
+              f"(deferred {rep['deferred_retunes']})")
+        for entry in rep["retune_log"]:
+            print(f"  {entry}")
+        for i, p in enumerate(rep["per_replica"]):
+            print(f"  replica {i}: served {p['served']}, hit rate "
+                  f"{p['cache_hit_rate']:.3f}, retunes {p['retunes']}, "
+                  f"config {p['config']}")
+        return
+
+    srv = build_replica()
+    results = run_trace(srv, traffic)
     lat = [r.latency for r in results]
     rep = srv.report()
     print(f"served {rep['served']} requests over {rep['batches']} "

@@ -8,13 +8,23 @@ hardware fingerprint (platform, device kind, device count), so
 :class:`~repro.runtime.engine.DynamicGNNEngine` warm-starts the search from
 the cached optimum.
 
-Robustness rules (this file lives across jobs and may be shared):
+Robustness rules (this file lives across jobs — and, with serving
+replicas (:mod:`repro.serve.cluster`), across concurrent *processes*):
 
 * writes are atomic (tmp file + ``os.replace``) — a preempted writer never
   corrupts the cache;
+* the read-modify-write in :meth:`put` / :meth:`put_layers` is serialized
+  across processes by an exclusive ``flock`` on a sidecar ``<path>.lock``
+  file, so two replicas committing different entries never lose each
+  other's update (on platforms without ``fcntl`` the RMW falls back to
+  last-writer-wins, which is still corruption-free);
+* reads retry briefly on malformed JSON (an external non-atomic copy can
+  race a reader even though our own writes cannot) before reading as
+  empty;
 * a corrupt or version-mismatched file reads as empty (tuning simply
-  starts cold) rather than raising — in particular, pre-per-layer (v1)
-  cache files are silently discarded, never a crash;
+  starts cold) rather than raising — pre-per-layer (v1) cache files are
+  discarded with a single :class:`RuntimeWarning` per path per process,
+  never a crash and never silent;
 * entries keep the latency and shape they were tuned at, for debugging
   and for future staleness policies.
 
@@ -25,11 +35,19 @@ tuner's warm start).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
 import tempfile
-from typing import Any, Dict, List, Optional, Sequence
+import time
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Set
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
 
 from repro.core.autotune import WorkloadShape
 
@@ -39,6 +57,10 @@ __all__ = ["ConfigCache", "hardware_fingerprint", "shape_fingerprint",
 _VERSION = 2
 
 _KNOBS = ("ps", "dist", "pb")
+
+# paths whose version-mismatch discard has already been reported (once per
+# process, not once per read — replicas poll the cache constantly)
+_VERSION_WARNED: Set[str] = set()
 
 
 def _valid_cfg(cfg: Any) -> bool:
@@ -85,13 +107,52 @@ class ConfigCache:
     def key(self, shape: WorkloadShape, hw: Optional[str] = None) -> str:
         return f"{shape_fingerprint(shape)}|{hw or self.hw}"
 
+    @contextlib.contextmanager
+    def _locked(self):
+        """Exclusive cross-process lock for read-modify-write sections.
+
+        A sidecar ``<path>.lock`` file is flocked so the cache file itself
+        can keep being atomically replaced (flocking the data file would
+        pin the lock to a replaced inode).  No-op where fcntl is missing.
+        """
+        if fcntl is None:
+            yield
+            return
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        with open(self.path + ".lock", "a") as lf:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
+
     def _load(self) -> Dict[str, Any]:
-        try:
-            with open(self.path) as f:
-                data = json.load(f)
-        except (OSError, ValueError):
-            return {}
+        data = None
+        for attempt in range(3):
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                break
+            except OSError:
+                return {}
+            except ValueError:
+                # our writes are atomic (os.replace), but an external
+                # non-atomic copy can expose a truncated file to a reader;
+                # retry briefly before treating it as genuinely corrupt
+                if attempt == 2:
+                    return {}
+                time.sleep(0.01 * (attempt + 1))
         if not isinstance(data, dict) or data.get("version") != _VERSION:
+            key = os.path.abspath(self.path)
+            if key not in _VERSION_WARNED:
+                _VERSION_WARNED.add(key)
+                found = data.get("version") if isinstance(data, dict) \
+                    else None
+                warnings.warn(
+                    f"config cache {self.path}: discarding entries with "
+                    f"schema version {found!r} (expected {_VERSION}); "
+                    f"tuning starts cold", RuntimeWarning, stacklevel=3)
             return {}
         entries = data.get("entries")
         return entries if isinstance(entries, dict) else {}
@@ -127,14 +188,15 @@ class ConfigCache:
 
     def put(self, shape: WorkloadShape, config: Dict[str, int],
             latency: float, hw: Optional[str] = None) -> None:
-        entries = self._load()
-        entries[self.key(shape, hw)] = dict(
-            config={k: int(config[k]) for k in _KNOBS},
-            latency=float(latency),
-            shape=dataclasses.asdict(shape),
-            hw=hw or self.hw,
-        )
-        self._store(entries)
+        with self._locked():
+            entries = self._load()
+            entries[self.key(shape, hw)] = dict(
+                config={k: int(config[k]) for k in _KNOBS},
+                latency=float(latency),
+                shape=dataclasses.asdict(shape),
+                hw=hw or self.hw,
+            )
+            self._store(entries)
 
     # -- per-layer entries (schema v2) ----------------------------------------
 
@@ -158,15 +220,16 @@ class ConfigCache:
     def put_layers(self, shapes: Sequence[WorkloadShape],
                    configs: Sequence[Dict[str, int]], latency: float,
                    hw: Optional[str] = None) -> None:
-        entries = self._load()
-        entries[self.layers_key(shapes, hw)] = dict(
-            config=dict(layers=[{k: int(c[k]) for k in _KNOBS}
-                                for c in configs]),
-            latency=float(latency),
-            shape=[dataclasses.asdict(s) for s in shapes],
-            hw=hw or self.hw,
-        )
-        self._store(entries)
+        with self._locked():
+            entries = self._load()
+            entries[self.layers_key(shapes, hw)] = dict(
+                config=dict(layers=[{k: int(c[k]) for k in _KNOBS}
+                                    for c in configs]),
+                latency=float(latency),
+                shape=[dataclasses.asdict(s) for s in shapes],
+                hw=hw or self.hw,
+            )
+            self._store(entries)
 
     def __len__(self) -> int:
         return len(self._load())

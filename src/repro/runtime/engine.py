@@ -315,7 +315,7 @@ class DynamicGNNEngine:
     def retune(self, graph: Optional[CSRGraph] = None,
                d_feat: Optional[int] = None, *,
                layer_dims: Optional[Sequence[int]] = None,
-               force: bool = False) -> bool:
+               force: bool = False, from_cache: bool = False) -> bool:
         """Drift entry point: the workload changed (graph grew, features
         resized).  Recomputes the WorkloadShape; if it drifted past the
         tuner's threshold the search re-opens (warm-started from the old
@@ -332,6 +332,13 @@ class DynamicGNNEngine:
         see — hot-set rotations, burst load — and the measured latency
         surface under the new traffic is stale evidence either way, so the
         caller's drift signal overrides the shape comparison.
+
+        ``from_cache=True`` (only meaningful with ``force``) warm-starts
+        the re-opened search from the shared :class:`ConfigCache` entry in
+        *adopt* mode: a sibling serving replica already re-searched under
+        the same shift and committed its optimum, so this engine validates
+        that config with a single measurement instead of re-exploring
+        (falls back to the normal warm re-search on a cache miss).
         """
         if graph is not None:
             self.graph = graph
@@ -360,10 +367,21 @@ class DynamicGNNEngine:
             shapes = None
             shape = WorkloadShape.from_graph(g, n_dev, int(d_feat))
             reopened = self.tuner.observe_shape(shape)
+        adopted = False
         if force and not reopened:
-            self.tuner.reopen()
+            warm = None
+            if from_cache and self.cache is not None:
+                warm = (self.cache.get_layers(shapes) if self.per_layer
+                        else self.cache.get(shape))
+                warm = self._clamp_pb(warm, self.tuner.pb_space)
+            if warm is not None:
+                self.tuner.reopen(warm_start=warm, mode="adopt")
+                adopted = True
+                self.log(f"[runtime] adopting shared-cache config: {warm}")
+            else:
+                self.tuner.reopen()
             reopened = True
-        if reopened and self.per_layer:
+        if reopened and self.per_layer and not adopted:
             # the layer count / per-layer widths may have moved: resize the
             # search and rebuild the VMEM feasibility predicates against the
             # LIVE shapes (stale checks would admit configs that spill)

@@ -164,15 +164,43 @@ class OnlineTuner:
                             trajectory=list(self.trajectory),
                             table=dict(self.table))
 
-    def reopen(self) -> None:
-        """Re-open the search, warm-started from the best config seen.
+    def reopen(self, warm_start: Optional[Dict[str, int]] = None,
+               mode: str = "search") -> None:
+        """Re-open the search, warm-started from ``warm_start`` (the best
+        config seen so far by default).
 
         Owns the reopen bookkeeping for every drift path — shape drift
         (:meth:`observe_shape`) and caller-forced traffic drift
         (``DynamicGNNEngine.retune(force=True)``) alike.
+
+        ``mode="adopt"`` trusts the warm config instead of re-searching:
+        it is measured once (seeding the latency table) and the search
+        converges immediately after.  This is the serving cluster's
+        shared-cache path — a sibling replica on identical hardware just
+        paid for the full re-search under the same traffic shift, so this
+        replica validates the committed optimum with a single measurement
+        rather than re-exploring.  Falls back to a full search when there
+        is no warm config or it fails the VMEM check.
         """
         self.reopens += 1
-        self.reset(warm_start=self.best)
+        warm = warm_start if warm_start is not None else self.best
+        if (mode == "adopt" and warm is not None
+                and (self.vmem_check is None
+                     or self.vmem_check(warm["ps"], warm["dist"],
+                                        warm["pb"]))):
+            self.table = {}
+            self.trajectory = []
+            self._gen = self._adopt(warm)
+            self._advance(None)
+        else:
+            self.reset(warm_start=warm)
+
+    def _adopt(self, warm: Dict[str, int]):
+        key = (int(warm["ps"]), int(warm["dist"]), int(warm["pb"]))
+        lat = yield key
+        self.table[key] = float(lat)
+        self.trajectory.append(
+            (dict(ps=key[0], dist=key[1], pb=key[2]), self.table[key]))
 
     def observe_shape(self, shape: WorkloadShape) -> bool:
         """Report the live workload shape; True ⇔ drift re-opened the search."""
@@ -366,6 +394,7 @@ class PerLayerTuner:
             self._phases.append(("layer", i))
         self._sub: Optional[OnlineTuner] = None
         self._sub_layer: Optional[int] = None
+        self._adopt_pending = False
         self._done = False
         self._start_next_phase()
 
@@ -377,6 +406,8 @@ class PerLayerTuner:
         """Per-layer configs awaiting a measurement (the best once done)."""
         if self._done:
             return self.best
+        if self._adopt_pending:
+            return [dict(c) for c in self._configs]
         cand = self._sub.propose()
         if self._sub_layer is None:           # global phase
             return [dict(cand)] * self.num_layers
@@ -395,6 +426,12 @@ class PerLayerTuner:
         self.trajectory.append((cfgs, latency))
         if latency < self._best_lat:
             self._best_lat, self._best_cfgs = latency, cfgs
+        if self._adopt_pending:
+            # shared-cache adoption: the single validation measurement
+            # closes the search (see OnlineTuner.reopen(mode="adopt"))
+            self._adopt_pending = False
+            self._done = True
+            return
         self._sub.observe(latency)
         while not self._done and self._sub.converged:
             self._commit_phase()
@@ -413,11 +450,51 @@ class PerLayerTuner:
     def best_latency(self) -> float:
         return self._best_lat
 
-    def reopen(self) -> None:
-        """Re-open per-layer phases, warm-started from the best configs
-        (traffic/shape drift made the measured surface stale)."""
+    def reopen(self, warm_start=None, mode: str = "search") -> None:
+        """Re-open per-layer phases, warm-started from ``warm_start`` (the
+        best configs so far by default — traffic/shape drift made the
+        measured surface stale).
+
+        ``mode="adopt"`` with a per-layer warm list trusts it outright:
+        the joint configs are measured once and the search converges (the
+        serving cluster's shared-cache path; see
+        :meth:`OnlineTuner.reopen`).  Falls back to the phase search when
+        the warm list is missing, wrongly sized, or VMEM-infeasible.
+        """
         self.reopens += 1
-        self.reset(warm_start=self.best or self._configs)
+        warm = warm_start if warm_start is not None \
+            else (self.best or self._configs)
+        if mode == "adopt" and self._adoptable(warm):
+            self.trajectory = []
+            self._best_lat = math.inf
+            self._best_cfgs = None
+            self._configs = [dict(c) for c in warm]
+            self._phases = []
+            self._sub = None
+            self._sub_layer = None
+            self._adopt_pending = True
+            self._done = False
+        else:
+            if isinstance(warm, list) and warm \
+                    and len(warm) != self.num_layers:
+                # unusably-sized warm list (layer count moved since it was
+                # recorded): resize rather than raise
+                warm = self._resize_warm(warm)
+            self.reset(warm_start=warm)
+
+    def _resize_warm(self, warm: List[Dict[str, int]]) \
+            -> List[Dict[str, int]]:
+        """Fit a per-layer warm list to the current layer count — extra
+        layers seed from the last known config."""
+        return ([dict(c) for c in warm]
+                + [dict(warm[-1])] * self.num_layers)[:self.num_layers]
+
+    def _adoptable(self, warm) -> bool:
+        if not isinstance(warm, list) or len(warm) != self.num_layers:
+            return False
+        return all(
+            check is None or check(c["ps"], c["dist"], c["pb"])
+            for c, check in zip(warm, self.vmem_checks))
 
     def reconfigure(
         self,
@@ -449,9 +526,7 @@ class PerLayerTuner:
         if warm_start is None:
             warm_start = self.best or self._configs
         if isinstance(warm_start, list) and warm_start:
-            warm_start = ([dict(c) for c in warm_start]
-                          + [dict(warm_start[-1])] * self.num_layers
-                          )[:self.num_layers]
+            warm_start = self._resize_warm(warm_start)
         self.reset(warm_start=warm_start)
 
     def observe_shape(self, shapes) -> bool:

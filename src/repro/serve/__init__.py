@@ -4,6 +4,11 @@
   (``ServeEngine``);
 * :mod:`repro.serve.gnn` — online GNN node-prediction serving with
   traffic-driven re-tuning (``GNNServeEngine``, see docs/serving.md);
+* :mod:`repro.serve.cluster` — multi-replica scale-out behind a router
+  with staggered drain→retune→rejoin and a shared ConfigCache
+  (``ServeCluster``, see docs/cluster.md);
+* :mod:`repro.serve.router` — routing policies (``LeastLoadRouter``,
+  ``LocalityRouter``);
 * :mod:`repro.serve.stats` — sliding-window request statistics + drift
   signal (``WorkloadStats``);
 * :mod:`repro.serve.hotcache` — MG-GCN-style layer-1 aggregate cache
@@ -11,15 +16,19 @@
 * :mod:`repro.serve.traffic` — Zipfian phase-shifted traffic generator
   (``ZipfTraffic``).
 """
+from .cluster import ServeCluster
 from .engine import ServeEngine, GenerationResult
 from .gnn import GNNServeEngine, ServeResult, run_trace
 from .hotcache import HotNodeCache
+from .router import LeastLoadRouter, LocalityRouter, Router, make_router
 from .stats import TrafficSnapshot, WorkloadStats
 from .traffic import TrafficEvent, TrafficPhase, ZipfTraffic
 
 __all__ = [
     "ServeEngine", "GenerationResult",
     "GNNServeEngine", "ServeResult", "run_trace",
+    "ServeCluster", "Router", "LeastLoadRouter", "LocalityRouter",
+    "make_router",
     "HotNodeCache", "TrafficSnapshot", "WorkloadStats",
     "TrafficEvent", "TrafficPhase", "ZipfTraffic",
 ]

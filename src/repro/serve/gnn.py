@@ -102,6 +102,8 @@ class GNNServeEngine:
         cache_capacity: Optional[int] = None,
         log_fn: Callable[[str], None] = lambda _s: None,
         clock: Callable[[], float] = time.perf_counter,
+        retune_gate: Optional[
+            Callable[["GNNServeEngine", float], bool]] = None,
     ):
         self.eng = engine
         self.params = params
@@ -123,6 +125,15 @@ class GNNServeEngine:
         self.cache = HotNodeCache(graph.num_nodes, capacity=cache_capacity)
         self.log = log_fn
         self.clock = clock
+        # coordinator hook: called with (self, drift_score) when traffic
+        # drift crosses the threshold; returning False defers the retune
+        # (a ServeCluster uses this to stagger replica re-searches — it
+        # later drives force_retune() itself once the replica is drained)
+        self.retune_gate = retune_gate
+        # False while a coordinator replays *shadow* traffic through this
+        # engine (re-tune measurement): replayed batches must not be
+        # double-counted into the drift window
+        self.record_stats = True
 
         self.dynamic = isinstance(engine, DynamicGNNEngine)
         self._tuning = self.dynamic and not engine.tuner.converged
@@ -130,9 +141,15 @@ class GNNServeEngine:
         self._queue: Deque[_Pending] = deque()
         self._next_id = 0
         self.served = 0
-        self.batches = 0
+        self.shadow_served = 0       # replayed batches (record_stats off)
+        self.batches = 0             # ALL micro-batches (drives check_every)
         self.retunes = 0             # traffic-drift search re-opens
         self.rebuilds = 0            # plan/jit rebuilds (tuner moves)
+        # measurements (≈ configs visited) per closed search, in order;
+        # the cluster asserts shared-cache adoption makes these shrink
+        self.search_sizes: List[int] = []
+        self._search_opened_at: Optional[int] = \
+            engine.tuner.measured if self._tuning else None
 
         self.xp = None
         self._refresh_tables()
@@ -240,8 +257,9 @@ class GNNServeEngine:
             [f_need, neighbors_of(self.g_full, f_need).astype(np.int64)])
         ).size if self.k_hops > 0 else f_need.size
         misses = self.cache.lookup(f_need)
-        self.stats.record(batch[-1].t_arrival, seeds, fk_size,
-                          n_requests=len(batch))
+        if self.record_stats:
+            self.stats.record(batch[-1].t_arrival, seeds, fk_size,
+                              n_requests=len(batch))
 
         # lookup() already scanned validity over exactly f_need (with the
         # table-None guard), so zero misses ⇔ the cached pass is safe
@@ -264,10 +282,16 @@ class GNNServeEngine:
             if self.eng.observe_step(dt):
                 self._on_rebuild()
             self._tuning = not self.eng.tuner.converged
-            if not self._tuning and len(self.stats) >= self.min_records:
-                # search just closed: the current window is the traffic the
-                # committed config was tuned under — that's the drift baseline
-                self._baseline = self.stats.snapshot()
+            if not self._tuning:
+                if self._search_opened_at is not None:
+                    self.search_sizes.append(
+                        self.eng.tuner.measured - self._search_opened_at)
+                    self._search_opened_at = None
+                if len(self.stats) >= self.min_records:
+                    # search just closed: the current window is the traffic
+                    # the committed config was tuned under — that's the
+                    # drift baseline
+                    self._baseline = self.stats.snapshot()
         self._maybe_retune()
 
         logits = np.asarray(out)
@@ -280,7 +304,12 @@ class GNNServeEngine:
                 logits=logits[off:off + k], latency=now - p.t_submit,
                 cached=use_cached))
             off += k
-        self.served += len(results)
+        if self.record_stats:
+            # shadow-replay batches (record_stats off) answer no user:
+            # `served` stays reconcilable with the cluster-level count
+            self.served += len(results)
+        else:
+            self.shadow_served += len(results)
         return results
 
     def drain(self) -> List[ServeResult]:
@@ -313,11 +342,31 @@ class GNNServeEngine:
                  f"{self.drift_threshold:.2f} → retune "
                  f"(rate {self._baseline.rate:.0f}→{snap.rate:.0f}/s, "
                  f"hot-set overlap {hot_overlap:.2f})")
+        if self.retune_gate is not None and not self.retune_gate(self, score):
+            # deferred: the coordinator drains this replica and drives
+            # force_retune() itself (the un-reset baseline keeps the drift
+            # signal alive, so a busy coordinator is re-asked next check)
+            return
+        self.force_retune()
+
+    def force_retune(self, from_cache: bool = False) -> None:
+        """Re-open the tuning search under live traffic, immediately.
+
+        The drift path above lands here; a :class:`ServeCluster` calls it
+        directly on a drained replica.  ``from_cache=True`` adopts the
+        shared-ConfigCache entry a sibling replica committed (single
+        validation measurement instead of a re-search; see
+        ``DynamicGNNEngine.retune``).
+        """
+        if not self.dynamic or self._tuning:
+            return
         self.retunes += 1
-        self._baseline = snap
+        self._baseline = self.stats.snapshot() if len(self.stats) else None
         cfg_before = dict(self.eng.config)
-        self.eng.retune(force=True)
+        measured_before = self.eng.tuner.measured
+        self.eng.retune(force=True, from_cache=from_cache)
         self._tuning = not self.eng.tuner.converged
+        self._search_opened_at = measured_before if self._tuning else None
         if self.eng.config != cfg_before:
             # the forced re-open moved the config immediately — later moves
             # arrive through observe_step; an unchanged config keeps the
@@ -332,9 +381,11 @@ class GNNServeEngine:
 
     def report(self) -> Dict[str, object]:
         return dict(
-            served=self.served, batches=self.batches,
+            served=self.served, shadow_served=self.shadow_served,
+            batches=self.batches,
             pending=self.pending_requests, dropped=0,
             retunes=self.retunes, rebuilds=self.rebuilds,
+            search_sizes=list(self.search_sizes),
             cache_hit_rate=round(self.cache.hit_rate, 4),
             cache_stores=self.cache.stores,
             cache_invalidations=self.cache.invalidations,

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import Counter, deque
-from typing import Deque, Tuple
+from typing import Deque, Optional, Tuple
 
 import numpy as np
 
@@ -37,7 +37,11 @@ class TrafficSnapshot:
 
 
 def _rel(a: float, b: float) -> float:
-    return abs(a - b) / max(1e-12, abs(a))
+    """Symmetric relative change in [0, 1] (0 ⇔ equal, → 1 as one side
+    dwarfs the other) — normalizing by ``max`` keeps :meth:`drift`
+    bounded so one threshold means the same thing for a 4× burst and a
+    hot-set rotation."""
+    return abs(a - b) / max(1e-12, abs(a), abs(b))
 
 
 class WorkloadStats:
@@ -51,7 +55,9 @@ class WorkloadStats:
     def __init__(self, window: int = 128, top_k: int = 16):
         self.window = int(window)
         self.top_k = int(top_k)
-        self._events: Deque[Tuple[float, int, int, np.ndarray]] = deque()
+        # (t, n_seeds, frontier_size, seed ids, n_requests) per micro-batch
+        self._events: Deque[Tuple[float, int, int, np.ndarray, int]] = \
+            deque()
         self._counts: Counter = Counter()
         self.total_batches = 0
 
@@ -82,6 +88,17 @@ class WorkloadStats:
     def __len__(self) -> int:
         return len(self._events)
 
+    def recent_seed_batches(self, limit: Optional[int] = None) -> list:
+        """Seed-id arrays of the newest ``limit`` window batches (oldest
+        first).  The serving cluster replays these as *shadow traffic*
+        through a drained replica so its re-opened search measures the
+        exact workload that triggered the drift — without holding any live
+        request hostage to the re-jits."""
+        events = list(self._events)
+        if limit is not None:
+            events = events[-int(limit):]
+        return [e[3].copy() for e in events]
+
     def snapshot(self) -> TrafficSnapshot:
         n = len(self._events)
         if n == 0:
@@ -101,8 +118,10 @@ class WorkloadStats:
 
     @staticmethod
     def drift(baseline: TrafficSnapshot, current: TrafficSnapshot) -> float:
-        """Relative traffic change in [0, ∞): max over rate, frontier size,
-        and hot-set turnover (1 − overlap with the baseline hot set)."""
+        """Relative traffic change in [0, 1]: max over rate change,
+        frontier-size change (both symmetric-relative, so bounded) and
+        hot-set turnover (1 − overlap with the baseline hot set).  0 for
+        identical windows; monotone in hot-set turnover."""
         if baseline.requests == 0 or current.requests == 0:
             return 0.0
         score = max(_rel(baseline.rate, current.rate)

@@ -1,0 +1,92 @@
+"""ConfigCache concurrency + versioning hardening (PR-5 satellite):
+
+* two processes hammering one cache file must not lose each other's
+  entries (the read-modify-write in ``put`` is flock-serialized);
+* a schema-version-mismatched (v1) file is discarded with exactly ONE
+  RuntimeWarning per path — visible, not silent, not spammy.
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import pytest
+
+from repro.core.autotune import WorkloadShape
+from repro.runtime.cache import ConfigCache
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_HAMMER = r"""
+import sys
+from repro.core.autotune import WorkloadShape
+from repro.runtime.cache import ConfigCache
+
+path, start, n = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+cache = ConfigCache(path, hw="test:hw:1")
+for i in range(start, start + n):
+    shape = WorkloadShape(n_dev=1, d_feat=i, rows_per_dev=10,
+                          local_edges_max=5, remote_edges_max=5)
+    cache.put(shape, dict(ps=1, dist=1, pb=1), 1e-3)
+"""
+
+
+def test_two_processes_hammering_same_file_lose_nothing(tmp_path):
+    """Each writer puts N entries under distinct keys; without the lock
+    the read-modify-write interleaves and entries vanish."""
+    path = str(tmp_path / "tuned.json")
+    n = 25
+    env = dict(os.environ,
+               PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                             ""))
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _HAMMER, path, str(k * n), str(n)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for k in range(2)]
+    for p in procs:
+        _out, err = p.communicate(timeout=600)
+        assert p.returncode == 0, err
+    cache = ConfigCache(path, hw="test:hw:1")
+    assert len(cache) == 2 * n
+    for i in range(2 * n):
+        shape = WorkloadShape(n_dev=1, d_feat=i, rows_per_dev=10,
+                              local_edges_max=5, remote_edges_max=5)
+        assert cache.get(shape) == dict(ps=1, dist=1, pb=1), i
+    # the file on disk is a single valid v2 document
+    with open(path) as f:
+        assert json.load(f)["version"] == 2
+
+
+def test_version_mismatch_discard_warns_exactly_once(tmp_path):
+    path = str(tmp_path / "old.json")
+    with open(path, "w") as f:
+        json.dump(dict(version=1, entries={"k": dict(
+            config=dict(ps=2, dist=1, pb=1))}), f)
+    cache = ConfigCache(path, hw="test:hw:1")
+    shape = WorkloadShape(n_dev=1, d_feat=3, rows_per_dev=10,
+                          local_edges_max=5, remote_edges_max=5)
+    with pytest.warns(RuntimeWarning, match="schema version 1"):
+        assert cache.get(shape) is None
+    # second read of the same path: discarded again, but silently
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert cache.get(shape) is None
+        assert ConfigCache(path, hw="other:hw:2").get(shape) is None
+    assert not [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    # a put starts a fresh valid file; entries round-trip again
+    cache.put(shape, dict(ps=4, dist=1, pb=1), 1e-3)
+    assert cache.get(shape) == dict(ps=4, dist=1, pb=1)
+
+
+def test_lock_sidecar_does_not_break_atomic_replace(tmp_path):
+    """Writes keep going through tmp-file + os.replace; the lock is a
+    sidecar, never the data file itself."""
+    path = str(tmp_path / "tuned.json")
+    cache = ConfigCache(path, hw="test:hw:1")
+    shape = WorkloadShape(n_dev=1, d_feat=1, rows_per_dev=10,
+                          local_edges_max=5, remote_edges_max=5)
+    cache.put(shape, dict(ps=1, dist=1, pb=1), 1e-3)
+    names = set(os.listdir(tmp_path))
+    assert "tuned.json" in names
+    assert not any(n.endswith(".tmp") for n in names)

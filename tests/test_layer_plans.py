@@ -425,9 +425,11 @@ def test_cache_per_layer_roundtrip_and_warm_start():
         assert cache.get_layers(other) is None
 
 
-def test_cache_v1_files_silently_discarded():
+def test_cache_v1_files_discarded_with_one_warning():
     """Pre-refactor cache files (schema v1) read as empty — never a crash,
-    and the next put writes a clean v2 file."""
+    a single RuntimeWarning per path (PR-5: the discard is no longer
+    silent), and the next put writes a clean v2 file."""
+    import pytest
     from repro.core.autotune import WorkloadShape
 
     shape = WorkloadShape(n_dev=2, d_feat=16, rows_per_dev=50,
@@ -440,8 +442,9 @@ def test_cache_v1_files_silently_discarded():
                                    latency=1e-3)})
         with open(path, "w") as f:
             json.dump(v1, f)
-        assert cache.get(shape) is None            # discarded, no crash
-        assert cache.get_layers([shape]) is None
+        with pytest.warns(RuntimeWarning, match="schema version 1"):
+            assert cache.get(shape) is None        # discarded, no crash
+        assert cache.get_layers([shape]) is None   # warned once already
         assert len(cache) == 0
         cache.put(shape, dict(ps=4, dist=1, pb=1), 1e-3)
         assert cache.get(shape) == dict(ps=4, dist=1, pb=1)

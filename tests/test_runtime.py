@@ -105,6 +105,76 @@ def test_drift_reopens_search_with_warm_start():
     assert t.reopens == 1
 
 
+def test_adopt_reopen_validates_with_single_measurement():
+    """Cluster shared-cache path: reopen(mode='adopt') measures exactly
+    the warm config, then converges; infeasible warm falls back to a
+    full search."""
+    t = OnlineTuner((2, 4, 8), (1, 2), (1,))
+    _drive(t, lambda ps, dist, pb: 1.0 + abs(ps - 4) + dist)
+    m0 = t.measured
+    t.reopen(warm_start=dict(ps=4, dist=2, pb=1), mode="adopt")
+    assert not t.converged
+    assert t.propose() == dict(ps=4, dist=2, pb=1)
+    t.observe(0.9)
+    assert t.converged
+    assert t.measured - m0 == 1
+    assert t.best == dict(ps=4, dist=2, pb=1)
+    assert t.reopens == 1
+    # a VMEM-infeasible warm config must NOT be adopted
+    t2 = OnlineTuner((2, 4), (1,), (1,), vmem_check=lambda ps, d, pb: ps < 8)
+    _drive(t2, lambda *_: 1.0)
+    t2.reopen(warm_start=dict(ps=8, dist=1, pb=1), mode="adopt")
+    assert not t2.converged and t2.propose()["ps"] < 8
+
+
+def test_per_layer_adopt_reopen_and_resize_fallback():
+    from repro.runtime import PerLayerTuner
+
+    p = PerLayerTuner(3, (2, 4), (1, 2), (1,))
+    while not p.converged:
+        p.observe(1.0)
+    warm = [dict(ps=2, dist=1, pb=1), dict(ps=4, dist=2, pb=1),
+            dict(ps=2, dist=2, pb=1)]
+    m0 = p.measured
+    p.reopen(warm_start=warm, mode="adopt")
+    assert p.propose() == warm
+    p.observe(0.5)
+    assert p.converged and p.best == warm and p.measured - m0 == 1
+    # wrong layer count: resized (like reconfigure), searched, not raised
+    p.reopen(warm_start=warm[:2], mode="adopt")
+    assert not p.converged and len(p.propose()) == 3
+
+
+def test_retune_from_cache_adopts_shared_entry():
+    """DynamicGNNEngine.retune(force=True, from_cache=True) pulls the
+    sibling-committed entry and closes its search after one window."""
+    g = C.power_law(200, avg_degree=5.0, locality=0.3, seed=7)
+    mesh = flat_ring_mesh(1)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        e1 = DynamicGNNEngine.build(
+            g, mesh, d_feat=8, ps_space=(2, 4, 8), dist_space=(1, 2),
+            pb_space=(1,), window=ProfileConfig(warmup=0, iters=1),
+            cache_path=path)
+        while not e1.tuner.converged:
+            e1.observe_step(1e-3)
+        # sibling engine, same shape/hardware, converged on its own
+        e2 = DynamicGNNEngine.build(
+            g, mesh, d_feat=8, ps_space=(2, 4, 8), dist_space=(1, 2),
+            pb_space=(1,), window=ProfileConfig(warmup=0, iters=1),
+            cache_path=path)
+        while not e2.tuner.converged:
+            e2.observe_step(2e-3)
+        cached = ConfigCache(path).get(e2.shape)  # latest committed entry
+        assert cached is not None
+        m0 = e2.tuner.measured
+        assert e2.retune(force=True, from_cache=True)
+        assert e2.config == cached             # proposed = adopted entry
+        e2.observe_step(1e-3)                  # single validation window
+        assert e2.tuner.converged
+        assert e2.tuner.measured - m0 == 1
+
+
 def test_budget_caps_measurements():
     t = OnlineTuner(PS, DIST, PB, budget=4)
     n = _drive(t, lambda ps, dist, pb: 1.0 / ps)  # monotone: wants ps=32

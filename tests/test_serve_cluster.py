@@ -1,0 +1,357 @@
+"""repro.serve.cluster: routing policies, single-replica bitwise
+equivalence, permutation-invariant multi-replica results, and the
+staggered drain → retune → rejoin protocol with shared-ConfigCache warm
+starts (the 8-device disjoint-halves path runs via
+tests/multidev/serve_cluster.py through test_system.py)."""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+import repro.core as C
+from repro.dist import flat_ring_mesh
+from repro.runtime import DynamicGNNEngine, ProfileConfig
+from repro.serve import (GNNServeEngine, LeastLoadRouter, LocalityRouter,
+                         ServeCluster, TrafficPhase, WorkloadStats,
+                         ZipfTraffic, make_router, run_trace)
+from repro.serve.router import _mix
+
+
+def _graph_setup(seed=0, n=240):
+    g = C.power_law(n, avg_degree=6.0, locality=0.3, seed=seed)
+    D, ncls = 12, 5
+    x = np.random.default_rng(seed).normal(
+        size=(g.num_nodes, D)).astype(np.float32)
+    init, apply, kw = C.MODEL_ZOO["gcn"]
+    params = init(jax.random.key(seed), D, ncls, **kw)
+    return g, x, params, apply
+
+
+def _static_serve(g, x, params, slots=4):
+    eng = C.GNNEngine.build(g, flat_ring_mesh(1), ps=8, dist=1)
+    return GNNServeEngine(eng, params, "gcn", x, g, slots=slots)
+
+
+def _dynamic_serve(g, x, params, cache_path, slots=4,
+                   drift_threshold=0.5):
+    """drift_threshold > 1 makes organic retunes impossible (drift is
+    bounded in [0, 1]) — the token/adoption tests drive the gate by hand
+    and need a deterministic retune count."""
+    eng = DynamicGNNEngine.build(
+        g, flat_ring_mesh(1), d_feat=x.shape[1], ps_space=(2, 4, 8),
+        dist_space=(1, 2), pb_space=(1,),
+        window=ProfileConfig(warmup=0, iters=1), cache_path=cache_path)
+    return GNNServeEngine(eng, params, "gcn", x, g, slots=slots,
+                          stats=WorkloadStats(window=8, top_k=8),
+                          drift_threshold=drift_threshold, check_every=2,
+                          min_records=4)
+
+
+# ---------------------------------------------------------------------------
+# routers
+# ---------------------------------------------------------------------------
+
+def test_make_router_and_names():
+    assert make_router("load").name == "load"
+    assert make_router("locality").name == "locality"
+    with pytest.raises(ValueError):
+        make_router("random")
+
+
+def test_least_load_router_picks_emptiest_available():
+    class Fake:
+        def __init__(self, pending):
+            self.pending_seeds = pending
+    reps = [Fake(5), Fake(1), Fake(3)]
+    r = LeastLoadRouter()
+    assert r.pick(np.array([1]), reps, [0, 1, 2]) == 1
+    assert r.pick(np.array([1]), reps, [0, 2]) == 2     # 1 out of rotation
+    with pytest.raises(ValueError):
+        r.pick(np.array([1]), reps, [])
+
+
+def test_locality_router_is_affine_and_falls_back_on_load():
+    class FakeCache:
+        def ready(self, _seeds):
+            return False
+
+    class Fake:
+        def __init__(self, pending):
+            self.pending_seeds = pending
+            self.slots = 4
+            self.cache = FakeCache()
+
+    reps = [Fake(0), Fake(0)]
+    r = LocalityRouter(load_slack=1.0)
+    seeds = np.array([7, 42])
+    home = r.pick(seeds, reps, [0, 1])
+    # deterministic affinity: same seeds → same replica, stable anchor
+    assert home == _mix(min((7, 42), key=_mix)) % 2
+    for _ in range(5):
+        assert r.pick(seeds, reps, [0, 1]) == home
+    # a superset request sharing the anchor co-locates
+    assert r.pick(np.array([7, 42, 99999]), reps, [0, 1]) in (home,
+                                                              (home + 1) % 2)
+    # home out of rotation → least load among the rest
+    assert r.pick(seeds, reps, [1 - home]) == 1 - home
+    # home overloaded past the slack → least load fallback
+    reps[home].pending_seeds = 100
+    assert r.pick(seeds, reps, [0, 1]) == 1 - home
+
+
+def test_locality_router_prefers_cache_ready_fallback():
+    class FakeCache:
+        def __init__(self, ready):
+            self._r = ready
+
+        def ready(self, _seeds):
+            return self._r
+
+    class Fake:
+        def __init__(self, pending, ready):
+            self.pending_seeds = pending
+            self.slots = 4
+            self.cache = FakeCache(ready)
+
+    r = LocalityRouter(load_slack=0.0)
+    seeds = np.array([5])
+    home = _mix(5) % 3
+    reps = [Fake(0, False), Fake(0, False), Fake(0, False)]
+    reps[home].pending_seeds = 50               # overloaded home
+    ready_i = (home + 1) % 3
+    reps[ready_i] = Fake(10, True)              # ready but busier than...
+    other = (home + 2) % 3                      # ...the cold replica
+    assert reps[other].pending_seeds == 0
+    assert r.pick(seeds, reps, [0, 1, 2]) == ready_i
+
+
+# ---------------------------------------------------------------------------
+# single-replica equivalence + multi-replica permutation invariance
+# ---------------------------------------------------------------------------
+
+def _fig11_like_trace(g, d, seed=7, update_frac=0.1):
+    phases = [
+        TrafficPhase(requests=20, alpha=1.3, rate=150.0, seeds_max=3,
+                     update_frac=update_frac),
+        TrafficPhase(requests=20, alpha=1.3, rate=500.0, rotate=True,
+                     seeds_max=3, update_frac=update_frac),
+    ]
+    return ZipfTraffic(g.num_nodes, d, phases, seed=seed)
+
+
+@pytest.mark.parametrize("router", ["load", "locality"])
+def test_cluster_of_one_is_bitwise_identical_to_bare_engine(router):
+    g, x, params, _apply = _graph_setup()
+    bare = _static_serve(g, x, params)
+    res_bare = run_trace(bare, _fig11_like_trace(g, x.shape[1]))
+
+    solo = _static_serve(g, x, params)
+    cluster = ServeCluster([solo], router=make_router(router))
+    res_cluster = cluster.run_trace(_fig11_like_trace(g, x.shape[1]))
+
+    assert len(res_bare) == len(res_cluster) > 0
+    for ra, rb in zip(res_bare, res_cluster):
+        assert ra.request_id == rb.request_id
+        assert ra.cached == rb.cached
+        np.testing.assert_array_equal(ra.seeds, rb.seeds)
+        np.testing.assert_array_equal(ra.logits, rb.logits)   # bitwise
+    rep = cluster.report()
+    assert rep["dropped"] == 0 and rep["served"] == len(res_bare)
+
+
+@pytest.mark.parametrize("router", ["load", "locality"])
+def test_cluster_results_permutation_invariant_vs_single_engine(router):
+    """Any routing policy must serve the same answers the single engine
+    serves for the same request stream (updates excluded: their relative
+    order vs queued requests is the one thing routing may reorder)."""
+    g, x, params, _apply = _graph_setup(seed=1)
+    bare = _static_serve(g, x, params)
+    res_bare = run_trace(bare, _fig11_like_trace(g, x.shape[1], seed=5,
+                                                 update_frac=0.0))
+    by_id = {r.request_id: r for r in res_bare}
+
+    replicas = [_static_serve(g, x, params) for _ in range(3)]
+    cluster = ServeCluster(replicas, router=make_router(router))
+    res_c = cluster.run_trace(_fig11_like_trace(g, x.shape[1], seed=5,
+                                                update_frac=0.0))
+    assert sorted(r.request_id for r in res_c) == \
+        sorted(by_id)                                   # same request set
+    for r in res_c:
+        ref = by_id[r.request_id]
+        np.testing.assert_array_equal(r.seeds, ref.seeds)
+        np.testing.assert_array_equal(r.logits, ref.logits)
+    # with >1 replica at least two of them actually served something
+    served = {cluster.replica_of(r.request_id) for r in res_c}
+    assert len(served) >= 2
+
+
+def test_update_features_fans_out_to_every_replica():
+    g, x, params, _apply = _graph_setup(seed=2)
+    replicas = [_static_serve(g, x, params) for _ in range(2)]
+    cluster = ServeCluster(replicas)
+    n_inv = cluster.update_features(5, 2.0 * np.ones(x.shape[1],
+                                                     np.float32))
+    assert n_inv == 0                        # caches still cold: no rows
+    for r in replicas:
+        np.testing.assert_array_equal(r.x[5], 2.0 * np.ones(x.shape[1]))
+
+
+def test_cluster_rejects_replicas_with_history():
+    g, x, params, _apply = _graph_setup(seed=4, n=120)
+    srv = _static_serve(g, x, params)
+    srv.submit(np.array([1]))
+    srv.step()
+    with pytest.raises(ValueError):
+        ServeCluster([srv])
+
+
+# ---------------------------------------------------------------------------
+# staggered retunes + shared-cache warm start
+# ---------------------------------------------------------------------------
+
+def _pump_to_completion(cluster, limit=300):
+    for _ in range(limit):
+        cluster.pump()
+        if cluster._token is None:
+            return
+    raise AssertionError("coordinated retune never completed")
+
+
+def test_shared_cache_adoption_visits_strictly_fewer_configs(tmp_path):
+    """Acceptance: a retune paid for on one replica warm-starts the other
+    from the shared ConfigCache — the second search visits strictly fewer
+    configs (single adopt-validation measurement).  Adoption requires the
+    drift signals to OVERLAP (replica 1 was already waiting when replica
+    0 committed), which is what rules out stale-epoch adoption."""
+    g, x, params, _apply = _graph_setup(seed=3)
+    cache_path = str(tmp_path / "tuned.json")
+    r0 = _dynamic_serve(g, x, params, cache_path, drift_threshold=1.1)
+    r1 = _dynamic_serve(g, x, params, cache_path, drift_threshold=1.1)
+    cluster = ServeCluster([r0, r1], router=LeastLoadRouter())
+
+    # converge both initial searches on steady traffic
+    for rnd in range(6):
+        if not (r0._tuning or r1._tuning):
+            break
+        cluster.run_trace(ZipfTraffic(g.num_nodes, x.shape[1], [
+            TrafficPhase(requests=40, alpha=1.3, rate=100.0,
+                         seeds_max=3)], seed=20 + rnd))
+    assert not (r0._tuning or r1._tuning)
+
+    # replica 0 drifts first: full re-search on shadow traffic
+    assert r0.retune_gate(r0, 1.0) is False      # token acquired, not inline
+    assert cluster._token == 0
+    # replica 1's drift fires while 0 is still searching → deferred wait
+    assert r1.retune_gate(r1, 1.0) is False
+    assert cluster._token == 0
+    _pump_to_completion(cluster)
+    first = cluster.retune_log[-1]
+    assert first["replica"] == 0 and first["committed"]
+    assert not first["from_cache"]
+    assert first["search_size"] >= 2             # actually searched
+
+    # replica 1 re-asks: its wait overlapped 0's commit → adopt
+    assert r1.retune_gate(r1, 1.0) is False
+    assert cluster._token == 1
+    _pump_to_completion(cluster)
+    second = cluster.retune_log[-1]
+    assert second["replica"] == 1 and second["committed"]
+    assert second["from_cache"]
+    assert second["search_size"] == 1            # one validation measurement
+    assert second["search_size"] < first["search_size"]
+    assert r1.config == r0.config                # adopted the same optimum
+    assert os.path.exists(cache_path)
+
+
+def test_fresh_drift_after_commit_does_not_adopt_stale_entry(tmp_path):
+    """A drift that fires only AFTER a sibling's commit belongs to a new
+    traffic epoch — the replica must re-search, not adopt the (possibly
+    stale) cache entry."""
+    g, x, params, _apply = _graph_setup(seed=8)
+    cache_path = str(tmp_path / "tuned.json")
+    r0 = _dynamic_serve(g, x, params, cache_path, drift_threshold=1.1)
+    r1 = _dynamic_serve(g, x, params, cache_path, drift_threshold=1.1)
+    cluster = ServeCluster([r0, r1], router=LeastLoadRouter())
+    for rnd in range(6):
+        if not (r0._tuning or r1._tuning):
+            break
+        cluster.run_trace(ZipfTraffic(g.num_nodes, x.shape[1], [
+            TrafficPhase(requests=40, alpha=1.3, rate=100.0,
+                         seeds_max=3)], seed=60 + rnd))
+    assert not (r0._tuning or r1._tuning)
+
+    assert r0.retune_gate(r0, 1.0) is False
+    _pump_to_completion(cluster)
+    assert cluster.retune_log[-1]["committed"]
+
+    # replica 1's signal fires fresh, with no overlap with r0's search
+    assert r1.retune_gate(r1, 1.0) is False
+    assert cluster._token == 1
+    _pump_to_completion(cluster)
+    last = cluster.retune_log[-1]
+    assert last["replica"] == 1 and last["committed"]
+    assert not last["from_cache"]
+    assert last["search_size"] >= 2
+
+
+def test_retune_token_is_exclusive_and_deferred_counted(tmp_path):
+    g, x, params, _apply = _graph_setup(seed=6)
+    cache_path = str(tmp_path / "tuned.json")
+    r0 = _dynamic_serve(g, x, params, cache_path, drift_threshold=1.1)
+    r1 = _dynamic_serve(g, x, params, cache_path, drift_threshold=1.1)
+    cluster = ServeCluster([r0, r1], router=LeastLoadRouter())
+    for rnd in range(6):
+        if not (r0._tuning or r1._tuning):
+            break
+        cluster.run_trace(ZipfTraffic(g.num_nodes, x.shape[1], [
+            TrafficPhase(requests=40, alpha=1.3, rate=100.0,
+                         seeds_max=3)], seed=40 + rnd))
+    assert not (r0._tuning or r1._tuning)
+    assert r0.retune_gate(r0, 1.0) is False
+    assert cluster._token == 0
+    # while replica 0 holds the token, replica 1 is deferred...
+    assert r1.retune_gate(r1, 1.0) is False
+    assert cluster._token == 0
+    assert cluster.deferred_retunes == 1
+    # ...and replica 0 re-asking is a no-op, not a second schedule
+    assert r0.retune_gate(r0, 1.0) is False
+    assert cluster.staggered_retunes == 1
+    _pump_to_completion(cluster)
+    assert cluster._token is None
+
+
+def test_cluster_trace_with_drift_zero_drops_and_staggered_retune(tmp_path):
+    """End-to-end: rotation + burst over 2 dynamic replicas — every
+    request answered, ≥1 coordinated (drain → retune → rejoin) cycle, and
+    tail answers equal to each replica's offline forward."""
+    g, x, params, apply = _graph_setup(seed=5, n=300)
+    cache_path = str(tmp_path / "tuned.json")
+    replicas = [_dynamic_serve(g, x, params, cache_path)
+                for _ in range(2)]
+    cluster = ServeCluster(replicas, router=LocalityRouter())
+    phases = [
+        TrafficPhase(requests=50, alpha=1.4, rate=100.0, seeds_max=3),
+        TrafficPhase(requests=50, alpha=1.4, rate=400.0, rotate=True,
+                     seeds_max=3),
+    ]
+    results = cluster.run_trace(
+        ZipfTraffic(g.num_nodes, x.shape[1], phases, seed=11))
+    rep = cluster.report()
+    assert rep["served"] == len(results) == 100
+    assert rep["dropped"] == 0
+    assert rep["staggered_retunes"] >= 1, rep
+    assert all(e["shadow_batches"] > 0 or not e["committed"]
+               for e in rep["retune_log"])
+    # tail correctness under each replica's final committed config
+    offline = {}
+    for r in results[-8:]:
+        i = cluster.replica_of(r.request_id)
+        if i not in offline:
+            srv = replicas[i]
+            eng = srv.eng
+            xp = eng.shard(eng.pad(srv.x))
+            offline[i] = C.unpad_embeddings(eng.plan, np.asarray(
+                jax.jit(lambda p, t: apply(p, eng, t))(params, xp)))
+        np.testing.assert_allclose(r.logits, offline[i][r.seeds],
+                                   rtol=1e-5, atol=1e-5)

@@ -204,12 +204,13 @@ def test_workload_stats_rate_and_drift():
         s.record(t=i * 0.1, seeds=np.array([7, 8, 9]), frontier_size=20)
     rot = s.snapshot()
     assert WorkloadStats.drift(base, rot) == pytest.approx(1.0)
-    # burst: 4x the rate on the same nodes
+    # burst: 4x the rate on the same nodes — drift is the symmetric
+    # relative change |40-10|/40, keeping the score bounded in [0, 1]
     s2 = WorkloadStats(window=8, top_k=4)
     for i in range(8):
         s2.record(t=i * 0.025, seeds=np.array([1, 2, 3]), frontier_size=20)
     burst = s2.snapshot()
-    assert WorkloadStats.drift(base, burst) == pytest.approx(3.0)
+    assert WorkloadStats.drift(base, burst) == pytest.approx(0.75)
 
 
 def test_traffic_drift_triggers_forced_retune():

@@ -1,0 +1,158 @@
+"""Property tests for the serving runtime's decision signals: the
+WorkloadStats drift score (zero on identical windows, bounded in [0, 1],
+monotone in hot-set turnover) and HotNodeCache invalidation soundness
+(after a feature write at v, nothing whose layer-1 aggregate reads v is
+ever served from the cache).  Part of the PR-5 test-tier hardening —
+these are exactly the components the serving cluster's routing and
+staggered-retune decisions lean on."""
+import numpy as np
+import jax
+import pytest
+
+from repro.testing.hypo import given, settings, strategies as st
+
+import repro.core as C
+from repro.dist import flat_ring_mesh
+from repro.serve import GNNServeEngine, HotNodeCache, TrafficSnapshot, \
+    WorkloadStats
+
+
+# ---------------------------------------------------------------------------
+# WorkloadStats.drift
+# ---------------------------------------------------------------------------
+
+def snapshots(draw):
+    n_hot = draw(st.integers(0, 12))
+    hot = tuple(draw(st.lists(st.integers(0, 500), min_size=n_hot,
+                              max_size=n_hot)))
+    return TrafficSnapshot(
+        requests=draw(st.integers(1, 10_000)),
+        rate=draw(st.floats(0.0, 5_000.0)),
+        mean_seeds=draw(st.floats(1.0, 8.0)),
+        mean_frontier=draw(st.floats(0.0, 4_000.0)),
+        hot_nodes=tuple(dict.fromkeys(hot)),   # unique, order-preserving
+    )
+
+
+snapshot_st = st.composite(snapshots)()
+
+
+@given(snapshot_st)
+@settings(max_examples=60, deadline=None)
+def test_drift_zero_for_identical_windows(snap):
+    assert WorkloadStats.drift(snap, snap) == 0.0
+
+
+@given(snapshot_st, snapshot_st)
+@settings(max_examples=60, deadline=None)
+def test_drift_bounded_in_unit_interval(a, b):
+    d = WorkloadStats.drift(a, b)
+    assert 0.0 <= d <= 1.0
+
+
+@given(st.integers(1, 16), st.integers(0, 16), st.integers(0, 16),
+       st.floats(10.0, 500.0), st.floats(5.0, 300.0))
+@settings(max_examples=60, deadline=None)
+def test_drift_monotone_in_hot_set_turnover(k, o1, o2, rate, frontier):
+    """With rate/frontier pinned, less hot-set overlap ⇒ no less drift."""
+    o1, o2 = min(o1, k), min(o2, k)
+    if o1 > o2:
+        o1, o2 = o2, o1
+
+    def snap(overlap):
+        # `overlap` ids shared with the baseline, the rest disjoint
+        hot = tuple(range(overlap)) + tuple(range(1000, 1000 + k - overlap))
+        return TrafficSnapshot(requests=100, rate=rate, mean_seeds=2.0,
+                               mean_frontier=frontier, hot_nodes=hot)
+
+    base = snap(k)                      # identical hot set
+    assert WorkloadStats.drift(base, snap(o1)) >= \
+        WorkloadStats.drift(base, snap(o2))
+    # exact turnover value when only the hot set moves
+    assert WorkloadStats.drift(base, snap(o1)) == \
+        pytest.approx(1.0 - o1 / k)
+
+
+# ---------------------------------------------------------------------------
+# HotNodeCache invalidation soundness (cache + CSRGraph.transpose level)
+# ---------------------------------------------------------------------------
+
+def inv_cases(draw):
+    n = draw(st.integers(12, 160))
+    deg = draw(st.floats(1.0, 8.0))
+    seed = draw(st.integers(0, 10_000))
+    g = C.power_law(n, deg, locality=draw(st.floats(0.0, 0.7)),
+                    seed=seed).with_self_loops()
+    v = draw(st.integers(0, n - 1))
+    return g, v
+
+
+inv_case_st = st.composite(inv_cases)()
+
+
+@given(inv_case_st)
+@settings(max_examples=25, deadline=None)
+def test_reverse_edge_invalidation_covers_in_frontier(case):
+    """cache.invalidate(g.transpose().row(v)) must dirty EVERY node whose
+    1-hop in-frontier contains v — i.e. every u with v ∈ g.row(u) — and
+    nothing else."""
+    g, v = case
+    cache = HotNodeCache(g.num_nodes)
+    cache.store(object())
+    dirty = g.transpose().row(v)
+    cache.invalidate(dirty)
+    reads_v = np.array([v in set(g.row(u).tolist())
+                        for u in range(g.num_nodes)])
+    for u in range(g.num_nodes):
+        if reads_v[u]:
+            assert not cache.ready(np.array([u])), (u, v)
+        else:
+            assert cache.ready(np.array([u])), (u, v)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: update_features(v) never leaves a stale cached answer
+# ---------------------------------------------------------------------------
+
+_SERVE_SETUP = {}
+
+
+def _serve_setup():
+    """Built once per module (not a fixture: the hypo shim fills drawn
+    values positionally, so drawn args must be the only parameters)."""
+    if not _SERVE_SETUP:
+        g = C.power_law(200, avg_degree=5.0, locality=0.3, seed=3)
+        D, ncls = 8, 4
+        x = np.random.default_rng(3).normal(
+            size=(g.num_nodes, D)).astype(np.float32)
+        eng = C.GNNEngine.build(g, flat_ring_mesh(1), ps=4, dist=1)
+        init, apply, kw = C.MODEL_ZOO["gcn"]
+        params = init(jax.random.key(3), D, ncls, **kw)
+        _SERVE_SETUP["v"] = (g, x, eng, params, apply)
+    return _SERVE_SETUP["v"]
+
+
+@given(st.integers(0, 199), st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_update_features_never_serves_stale(v, seed_pick):
+    """After update_features(v), any request whose cached pass would read
+    a dirtied h₁ row must take the FULL pass — and its logits must equal
+    the offline forward over the updated features."""
+    g, x, eng, params, apply = _serve_setup()
+    srv = GNNServeEngine(eng, params, "gcn", x, g, slots=4)
+    rev = srv.g_full.transpose()
+    readers = rev.row(v)                      # h₁ rows that aggregate v
+    if readers.size == 0:
+        return
+    seed = int(readers[seed_pick % readers.size])
+    srv.submit(np.array([seed]))
+    srv.step()                                # warm the cache
+    srv.update_features(int(v), 3.0 * np.ones(x.shape[1], np.float32))
+    srv.submit(np.array([seed]))
+    (r,) = srv.step()
+    assert not r.cached                       # stale row ⇒ full pass forced
+    xp = eng.shard(eng.pad(srv.x))
+    offline = C.unpad_embeddings(
+        eng.plan, np.asarray(jax.jit(lambda p, t: apply(p, eng, t))(
+            params, xp)))
+    np.testing.assert_array_equal(r.logits, offline[[seed]])

@@ -34,6 +34,8 @@ MULTIDEV_SCRIPTS = [
     "collectives_property.py",  # property sweep over 1/2/4/8-dev meshes
     "ring_tp.py",            # ring-pipelined TP matmuls == SPMD defaults
     "serve_gnn.py",          # 8-dev serving: drift → retune, cache, equality
+    "serve_cluster.py",      # 2 replicas on disjoint 4-dev halves: staggered
+                             # retune, shared cache, zero drops
 ]
 
 # dryrun_lite.py runs via test_dryrun_machinery_small_mesh above
