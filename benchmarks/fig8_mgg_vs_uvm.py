@@ -1,11 +1,33 @@
 """Paper Fig. 8: MGG vs UVM-based design, GCN + GIN end-to-end, all five
-datasets (scaled stand-ins), 8-device ring.
+datasets (scaled stand-ins), 8-device ring — now a THREE-way comparison:
 
-UVM analogue (per DESIGN.md): page-granular fetch-then-aggregate with no
-overlap — each device pulls whole "pages" of remote rows before computing
-(the §2.2 access pattern), vs MGG's pipelined ring.  We report wall-clock
-per aggregation epoch on the CPU backend plus the modeled TPU-term
-speedup; the paper measures 3.16× (GCN) / 4.15× (GIN) on A100s.
+* **resident** — every feature row device-resident, pipelined ring
+  (:func:`repro.core.pipeline.mgg_aggregate`): the paper's MGG under the
+  infinite-HBM assumption.
+* **tiered**  — the memory-bound regime made real: features live in a
+  host :class:`repro.store.FeatureStore`, the device holds a bounded
+  :class:`~repro.store.HotFeatureCache` (hottest = highest-degree rows),
+  and :func:`~repro.core.pipeline.mgg_aggregate_streamed` overlaps the
+  host→device row gather for chunk *i+1* with the in-flight ring
+  ppermute for chunk *i* (double-buffered prefetch).
+* **uvm**     — page-granular fetch-then-aggregate with no overlap (the
+  §2.2 access pattern): each device pulls whole 64 KB "pages" of remote
+  rows before computing.
+
+We report wall-clock per aggregation epoch on the CPU backend plus the
+modeled TPU-term speedups at the REAL dataset size; the paper measures
+3.16× (GCN) / 4.15× (GIN) on A100s.  The CPU wall-clock CANNOT show
+overlap (one core serializes compute, "comm", and the host gather), so
+the hardware terms carry the claim: UVM pays fault handling + page-waste
+bytes serially, tiered pays only the *exposed* part of the host gather
+(fill + whatever the ring cannot hide), resident pays nothing.
+
+``--smoke`` (wired into ``benchmarks/run.py --smoke`` → CI) shrinks to a
+tiny graph on 2 devices and asserts the tentpole's acceptance criteria:
+the tiered forward is bitwise-identical to the all-resident streamed
+forward when capacity covers the working set, prefetch actually issues
+(dist−1 per call), and the modeled tiered latency strictly beats the
+modeled UVM baseline.
 """
 from __future__ import annotations
 
@@ -20,7 +42,10 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 import repro.core as C  # noqa: E402
+from repro.core.autotune import TPU_V5E as HW  # noqa: E402
+from repro.core.pipeline import mgg_aggregate_streamed  # noqa: E402
 from repro.dist import flat_ring_mesh  # noqa: E402
+from repro.store import FeatureStore, TieredFeatures  # noqa: E402
 
 PAGE_ROWS = 16  # ≈64 KB pages / (dim · 4 B), the paper's migration granularity
 
@@ -56,7 +81,105 @@ def _mgg_epoch(g, x, n_dev, mesh, layers, ps=16, dist=2):
     return timeit(epoch, xb), plan
 
 
-def run(as_json: bool) -> list:
+def _tiered_setup(g, x, mesh, plan, capacity, axis="ring"):
+    """Host store + device hot cache over ``plan``; hottest-by-degree
+    rows admitted (aggregation touches every row, so degree IS the touch
+    count — the serving path uses the live request histogram instead)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    shard = lambda a: jax.device_put(a, NamedSharding(mesh, P(axis, None)))
+    tiers = TieredFeatures(FeatureStore(x), plan, capacity, shard=shard)
+    if capacity:
+        hot = np.argsort(-g.degrees)[:capacity]
+        tiers.admit(hot.tolist())
+    return tiers
+
+
+def _tiered_epoch(g, x, n_dev, mesh, layers, capacity, ps=16, dist=2):
+    plan = C.build_plan(g, n_dev, ps=ps, dist=dist)
+    tiers = _tiered_setup(g, x, mesh, plan, capacity)
+    stats = dict(prefetch_issued=0, prefetch_inflight=0)
+
+    def epoch():
+        # layer 1 streams from the tiers; deeper layers consume the
+        # previous layer's device-resident output (standard ring) — the
+        # raw-feature table is the memory-bound tier, activations are not
+        z = mgg_aggregate_streamed(tiers.chunk_fetcher(), plan, mesh,
+                                   stats=stats)
+        for _ in range(layers - 1):
+            z = C.mgg_aggregate(z, plan, mesh, interleave=True)
+        return z
+
+    return timeit(epoch), tiers, stats, epoch
+
+
+def _modeled_terms(meta, n_dev, waste, resident_frac, dist=2):
+    """TPU-term latencies at the real dataset size (per layer-1 pass)."""
+    e, v, dim = meta["real_edges"], meta["real_nodes"], int(meta["dim"])
+    comp = 2 * e * dim * 4 / n_dev / HW.hbm_bw
+    comm = v * dim * 4 / n_dev / HW.link_bw      # ring, exact rows
+    t_resident = max(comm, comp) + comm / n_dev  # overlap + fill
+    # tiered: cold rows stream from host, overlapped chunk-by-chunk with
+    # the ring; only the pipeline fill + un-hidden tail is exposed
+    t_gather = (1.0 - resident_frac) * v * dim * 4 / n_dev / HW.host_bw
+    fill = t_gather / max(1, dist)
+    t_tiered = t_resident + fill + max(0.0, (t_gather - fill) - t_resident)
+    # UVM's dominant cost is page-FAULT handling, not bandwidth (paper
+    # Fig. 3: fault count/duration grow with GPU count); ~30 µs per
+    # 64 KB page migration, demand-paged, zero overlap
+    comm_uvm = waste * v * dim * 4 / n_dev / HW.link_bw
+    pages = waste * v * dim * 4 / n_dev / 65536
+    t_uvm = comm_uvm + comp + pages * 30e-6
+    return t_resident, t_tiered, t_uvm
+
+
+def _smoke() -> list:
+    """CI: tiny graph, 2 devices — assert the tentpole's guarantees."""
+    n_dev = len(jax.devices())
+    mesh = flat_ring_mesh(n_dev)
+    g, meta = C.paper_dataset("products", scale=0.02)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(g.num_nodes, 8)).astype(np.float32)
+    dist = 2
+    plan = C.build_plan(g, n_dev, ps=8, dist=dist)
+
+    def streamed(capacity):
+        tiers = _tiered_setup(g, x, mesh, plan, capacity)
+        stats = dict(prefetch_issued=0, prefetch_inflight=0)
+        out = mgg_aggregate_streamed(tiers.chunk_fetcher(), plan, mesh,
+                                     stats=stats)
+        return np.asarray(out), stats, tiers
+
+    full, s_full, _ = streamed(g.num_nodes)      # capacity ⊇ working set
+    part, s_part, tiers = streamed(g.num_nodes // 3)
+    none, _, _ = streamed(0)                     # stream everything
+    assert np.array_equal(full, part) and np.array_equal(full, none), \
+        "tiered forward not bitwise-identical across capacities"
+    assert s_full["prefetch_issued"] == dist - 1, s_full
+    assert s_part["prefetch_issued"] == dist - 1, s_part
+    # vs the all-resident ring: same sum, streamed chunk order (tolerance)
+    xb = jnp.asarray(C.pad_embeddings(plan, x))
+    res = np.asarray(C.mgg_aggregate(xb, plan, mesh, interleave=True))
+    np.testing.assert_allclose(full, res, rtol=2e-5, atol=2e-5)
+    # modeled regime: tiered strictly beats the UVM baseline
+    fp = C.build_fetch_plan(g, n_dev, ps=16, page_rows=PAGE_ROWS)
+    exact = C.build_fetch_plan(g, n_dev, ps=16, page_rows=1)
+    waste = (np.mean(fp["fetched_rows_per_dev"])
+             / max(1.0, np.mean(exact["fetched_rows_per_dev"])))
+    frac = tiers.resident_fraction
+    t_res, t_tier, t_uvm = _modeled_terms(meta, n_dev, waste, frac,
+                                          dist=dist)
+    assert t_tier < t_uvm, f"tiered {t_tier} not faster than UVM {t_uvm}"
+    assert t_res <= t_tier, "resident must lower-bound tiered"
+    return [dict(name="fig8_smoke", us_per_call=0.0,
+                 derived=(f"bitwise=ok;prefetch_issued={dist - 1};"
+                          f"resident_frac={frac:.2f};"
+                          f"modeled_tiered_vs_uvm={t_uvm / t_tier:.2f}x"))]
+
+
+def run(as_json: bool, smoke: bool = False) -> list:
+    if smoke:
+        return _smoke()
     n_dev = len(jax.devices())
     mesh = flat_ring_mesh(n_dev)
     rows = []
@@ -68,37 +191,29 @@ def run(as_json: bool) -> list:
                 size=(g.num_nodes, d)).astype(np.float32)
             t_uvm, fp = _uvm_epoch(g, x, n_dev, layers)
             t_mgg, plan = _mgg_epoch(g, x, n_dev, mesh, layers)
-            speed = t_uvm / t_mgg
+            cap = g.num_nodes // 4
+            t_tier, tiers, pstats, _ = _tiered_epoch(
+                g, x, n_dev, mesh, layers, cap)
             # modeled fetch-volume ratio (the paper's mechanism: page waste)
             exact = C.build_fetch_plan(g, n_dev, ps=16, page_rows=1)
             waste = (np.mean(fp["fetched_rows_per_dev"])
                      / max(1.0, np.mean(exact["fetched_rows_per_dev"])))
-            # modeled TPU-term speedup at the REAL dataset size: UVM has no
-            # overlap (comm + comp, with page-waste bytes); MGG overlaps
-            # (max(comm, comp) + fill).  The CPU wall-clock above CANNOT
-            # show overlap (one core serializes compute and "comm"), so the
-            # hardware terms carry the paper's actual claim.
-            from repro.core.autotune import TPU_V5E as HW
-            e, v = meta["real_edges"], meta["real_nodes"]
-            dim = int(meta["dim"])
-            comp = 2 * e * dim * 4 / n_dev / HW.hbm_bw
-            comm_mgg = v * dim * 4 / n_dev / HW.link_bw  # ring, exact rows
-            comm_uvm = waste * v * dim * 4 / n_dev / HW.link_bw
-            # UVM's dominant cost is page-FAULT handling, not bandwidth
-            # (paper Fig. 3: fault count/duration grow with GPU count);
-            # ~30 µs per 64 KB page migration, demand-paged.
-            pages = waste * v * dim * 4 / n_dev / 65536
-            t_fault = pages * 30e-6
-            t_mgg_hw = max(comm_mgg, comp) + comm_mgg / n_dev
-            t_uvm_hw = comm_uvm + comp + t_fault
+            t_res_hw, t_tier_hw, t_uvm_hw = _modeled_terms(
+                meta, n_dev, waste, tiers.resident_fraction)
             rows.append(dict(
                 name=f"fig8_{model}_{name}",
                 us_per_call=round(t_mgg * 1e6, 1),
-                derived=(f"uvm_us={t_uvm*1e6:.1f};cpu_ratio={speed:.2f};"
+                derived=(f"uvm_us={t_uvm*1e6:.1f};"
+                         f"tiered_us={t_tier*1e6:.1f};"
+                         f"cpu_ratio={t_uvm/t_mgg:.2f};"
                          f"page_waste={waste:.2f}x;"
-                         f"modeled_tpu_speedup={t_uvm_hw/t_mgg_hw:.2f}")))
+                         f"feat_hit_rate={tiers.cache.hit_rate:.2f};"
+                         f"prefetch_issued={pstats['prefetch_issued']};"
+                         f"modeled_tpu_speedup={t_uvm_hw/t_res_hw:.2f};"
+                         f"modeled_tiered_speedup={t_uvm_hw/t_tier_hw:.2f}")))
     return rows
 
 
 if __name__ == "__main__":
-    emit(run("--json" in sys.argv), "--json" in sys.argv)
+    emit(run("--json" in sys.argv, smoke="--smoke" in sys.argv),
+         "--json" in sys.argv)

@@ -32,7 +32,8 @@ MULTI_DEVICE_MODULES = [
 LOCAL_MODULES = ["gather_fraction", "roofline"]
 QUICK_SKIP = {"fig10_autotune", "fig11_serving", "table5_sampling"}
 # tiny graphs, --smoke arg, 2 devices (CI runs these on every PR)
-SMOKE_MODULES = ["fig9_ablations", "fig10_autotune", "fig11_serving"]
+SMOKE_MODULES = ["fig8_mgg_vs_uvm", "fig9_ablations", "fig10_autotune",
+                 "fig11_serving"]
 
 
 def main() -> None:

@@ -3,7 +3,7 @@
 paper's §4 intelligent runtime:
 
     PYTHONPATH=src python examples/train_gnn.py [--steps 100] [--model gin]
-        [--dynamic-tune] [--per-layer-tune] [--fuse-update]
+        [--dynamic-tune] [--per-layer-tune] [--fuse-update] [--tune-fuse]
         [--tune-cache /tmp/mgg_tuned.json]
 
 ``--dynamic-tune`` wraps the engine in repro.runtime.DynamicGNNEngine:
@@ -51,9 +51,14 @@ def main():
                          "(implies --dynamic-tune)")
     ap.add_argument("--fuse-update", action="store_true",
                     help="run the dense ·W update inside the ring")
+    ap.add_argument("--tune-fuse", action="store_true",
+                    help="let the per-layer tuner probe flipping each "
+                         "layer's fused-update dataflow (implies "
+                         "--per-layer-tune)")
     ap.add_argument("--tune-cache", default="",
                     help="JSON path persisting tuned configs across runs")
     args = ap.parse_args()
+    args.per_layer_tune = args.per_layer_tune or args.tune_fuse
     args.dynamic_tune = args.dynamic_tune or args.per_layer_tune
 
     g, meta = C.paper_dataset(args.dataset, scale=0.5)
@@ -78,6 +83,7 @@ def main():
             window=ProfileConfig(warmup=1, iters=2),
             cache_path=args.tune_cache or None,
             fuse_update=args.fuse_update,
+            tune_fuse=args.tune_fuse,
             layer_dims=layer_dims,
             log_fn=print,
         )

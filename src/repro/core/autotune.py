@@ -38,6 +38,7 @@ __all__ = [
     "HardwareSpec",
     "TPU_V5E",
     "A100_NVSWITCH",
+    "FUSE_RING_EFF",
     "estimate_latency",
     "estimate_pipeline_latency",
     "layer_workload_shapes",
@@ -57,6 +58,9 @@ class HardwareSpec:
     link_bw: float           # bytes/s per ICI link / NVLink direction
     vmem_bytes: int          # VMEM (TPU) or SMEM-per-SM * SMs (GPU)
     cores: int = 1
+    host_bw: float = 32e9    # host→device bytes/s (PCIe gen4 ×16 class);
+    #                          the tiered feature path's cold-row gathers
+    #                          stream over this link
 
 
 # Target hardware for the roofline (per the brief): TPU v5e.
@@ -66,6 +70,7 @@ TPU_V5E = HardwareSpec(
     hbm_bw=819e9,
     link_bw=50e9,
     vmem_bytes=16 * 2**20,
+    host_bw=32e9,
 )
 
 # The paper's platform, used to sanity-check the model against paper numbers.
@@ -75,7 +80,17 @@ A100_NVSWITCH = HardwareSpec(
     hbm_bw=1555e9,
     link_bw=300e9,  # NVSwitch per-GPU uni-directional
     vmem_bytes=164 * 1024 * 108,
+    host_bw=32e9,
 )
+
+
+# Fused-update MXU efficiency relative to the drained post-ring GEMM: the
+# fused path runs one (P, D)·(D, D_out) partial matmul per ring step, whose
+# smaller M dimension underutilizes the MXU relative to one full-shard GEMM.
+# Calibrated against the measured fig9d rows (benchmarks/fig9_ablations.py
+# emits model-vs-measured fused speedups; 0.85 keeps the modeled fused win
+# within the measured envelope across the fig9d widths).
+FUSE_RING_EFF = 0.85
 
 
 def vmem_bytes(ps: int, pb: int, dim_block: int, tile_rows: int,
@@ -142,6 +157,7 @@ def estimate_latency(
     interleave: bool = True,
     d_out: Optional[int] = None,
     fuse: bool = False,
+    host_rows: Optional[int] = None,
 ) -> float:
     """Modeled per-aggregation latency (seconds) for one device.
 
@@ -161,13 +177,26 @@ def estimate_latency(
     fusion wins: the MXU term hides under ``max(comm, comp)`` whenever the
     step is transfer-bound.  ``d_out=None`` models aggregation only
     (backward-compatible).
+
+    ``host_rows`` adds the tiered feature path's host→device gather term:
+    that many cold rows stream from the host :class:`repro.store`
+    FeatureStore over ``hw.host_bw`` per aggregation.  The streamed
+    pipeline (pipeline.mgg_aggregate_streamed) double-buffers: the fill
+    chunk (``1/dist`` of the gather) is exposed, the rest hides under the
+    ring — only the spill past the ring's own time is paid.  Larger
+    cache capacity ⇒ fewer ``host_rows`` ⇒ lower latency, which is what
+    makes capacity a climbable tuner knob; ``host_rows=None`` (or 0)
+    models all-resident features (backward-compatible).
     """
     t_update = 0.0
     if d_out is not None:
         t_update = 2.0 * w.rows_per_dev * w.d_feat * d_out / hw.peak_flops
+    t_gather = 0.0
+    if host_rows:
+        t_gather = host_rows * w.d_feat * w.itemsize / hw.host_bw
     if w.n_dev == 1:
         bytes_local = 2 * w.local_edges_max * w.d_feat * w.itemsize
-        return bytes_local / hw.hbm_bw + t_update
+        return bytes_local / hw.hbm_bw + t_update + t_gather
     tile_rows = -(-w.rows_per_dev // dist)
     steps = (w.n_dev - 1) * dist
     tile_bytes = tile_rows * w.d_feat * w.itemsize
@@ -183,13 +212,20 @@ def estimate_latency(
     # spills VMEM.  Modeled as a mild efficiency curve peaking at pb where the
     # block fits VMEM (hard constraint checked by the caller).
     eff = min(1.0, 0.55 + 0.15 * np.log2(max(1, pb)))
-    t_step_update = t_update / steps if fuse else 0.0
+    # fused partial GEMMs run at FUSE_RING_EFF of the drained GEMM's MXU
+    # utilization (calibrated vs fig9d)
+    t_step_update = t_update / steps / FUSE_RING_EFF if fuse else 0.0
     if interleave:
         per_step = max(t_comm, (t_remote + t_local) / eff + t_step_update)
         t = steps * per_step + t_comm  # + pipeline fill
     else:
         t = lc_bytes / hw.hbm_bw / eff \
             + steps * (t_comm + t_remote / eff + t_step_update)
+    if t_gather:
+        # double-buffered prefetch: the fill chunk is exposed, the rest
+        # overlaps the ring — pay only what spills past the ring's time
+        fill = t_gather / max(1, dist)
+        t += fill + max(0.0, (t_gather - fill) - t)
     return t if fuse else t + t_update
 
 
@@ -200,16 +236,20 @@ def estimate_pipeline_latency(
     interleave: bool = True,
     d_outs: Optional["List[Optional[int]]"] = None,
     fuse: bool = False,
+    fuses: Optional["List[bool]"] = None,
 ) -> float:
     """Whole-forward model: Σ over layers of the per-layer estimate.
 
     ``shapes[i]`` carries layer ``i``'s feature width (see
-    :func:`layer_workload_shapes`); ``configs[i]`` its ``(ps, dist, pb)``.
-    The analytical counterpart of the per-layer tuner's objective — the
-    tuner itself descends MEASURED full-forward latencies (it never calls
+    :func:`layer_workload_shapes`); ``configs[i]`` its ``(ps, dist, pb)``
+    and optionally a per-layer ``fuse`` flag (``fuses`` overrides, then
+    ``configs[i]['fuse']``, then the call-level ``fuse`` default — the
+    same precedence the per-layer tuner's fuse dimension produces).  The
+    analytical counterpart of the per-layer tuner's objective — the tuner
+    itself descends MEASURED full-forward latencies (it never calls
     this); use it for offline what-if modeling and roofline reports.  The
-    ``fuse`` term is uncalibrated against the measured fig9d rows
-    (ROADMAP item) — treat fused-vs-unfused model deltas as directional.
+    ``fuse`` term is calibrated against the measured fig9d rows via
+    :data:`FUSE_RING_EFF`.
     """
     if len(shapes) != len(configs):
         raise ValueError("one config per layer required")
@@ -218,7 +258,8 @@ def estimate_pipeline_latency(
     return sum(
         estimate_latency(s, int(c["ps"]), int(c["dist"]), int(c["pb"]),
                          hw=hw, interleave=interleave, d_out=d_outs[i],
-                         fuse=fuse)
+                         fuse=bool(fuses[i] if fuses is not None
+                                   else c.get("fuse", fuse)))
         for i, (s, c) in enumerate(zip(shapes, configs))
     )
 

@@ -38,7 +38,7 @@ from .graph import CSRGraph
 from .placement import (AggregationPlan, LayerPlan, SharedPartition,
                         build_layer_plans, build_partition, pad_embeddings,
                         pad_table)
-from .pipeline import mgg_aggregate
+from .pipeline import mgg_aggregate, mgg_aggregate_streamed
 
 __all__ = ["GNNEngine", "gcn_init", "gcn_apply", "gin_init", "gin_apply",
            "sage_init", "sage_apply", "gat_init", "gat_apply",
@@ -183,6 +183,26 @@ class GNNEngine:
                          layer: int = 0) -> jax.Array:
         """Fused ``(A x) @ W``: the update matmul runs inside the ring."""
         return self.aggregate(x, layer=layer, update_w=w)
+
+    def aggregate_streamed(self, tiered, layer: int = 0,
+                           update_w: Optional[jax.Array] = None,
+                           stats: Optional[Dict] = None) -> jax.Array:
+        """Partial-resident aggregation: chunks are pulled on demand from
+        a :class:`repro.store.TieredFeatures` (host store + device hot
+        cache), with each tile's host→device gather prefetched while the
+        previous tile's ring is in flight — see
+        :func:`repro.core.pipeline.mgg_aggregate_streamed`."""
+        lp = self.layer_plan(layer)
+        if tiered.plan is not lp.plan:
+            tiered.set_plan(lp.plan)
+        return mgg_aggregate_streamed(
+            tiered.chunk_fetcher(), lp.plan, self.mesh,
+            axis_name=self.axis_name,
+            use_kernel=self.use_kernel,
+            pb=lp.pb,
+            update_w=update_w,
+            stats=stats,
+        )
 
     def gcn_norm_aggregate(self, x: jax.Array, layer: int = 0) -> jax.Array:
         """Â x with Â = D^{-1/2}(A+I)D^{-1/2} (self-loops already in plan)."""

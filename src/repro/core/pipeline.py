@@ -48,6 +48,7 @@ from .placement import AggregationPlan
 
 __all__ = [
     "mgg_aggregate",
+    "mgg_aggregate_streamed",
     "bulk_aggregate",
     "fetch_rows_aggregate",
     "plan_device_arrays",
@@ -247,6 +248,204 @@ def _mgg_shard_body(
         out = step_work(out, cur, (n_dev - 2) * dist + c)  # epilogue (drain)
 
     return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MGG streamed aggregation: tiered features, host→device prefetch in the ring
+# ---------------------------------------------------------------------------
+
+def mgg_aggregate_streamed(
+    fetch_chunk,
+    plan: AggregationPlan,
+    mesh: Mesh,
+    *,
+    axis_name: str = "ring",
+    use_kernel: bool = False,
+    acc_dtype=jnp.float32,
+    pb: Optional[int] = None,
+    update_w: Optional[jax.Array] = None,
+    stats: Optional[dict] = None,
+) -> jax.Array:
+    """Pipelined aggregation over *partial-resident* features.
+
+    ``fetch_chunk(c)`` supplies ring chunk ``c`` on demand — the
+    ``(n_dev · tile_rows, D)`` array holding every device's chunk-``c``
+    tile (see :meth:`repro.store.TieredFeatures.device_chunk`, which
+    sources rows from the device hot cache or a host-side gather).  The
+    schedule is the double-buffered prefetch of the tentpole:
+
+    1. fetch chunk 0 (pipeline fill — the one gather nothing can hide);
+    2. for each chunk ``c``: dispatch chunk ``c``'s remote ring
+       asynchronously, then immediately call ``fetch_chunk(c + 1)`` —
+       the host row gather and ``device_put`` upload for tile *i+1* run
+       while tile *i*'s ppermute ring is in flight (same independence
+       the in-ring double buffer gives XLA, lifted to the host side);
+    3. once every chunk is resident, run the local pass over the
+       assembled shard and sum: ``out = local + Σ_c ring_c``.
+
+    The sum order is fixed (local first, then chunks in order), so the
+    result is **deterministic and independent of row sourcing**: any
+    capacity — including all-resident — produces bitwise-identical
+    output through this path.  Against :func:`mgg_aggregate` the result
+    differs only by scatter-add accumulation order (tolerance-tested);
+    there is no ``interleave`` knob here because the local pass cannot
+    start before the last chunk lands.
+
+    ``stats`` (optional dict) is updated in place with prefetch
+    accounting: ``prefetch_issued`` counts fetches issued while the
+    previous chunk's ring was already dispatched (structural overlap,
+    ``dist - 1`` per call), ``prefetch_inflight`` counts those where the
+    ring result was verifiably still unrealized when the fetch returned.
+    """
+    n_dev, dist, tile_rows = plan.n_dev, plan.dist, plan.tile_rows
+    arrays = jax.tree.map(jnp.asarray, plan_device_arrays(plan))
+    if stats is not None:
+        stats.setdefault("prefetch_issued", 0)
+        stats.setdefault("prefetch_inflight", 0)
+
+    fused = update_w is not None
+    extra = (update_w,) if fused else ()
+    chunks = []
+    partials = []
+    cur = fetch_chunk(0)                       # pipeline fill (not hidden)
+    for c in range(dist):
+        chunks.append(cur)
+        if n_dev > 1:
+            # dispatched asynchronously: returns before the ring executes
+            ring = _streamed_ring_fn(mesh, axis_name, n_dev, dist, c,
+                                     use_kernel, acc_dtype, pb, fused)
+            partials.append(ring(cur, arrays, *extra))
+        if c + 1 < dist:
+            # host gather + upload for tile c+1 overlaps ring c in flight
+            cur = fetch_chunk(c + 1)
+            if stats is not None:
+                stats["prefetch_issued"] += 1
+                last = partials[-1] if partials else None
+                if last is not None and hasattr(last, "is_ready") \
+                        and not last.is_ready():
+                    stats["prefetch_inflight"] += 1
+
+    x_full = _streamed_assemble_fn(mesh, axis_name, n_dev, dist)(*chunks)
+    local = _streamed_local_fn(mesh, axis_name, use_kernel, acc_dtype, pb,
+                               fused)
+    out = local(x_full, arrays, *extra)
+    for p in partials:                         # fixed order ⇒ deterministic
+        out = out + p
+    return out.astype(chunks[0].dtype)
+
+
+# The streamed entry point is called once per chunk per aggregation, so —
+# unlike mgg_aggregate, whose single shard_map is traced per call — its
+# compiled pieces are memoized on their static configuration (the arrays
+# pytree and tiles are traced arguments, so one cache entry serves every
+# plan with the same shapes).
+
+@functools.lru_cache(maxsize=None)
+def _streamed_ring_fn(mesh, axis_name, n_dev, dist, chunk, use_kernel,
+                      acc_dtype, pb, fused):
+    body = functools.partial(
+        _streamed_chunk_body, axis_name=axis_name, n_dev=n_dev, dist=dist,
+        chunk=chunk, use_kernel=use_kernel, acc_dtype=acc_dtype, pb=pb,
+        fused=fused,
+    )
+    in_specs = [P(axis_name), _plan_specs(axis_name)]
+    if fused:
+        in_specs.append(P(None, None))
+    # jit the shard_map: a bare shard_map re-traces on every call, and
+    # the streamed path issues dist of these per aggregation
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                                 out_specs=P(axis_name), check_vma=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _streamed_local_fn(mesh, axis_name, use_kernel, acc_dtype, pb, fused):
+    body = functools.partial(
+        _streamed_local_body, axis_name=axis_name, use_kernel=use_kernel,
+        acc_dtype=acc_dtype, pb=pb, fused=fused,
+    )
+    in_specs = [P(axis_name), _plan_specs(axis_name)]
+    if fused:
+        in_specs.append(P(None, None))
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                                 out_specs=P(axis_name), check_vma=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _streamed_assemble_fn(mesh, axis_name, n_dev, dist):
+    """Chunk arrays → the full shard (chunk-minor → row-major per device)."""
+    def assemble(*chs):
+        tile_rows = chs[0].shape[0] // n_dev
+        st = jnp.stack(chs, axis=0)            # (dist, n_dev·tile, D)
+        st = st.reshape(dist, n_dev, tile_rows, -1).transpose(1, 0, 2, 3)
+        return st.reshape(n_dev * dist * tile_rows, -1)
+
+    return jax.jit(assemble,
+                   out_shardings=NamedSharding(mesh, P(axis_name)))
+
+
+def _streamed_step(out, cur, idx, r_nbrs, r_mask, r_tgt, update,
+                   use_kernel, acc_dtype, pb):
+    nbrs = lax.dynamic_index_in_dim(r_nbrs, idx, 0, keepdims=False)
+    mask = lax.dynamic_index_in_dim(r_mask, idx, 0, keepdims=False)
+    tgt = lax.dynamic_index_in_dim(r_tgt, idx, 0, keepdims=False)
+    return out.at[tgt].add(
+        update(_gather_sum(cur, nbrs, mask, use_kernel, acc_dtype, pb)))
+
+
+def _streamed_init(w, d_feat, acc_dtype, fused):
+    """(update fn, output width) — fused folds the ·W matmul into every
+    partial aggregate, exactly as in :func:`mgg_aggregate`."""
+    if fused:
+        wacc = w.astype(acc_dtype)
+        return (lambda partial: partial @ wacc), int(wacc.shape[1])
+    return (lambda partial: partial), d_feat
+
+
+def _streamed_chunk_body(tile, arrays, w=None, *, axis_name, n_dev, dist,
+                         chunk, use_kernel, acc_dtype, pb=None, fused=False):
+    """One chunk's remote ring: only the steps ``s`` with
+    ``s % dist == chunk`` — i.e. the rotations of this chunk's tile."""
+    r_nbrs = arrays["remote_nbrs"][0]       # (S, PR, ps)
+    r_mask = arrays["remote_mask"][0]
+    r_tgt = arrays["remote_targets"][0]
+    rows = dist * tile.shape[0]             # shard height = dist · tile_rows
+    update, d_out = _streamed_init(w, tile.shape[1], acc_dtype, fused)
+    out = jnp.zeros((rows, d_out), acc_dtype)
+    if hasattr(lax, "pcast"):
+        out = lax.pcast(out, (axis_name,), to="varying")
+    else:  # older jax
+        out = lax.pvary(out, (axis_name,))
+
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    cur = lax.ppermute(tile, axis_name, perm)  # rotation 1 (prologue)
+
+    def body(k, carry):
+        cur, out = carry
+        nxt = lax.ppermute(cur, axis_name, perm)   # rotation k+2 — no dep
+        out = _streamed_step(out, cur, k * dist + chunk, r_nbrs, r_mask,
+                             r_tgt, update, use_kernel, acc_dtype, pb)
+        return (nxt, out)
+
+    cur, out = lax.fori_loop(0, n_dev - 2, body, (cur, out))
+    out = _streamed_step(out, cur, (n_dev - 2) * dist + chunk, r_nbrs,
+                         r_mask, r_tgt, update, use_kernel, acc_dtype, pb)
+    return out
+
+
+def _streamed_local_body(x, arrays, w=None, *, axis_name, use_kernel,
+                         acc_dtype, pb=None, fused=False):
+    """The local pass over the fully assembled shard (runs last)."""
+    l_nbrs = arrays["local_nbrs"][0]
+    l_mask = arrays["local_mask"][0]
+    l_tgt = arrays["local_targets"][0]
+    update, d_out = _streamed_init(w, x.shape[1], acc_dtype, fused)
+    out = jnp.zeros((x.shape[0], d_out), acc_dtype)
+    if hasattr(lax, "pcast"):
+        out = lax.pcast(out, (axis_name,), to="varying")
+    else:  # older jax
+        out = lax.pvary(out, (axis_name,))
+    return out.at[l_tgt].add(
+        update(_gather_sum(x, l_nbrs, l_mask, use_kernel, acc_dtype, pb)))
 
 
 # ---------------------------------------------------------------------------

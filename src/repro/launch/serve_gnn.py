@@ -66,6 +66,10 @@ def main() -> None:
     ap.add_argument("--fuse-update", action="store_true",
                     help="run the dense ·W update inside the ring")
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--feature-capacity", type=int, default=None,
+                    help="serve tiered: features live in a host store, "
+                         "the device holds only this many hot rows "
+                         "(0 = stream everything)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serving replicas behind the router")
     ap.add_argument("--router", default="locality",
@@ -113,7 +117,9 @@ def main() -> None:
                                     fuse_update=args.fuse_update)
         return GNNServeEngine(eng, params, args.model, x, g,
                               slots=args.slots,
-                              use_cache=not args.no_cache, log_fn=print)
+                              use_cache=not args.no_cache,
+                              feature_capacity=args.feature_capacity,
+                              log_fn=print)
 
     phases = [
         TrafficPhase(requests=args.requests, alpha=args.alpha,
@@ -146,6 +152,16 @@ def main() -> None:
             print(f"  replica {i}: served {p['served']}, hit rate "
                   f"{p['cache_hit_rate']:.3f}, retunes {p['retunes']}, "
                   f"config {p['config']}")
+        if any(p.get("tiers") for p in rep["per_replica"]):
+            print(f"tiered features (cluster): "
+                  f"{rep['host_rows_streamed']} rows streamed from host, "
+                  f"{rep['cache_rows_served']} rows served from device cache")
+            for i, p in enumerate(rep["per_replica"]):
+                t = p.get("tiers")
+                if t:
+                    print(f"  replica {i}: cap {t['capacity']} rows "
+                          f"({t['resident_fraction']:.1%} resident), "
+                          f"feature hit rate {t['hit_rate']:.3f}")
         return
 
     srv = build_replica()
@@ -159,6 +175,12 @@ def main() -> None:
     print(f"cache hit rate {rep['cache_hit_rate']:.3f} "
           f"({rep['cache_stores']} stores, "
           f"{rep['cache_invalidations']} invalidations)")
+    if rep["tiers"] is not None:
+        t = rep["tiers"]
+        print(f"tiered features: cap {t['capacity']} rows "
+              f"({t['resident_fraction']:.1%} resident), feature hit rate "
+              f"{t['hit_rate']:.3f}, streamed "
+              f"{t['host_bytes_streamed'] / 1e6:.1f} MB from host")
     if args.dynamic_tune:
         print(f"retunes {rep['retunes']}, rebuilds {rep['rebuilds']}, "
               f"final config {rep['config']}")

@@ -134,6 +134,8 @@ class DynamicGNNEngine:
         ps_space: Tuple[int, ...] = DEFAULT_PS,
         dist_space: Tuple[int, ...] = DEFAULT_DIST,
         pb_space: Tuple[int, ...] = DEFAULT_PB,
+        cap_space: Tuple[int, ...] = (),
+        tune_fuse: bool = False,
         window: ProfileConfig = ProfileConfig(warmup=1, iters=3),
         cache_path: Optional[str] = None,
         budget: Optional[int] = None,
@@ -150,7 +152,19 @@ class DynamicGNNEngine:
         """``layer_dims`` (one aggregation feature width per layer, e.g.
         ``aggregation_widths(model, params)``) selects per-layer tuning:
         a :class:`PerLayerTuner` searches each layer's (ps, dist, pb) over
-        one shared partition, warm-started from the global search."""
+        one shared partition, warm-started from the global search.
+
+        ``cap_space`` makes the tiered feature-cache capacity (rows held
+        device-resident by :class:`repro.store.TieredFeatures`) a tuned
+        knob — configs then carry a ``cap`` key, surfaced via
+        :attr:`feature_capacity` for the storage layer to adopt.
+        ``tune_fuse`` (per-layer mode only) probes flipping each layer's
+        fused-update dataflow after its (ps, dist, pb) search settles;
+        ``fuse_update`` remains the starting point for every layer."""
+        if tune_fuse and layer_dims is None:
+            raise ValueError(
+                "tune_fuse probes a per-layer dataflow knob — pass "
+                "layer_dims to select per-layer tuning")
         n_dev = mesh.shape[axis_name]
         g = graph.with_self_loops() if self_loops else graph
         if not use_kernel:
@@ -172,6 +186,9 @@ class DynamicGNNEngine:
             warm = cls._clamp_pb(warm, pb_space)
             tuner = PerLayerTuner(
                 len(shapes), ps_space, dist_space, pb_space,
+                cap_space=cap_space,
+                fuse_space=((fuse_update, not fuse_update) if tune_fuse
+                            else (fuse_update,)),
                 vmem_checks=[make_vmem_check(s, hw) for s in shapes],
                 budget=budget, drift_threshold=drift_threshold,
                 warm_start=warm,
@@ -182,7 +199,7 @@ class DynamicGNNEngine:
             warm = cache.get(shape) if cache is not None else None
             warm = cls._clamp_pb(warm, pb_space)
             tuner = OnlineTuner(
-                ps_space, dist_space, pb_space,
+                ps_space, dist_space, pb_space, cap_space=cap_space,
                 vmem_check=make_vmem_check(shape, hw),
                 budget=budget, drift_threshold=drift_threshold,
                 warm_start=warm,
@@ -214,8 +231,13 @@ class DynamicGNNEngine:
 
     def _build_engine(self, cfg: Dict) -> GNNEngine:
         def _lc(c):
-            return dict(ps=int(c["ps"]), dist=int(c["dist"]),
-                        pb=int(c["pb"]) if self.use_kernel else None)
+            # "cap" is a storage-layer knob (see feature_capacity) and
+            # never reaches the plan; "fuse" selects the layer's dataflow.
+            lc = dict(ps=int(c["ps"]), dist=int(c["dist"]),
+                      pb=int(c["pb"]) if self.use_kernel else None)
+            if "fuse" in c:
+                lc["fuse_update"] = bool(c["fuse"])
+            return lc
 
         # The node split + locality split depend only on (graph, n_dev):
         # build them once and re-derive only the schedules on tuner moves
@@ -264,6 +286,20 @@ class DynamicGNNEngine:
     @property
     def config(self) -> Dict:
         return dict(self._config)
+
+    @property
+    def feature_capacity(self) -> Optional[int]:
+        """The live config's tiered-cache capacity (``cap`` knob), or
+        None when capacity is not being tuned.  Per-layer configs pin one
+        cap across layers (the feature table is shared), so the first
+        layer's value is THE value."""
+        cfg = self._config
+        if "layers" in cfg:
+            for c in cfg["layers"]:
+                if "cap" in c:
+                    return int(c["cap"])
+            return None
+        return int(cfg["cap"]) if "cap" in cfg else None
 
     def pad(self, x: np.ndarray) -> np.ndarray:
         return self.engine.pad(x)

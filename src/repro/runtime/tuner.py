@@ -41,7 +41,8 @@ from repro.core.autotune import (HardwareSpec, TPU_V5E, SearchResult,
 
 __all__ = ["OnlineTuner", "PerLayerTuner", "make_vmem_check", "shape_drift"]
 
-Key = Tuple[int, int, int]
+# (ps, dist, pb) — or (ps, dist, pb, cap) when a cap_space is configured
+Key = Tuple[int, ...]
 
 DEFAULT_PS = (1, 2, 4, 8, 16, 32)
 DEFAULT_DIST = (1, 2, 4, 8, 16)
@@ -73,7 +74,16 @@ def shape_drift(a: WorkloadShape, b: WorkloadShape) -> float:
 
 
 class OnlineTuner:
-    """Incremental ps → dist → wpb search over externally-measured latencies."""
+    """Incremental ps → dist → wpb search over externally-measured latencies.
+
+    ``cap_space`` (optional, the tiered feature path's device-cache
+    capacity in rows) adds a FOURTH climbed coordinate after ``pb``:
+    larger caches stream fewer cold rows from the host store, so latency
+    falls until the hit rate saturates — exactly the
+    increase-until-no-improvement shape the paper's climb expects.  With
+    a cap_space, config dicts carry a ``cap`` key and table keys are
+    4-tuples; without one (the default) behavior is unchanged.
+    """
 
     def __init__(
         self,
@@ -81,6 +91,7 @@ class OnlineTuner:
         dist_space: Tuple[int, ...] = DEFAULT_DIST,
         pb_space: Tuple[int, ...] = DEFAULT_PB,
         *,
+        cap_space: Tuple[int, ...] = (),
         vmem_check: Optional[Callable[[int, int, int], bool]] = None,
         top_k: int = 3,
         budget: Optional[int] = None,
@@ -90,6 +101,7 @@ class OnlineTuner:
         self.ps_space = tuple(sorted(ps_space))
         self.dist_space = tuple(sorted(dist_space))
         self.pb_space = tuple(sorted(pb_space))
+        self.cap_space = tuple(sorted(cap_space))
         self.vmem_check = vmem_check
         self.top_k = int(top_k)
         self.budget = budget
@@ -102,6 +114,21 @@ class OnlineTuner:
         self._gen: Optional[Iterator[Key]] = None
         self._pending: Optional[Key] = None
         self.reset(warm_start=warm_start)
+
+    # -- knob/key mapping (3 knobs, or 4 with a cap_space) -------------------
+
+    @property
+    def knobs(self) -> Tuple[str, ...]:
+        return ("ps", "dist", "pb") + (("cap",) if self.cap_space else ())
+
+    def _key(self, cfg: Dict[str, int]) -> Key:
+        key = (int(cfg["ps"]), int(cfg["dist"]), int(cfg["pb"]))
+        if self.cap_space:
+            key += (int(cfg.get("cap", self.cap_space[0])),)
+        return key
+
+    def _cfg(self, key: Key) -> Dict[str, int]:
+        return dict(zip(self.knobs, key))
 
     # -- public protocol -----------------------------------------------------
 
@@ -120,8 +147,7 @@ class OnlineTuner:
         """Config awaiting a measurement; the best config once converged."""
         if self._pending is None:
             return self.best
-        ps, dist, pb = self._pending
-        return dict(ps=ps, dist=dist, pb=pb)
+        return self._cfg(self._pending)
 
     def observe(self, latency: float) -> None:
         """Deliver the measured latency for the proposed config."""
@@ -133,8 +159,7 @@ class OnlineTuner:
             # budget exhausted: record this sample and stop the search
             key = self._pending
             self.table[key] = float(latency)
-            self.trajectory.append(
-                (dict(ps=key[0], dist=key[1], pb=key[2]), float(latency)))
+            self.trajectory.append((self._cfg(key), float(latency)))
             self._gen.close()
             self._pending = None
             return
@@ -145,15 +170,14 @@ class OnlineTuner:
         finite = {k: v for k, v in self.table.items() if v < math.inf}
         if not finite:
             return None
-        ps, dist, pb = min(finite, key=finite.get)
-        return dict(ps=ps, dist=dist, pb=pb)
+        return self._cfg(min(finite, key=finite.get))
 
     @property
     def best_latency(self) -> float:
         best = self.best
         if best is None:
             return math.inf
-        return self.table[(best["ps"], best["dist"], best["pb"])]
+        return self.table[self._key(best)]
 
     def result(self) -> SearchResult:
         """The search outcome in the offline optimizer's result type."""
@@ -196,11 +220,10 @@ class OnlineTuner:
             self.reset(warm_start=warm)
 
     def _adopt(self, warm: Dict[str, int]):
-        key = (int(warm["ps"]), int(warm["dist"]), int(warm["pb"]))
+        key = self._key(warm)
         lat = yield key
         self.table[key] = float(lat)
-        self.trajectory.append(
-            (dict(ps=key[0], dist=key[1], pb=key[2]), self.table[key]))
+        self.trajectory.append((self._cfg(key), self.table[key]))
 
     def observe_shape(self, shape: WorkloadShape) -> bool:
         """Report the live workload shape; True ⇔ drift re-opened the search."""
@@ -224,19 +247,23 @@ class OnlineTuner:
 
     def _search(self, warm: Optional[Dict[str, int]]):
         table, traj = self.table, self.trajectory
+        caps = self.cap_space
+        c0 = caps[0] if caps else None
 
-        def mget(ps: int, dist: int, pb: int):
-            key = (int(ps), int(dist), int(pb))
+        def mget(ps: int, dist: int, pb: int, cap: Optional[int] = c0):
+            key = (int(ps), int(dist), int(pb)) \
+                + ((int(cap),) if caps else ())
             if key not in table:
-                if self.vmem_check is not None and not self.vmem_check(*key):
+                # the cap knob never touches VMEM (the feature cache lives
+                # in HBM), so feasibility is checked on (ps, dist, pb) only
+                if self.vmem_check is not None \
+                        and not self.vmem_check(*key[:3]):
                     table[key] = math.inf
-                    traj.append((dict(ps=key[0], dist=key[1], pb=key[2]),
-                                 math.inf))
+                    traj.append((self._cfg(key), math.inf))
                 else:
                     lat = yield key
                     table[key] = float(lat)
-                    traj.append((dict(ps=key[0], dist=key[1], pb=key[2]),
-                                 table[key]))
+                    traj.append((self._cfg(key), table[key]))
             return table[key]
 
         def climb(values, cur, f):
@@ -255,7 +282,8 @@ class OnlineTuner:
         if warm is not None:
             # warm start: the cached optimum is measured first, so it seeds
             # the table (and is the committed answer if nothing beats it).
-            yield from mget(warm["ps"], warm["dist"], warm["pb"])
+            yield from mget(warm["ps"], warm["dist"], warm["pb"],
+                            warm.get("cap", c0))
 
         ps = yield from climb(self.ps_space, p0,
                               lambda v: mget(v, d0, b0))
@@ -263,14 +291,20 @@ class OnlineTuner:
                                 lambda v: mget(ps, v, b0))
         pb = yield from climb(self.pb_space, b0,
                               lambda v: mget(ps, dist, v))
+        cap = c0
+        if caps:
+            # capacity climbs LAST: it buys bandwidth with memory, so it
+            # only moves once the schedule knobs have settled
+            cap = yield from climb(caps, c0, lambda v: mget(ps, dist, pb, v))
 
-        # Retreat rule: if pb never improved, drop ps one notch and retry pb.
+        # Retreat rule: if pb never improved, drop ps one notch and retry pb
+        # (on the climbed cap, so the probes stay on the incumbent's slice).
         if pb == b0 and ps != p0:
             ps_retreat = self.ps_space[max(0, self.ps_space.index(ps) - 1)]
             pb2 = yield from climb(self.pb_space, b0,
-                                   lambda v: mget(ps_retreat, dist, v))
-            a = yield from mget(ps_retreat, dist, pb2)
-            b = yield from mget(ps, dist, pb)
+                                   lambda v: mget(ps_retreat, dist, v, cap))
+            a = yield from mget(ps_retreat, dist, pb2, cap)
+            b = yield from mget(ps, dist, pb, cap)
             if a < b:
                 ps, pb = ps_retreat, pb2
 
@@ -292,7 +326,8 @@ class OnlineTuner:
     def _neighbors(self, key: Key) -> List[Key]:
         """Single-knob ±1-notch moves around ``key`` (deterministic order)."""
         out: List[Key] = []
-        spaces = (self.ps_space, self.dist_space, self.pb_space)
+        spaces = (self.ps_space, self.dist_space, self.pb_space) \
+            + ((self.cap_space,) if self.cap_space else ())
         for dim, space in enumerate(spaces):
             i = space.index(key[dim]) if key[dim] in space else None
             if i is None:
@@ -323,6 +358,18 @@ class PerLayerTuner:
        global optimum); each phase warm-starts from the global best, so
        its first measurement re-validates the incumbent under the current
        pinning.
+    3. **fuse ℓ** (only with ``fuse_space=(False, True)``) — after layer
+       ℓ's schedule commits, its ``fuse_update`` flag is probed with ONE
+       measurement of the committed configs with layer ℓ's fuse flipped;
+       the flip is kept iff it beats the phase's committed latency.  A
+       boolean knob needs no climb — a single flip probe per layer is the
+       entire dimension, so the fourth per-layer knob costs at most L
+       extra measurements.
+
+    ``cap_space`` makes the tiered feature-cache capacity a tuned knob.
+    Capacity is a *global* resource (one device cache feeds every layer),
+    so only the global phase's sub-tuner climbs it; the committed ``cap``
+    is then pinned into every layer config for the per-layer phases.
 
     Every ``observe`` is the latency of the FULL forward under the proposed
     per-layer configs, so each phase's table is a valid surface for its
@@ -339,6 +386,8 @@ class PerLayerTuner:
         dist_space: Tuple[int, ...] = DEFAULT_DIST,
         pb_space: Tuple[int, ...] = DEFAULT_PB,
         *,
+        cap_space: Tuple[int, ...] = (),
+        fuse_space: Tuple[bool, ...] = (False,),
         vmem_checks=None,   # None | callable | per-layer sequence of callables
         top_k: int = 3,
         budget: Optional[int] = None,
@@ -352,6 +401,10 @@ class PerLayerTuner:
         self.ps_space = tuple(sorted(ps_space))
         self.dist_space = tuple(sorted(dist_space))
         self.pb_space = tuple(sorted(pb_space))
+        self.cap_space = tuple(sorted(cap_space))
+        self.fuse_space = tuple(dict.fromkeys(bool(f) for f in fuse_space))
+        if not self.fuse_space:
+            self.fuse_space = (False,)
         if vmem_checks is None or callable(vmem_checks):
             vmem_checks = [vmem_checks] * self.num_layers
         if len(vmem_checks) != self.num_layers:
@@ -368,6 +421,10 @@ class PerLayerTuner:
         self.reset(warm_start=warm_start)
 
     # -- public protocol -----------------------------------------------------
+
+    @property
+    def _tune_fuse(self) -> bool:
+        return len(self.fuse_space) > 1
 
     def reset(self, warm_start=None) -> None:
         """(Re-)open the search; stale measurements are discarded."""
@@ -386,15 +443,23 @@ class PerLayerTuner:
         else:
             global_warm, layer_warms = None, None
         self._configs = (list(layer_warms) if layer_warms is not None
-                         else [dict(global_warm or default)] * self.num_layers)
+                         else [dict(global_warm or default)
+                               for _ in range(self.num_layers)])
+        if self._tune_fuse:
+            for c in self._configs:
+                c.setdefault("fuse", bool(self.fuse_space[0]))
         self._phases: List[Tuple] = []
         if self.tune_global_first and layer_warms is None:
             self._phases.append(("global", global_warm))
         for i in range(self.num_layers):
             self._phases.append(("layer", i))
+            if self._tune_fuse:
+                self._phases.append(("fuse", i))
         self._sub: Optional[OnlineTuner] = None
         self._sub_layer: Optional[int] = None
         self._adopt_pending = False
+        self._fuse_pending: Optional[int] = None
+        self._phase_lat = math.inf
         self._done = False
         self._start_next_phase()
 
@@ -408,11 +473,18 @@ class PerLayerTuner:
             return self.best
         if self._adopt_pending:
             return [dict(c) for c in self._configs]
+        if self._fuse_pending is not None:
+            out = [dict(c) for c in self._configs]
+            lf = self._fuse_pending
+            out[lf]["fuse"] = not out[lf].get("fuse", False)
+            return out
         cand = self._sub.propose()
         if self._sub_layer is None:           # global phase
-            return [dict(cand)] * self.num_layers
+            # merge keeps per-layer extras (fuse) while the shared
+            # candidate moves every layer's (ps, dist, pb[, cap])
+            return [{**dict(c), **dict(cand)} for c in self._configs]
         out = [dict(c) for c in self._configs]
-        out[self._sub_layer] = dict(cand)
+        out[self._sub_layer] = {**out[self._sub_layer], **dict(cand)}
         return out
 
     def observe(self, latency: float) -> None:
@@ -432,9 +504,21 @@ class PerLayerTuner:
             self._adopt_pending = False
             self._done = True
             return
-        self._sub.observe(latency)
-        while not self._done and self._sub.converged:
-            self._commit_phase()
+        if self._fuse_pending is not None:
+            # single flip probe: keep the flip iff it beats the latency the
+            # layer phase committed at
+            lf = self._fuse_pending
+            self._fuse_pending = None
+            if latency < self._phase_lat:
+                self._configs[lf]["fuse"] = \
+                    not self._configs[lf].get("fuse", False)
+                self._phase_lat = latency
+            self._start_next_phase()
+        else:
+            self._sub.observe(latency)
+            while (not self._done and self._sub is not None
+                   and self._sub.converged):
+                self._commit_phase()
         if (self.budget is not None and self.measured >= self.budget
                 and not self._done):
             self._commit_phase(exhausted=True)
@@ -559,6 +643,12 @@ class PerLayerTuner:
     def _start_next_phase(self) -> None:
         while self._phases:
             phase = self._phases.pop(0)
+            if phase[0] == "fuse":
+                # one flip probe of the just-committed layer (no sub-tuner)
+                self._fuse_pending = phase[1]
+                self._sub = None
+                self._sub_layer = None
+                return
             if phase[0] == "global":
                 self._sub_layer = None
                 warm = phase[1]
@@ -567,6 +657,9 @@ class PerLayerTuner:
                 warm = dict(self._configs[self._sub_layer])
             self._sub = OnlineTuner(
                 self.ps_space, self.dist_space, self.pb_space,
+                # capacity is a global resource: only the global phase's
+                # sub-tuner climbs it (pinned for per-layer phases)
+                cap_space=self.cap_space if self._sub_layer is None else (),
                 vmem_check=self._layer_check(self._sub_layer),
                 top_k=self.top_k, warm_start=warm,
             )
@@ -577,19 +670,28 @@ class PerLayerTuner:
         self._sub = None
 
     def _apply_sub_best(self) -> None:
+        if self._sub is None:
+            return
         best = self._sub.best
         if best is None:
             return
         if self._sub_layer is None:
-            self._configs = [dict(best)] * self.num_layers
+            # merge: the global winner (incl. any committed cap) lands in
+            # every layer while per-layer extras (fuse) persist
+            self._configs = [{**dict(c), **dict(best)}
+                             for c in self._configs]
         else:
-            self._configs[self._sub_layer] = dict(best)
+            self._configs[self._sub_layer] = \
+                {**self._configs[self._sub_layer], **dict(best)}
 
     def _commit_phase(self, exhausted: bool = False) -> None:
+        if self._sub is not None:
+            self._phase_lat = self._sub.best_latency
         self._apply_sub_best()
         if exhausted:
             self._phases = []
             self._done = True
             self._sub = None
+            self._fuse_pending = None
             return
         self._start_next_phase()

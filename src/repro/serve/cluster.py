@@ -346,6 +346,7 @@ class ServeCluster:
 
     def report(self) -> Dict[str, object]:
         per = [r.report() for r in self.replicas]
+        tiered = [p["tiers"] for p in per if p.get("tiers")]
         return dict(
             replicas=len(self.replicas),
             router=self.router.name,
@@ -356,5 +357,9 @@ class ServeCluster:
             staggered_retunes=self.staggered_retunes,
             deferred_retunes=self.deferred_retunes,
             retune_log=list(self.retune_log),
+            # cluster-wide tiered-storage accounting (replicas each hold
+            # their own hot cache over their own host store)
+            host_rows_streamed=sum(t["host_rows_streamed"] for t in tiered),
+            cache_rows_served=sum(t["cache_rows_served"] for t in tiered),
             per_replica=per,
         )

@@ -58,6 +58,7 @@ from repro.runtime.engine import DynamicGNNEngine
 from repro.serve.hotcache import HotNodeCache
 from repro.serve.stats import TrafficSnapshot, WorkloadStats
 from repro.serve.traffic import TrafficEvent
+from repro.store import FeatureStore, TieredFeatures
 
 __all__ = ["GNNServeEngine", "ServeResult", "run_trace"]
 
@@ -100,6 +101,8 @@ class GNNServeEngine:
         min_records: int = 8,
         use_cache: bool = True,
         cache_capacity: Optional[int] = None,
+        feature_store: Optional[FeatureStore] = None,
+        feature_capacity: Optional[int] = None,
         log_fn: Callable[[str], None] = lambda _s: None,
         clock: Callable[[], float] = time.perf_counter,
         retune_gate: Optional[
@@ -151,6 +154,21 @@ class GNNServeEngine:
         self._search_opened_at: Optional[int] = \
             engine.tuner.measured if self._tuning else None
 
+        # tiered feature storage (the memory-bound regime): features live
+        # in the host FeatureStore, the device holds a bounded hot cache,
+        # and full passes assemble a transient padded table — no resident
+        # O(N·D) device copy.  Selected by passing either knob.
+        self.tiers: Optional[TieredFeatures] = None
+        if feature_store is not None or feature_capacity is not None:
+            store = feature_store if feature_store is not None \
+                else FeatureStore(x)
+            cap = feature_capacity
+            if cap is None:   # adopt the tuner's cap knob when it has one
+                cap = (engine.feature_capacity or 0) if self.dynamic else 0
+            self.tiers = TieredFeatures(store, self.eng.plan, int(cap),
+                                        shard=self.eng.shard)
+            self.x = store.x   # the store owns the bits; keep a shared view
+
         self.xp = None
         self._refresh_tables()
         self._build_steps()
@@ -158,7 +176,16 @@ class GNNServeEngine:
     # -- jit / layout management ---------------------------------------------
 
     def _refresh_tables(self) -> None:
-        """(Re-)pad + shard the feature table for the CURRENT plan layout."""
+        """(Re-)pad + shard the feature table for the CURRENT plan layout.
+
+        Tiered mode keeps NO resident padded table: the plan is re-bound
+        (cached rows stay valid — they key on global node id) and each
+        full pass assembles a transient table via
+        :meth:`TieredFeatures.padded_table`."""
+        if self.tiers is not None:
+            self.tiers.set_plan(self.eng.plan)
+            self.xp = None
+            return
         self.xp = self.eng.shard(self.eng.pad(self.x))
 
     def _build_steps(self) -> None:
@@ -183,6 +210,12 @@ class GNNServeEngine:
 
     def _on_rebuild(self) -> None:
         self.rebuilds += 1
+        if self.tiers is not None and self.dynamic:
+            # the tuner may have moved the cap knob; adopt it (cold
+            # restart — the next admission refills from the live hot set)
+            cap = self.eng.feature_capacity
+            if cap is not None and cap != self.tiers.capacity:
+                self.tiers.resize(int(cap))
         self._refresh_tables()
         self._build_steps()
         # the padded layout may have moved with dist — the cached table's
@@ -220,9 +253,14 @@ class GNNServeEngine:
         layer-1 rows that aggregate it (reverse edges, self-loop
         included).  Returns the number of rows invalidated."""
         value = np.asarray(value, dtype=np.float32)
-        self.x[int(node)] = value
-        row = int(pgas_rows(self.eng.plan, np.array([node]))[0])
-        self.xp = self.eng.shard(self.xp.at[row].set(value))
+        if self.tiers is not None:
+            # store write + hot-feature-row invalidation: no assembly —
+            # prefetched or not — can serve the stale bits afterwards
+            self.tiers.update(int(node), value)
+        else:
+            self.x[int(node)] = value
+            row = int(pgas_rows(self.eng.plan, np.array([node]))[0])
+            self.xp = self.eng.shard(self.xp.at[row].set(value))
         dirty = self.rev.row(int(node))
         return self.cache.invalidate(dirty)
 
@@ -260,6 +298,13 @@ class GNNServeEngine:
         if self.record_stats:
             self.stats.record(batch[-1].t_arrival, seeds, fk_size,
                               n_requests=len(batch))
+        if self.tiers is not None and self.tiers.capacity \
+                and self.record_stats:
+            # refresh the device feature tier from the live hot set BEFORE
+            # this batch's assembly — a capacity-sized list, not the
+            # drift-sized snapshot().hot_nodes.  admit() fetches only
+            # newly-hot rows, so a stable hot set costs nothing here.
+            self.tiers.admit(self.stats.top_nodes(self.tiers.capacity))
 
         # lookup() already scanned validity over exactly f_need (with the
         # table-None guard), so zero misses ⇔ the cached pass is safe
@@ -269,7 +314,10 @@ class GNNServeEngine:
             out = self._step_cached(self.params, self.cache.table, rows)
             jax.block_until_ready(out)
         else:
-            out, h1 = self._step_full(self.params, self.xp, rows)
+            # tiered mode assembles the padded table transiently — later
+            # chunks' host gathers overlap earlier chunks' device work
+            xp = self.xp if self.tiers is None else self.tiers.padded_table()
+            out, h1 = self._step_full(self.params, xp, rows)
             jax.block_until_ready((out, h1))
             if self.use_cache:
                 hot = self.stats.snapshot().hot_nodes \
@@ -390,6 +438,7 @@ class GNNServeEngine:
             cache_stores=self.cache.stores,
             cache_invalidations=self.cache.invalidations,
             config=self.config,
+            tiers=self.tiers.report() if self.tiers is not None else None,
         )
 
 

@@ -68,18 +68,23 @@ class HotNodeCache:
         whole layer-1 state).  With a capacity, only the hottest
         ``capacity`` nodes (``hot_nodes``, hottest first) are marked valid —
         the stored rows exist either way, but cold rows are treated as
-        evicted so the hit-rate reflects the memory-bound policy.
+        evicted so the hit-rate reflects the memory-bound policy.  A
+        capacity with NO hot list marks nothing valid: an empty histogram
+        means nothing has earned admission yet, and falling back to
+        all-valid would silently disable the memory bound.
         """
         self.table = table
         self.stores += 1
-        if self.capacity is None or hot_nodes is None:
+        if self.capacity is None:
             self.valid[:] = True
-        else:
-            self.valid[:] = False
-            keep = np.asarray(list(hot_nodes)[: self.capacity],
-                              dtype=np.int64)
-            if keep.size:
-                self.valid[keep] = True
+            return
+        self.valid[:] = False
+        if hot_nodes is None:
+            return
+        keep = np.asarray(list(hot_nodes)[: self.capacity],
+                          dtype=np.int64)
+        if keep.size:
+            self.valid[keep] = True
 
     # -- invalidation --------------------------------------------------------
 
@@ -91,7 +96,10 @@ class HotNodeCache:
             self.valid[:] = False
             self.table = None
             return n
-        nodes = np.asarray(nodes, dtype=np.int64)
+        # dedupe before counting: a node listed twice is still one row, and
+        # the returned count feeds invalidation accounting (serve-properties
+        # test pins it to actual rows dirtied)
+        nodes = np.unique(np.asarray(nodes, dtype=np.int64))
         n = int(self.valid[nodes].sum())
         self.valid[nodes] = False
         return n

@@ -60,6 +60,11 @@ class WorkloadStats:
             deque()
         self._counts: Counter = Counter()
         self.total_batches = 0
+        # last rate computed over a non-degenerate span: carried forward
+        # when every window batch shares one timestamp (replayed shadow
+        # traffic under a frozen clock), so a degenerate window cannot
+        # collapse the rate to 0 and fake a full-drift rate change
+        self._last_rate = 0.0
 
     def record(self, t: float, seeds: np.ndarray, frontier_size: int,
                n_requests: int = 1) -> None:
@@ -88,6 +93,15 @@ class WorkloadStats:
     def __len__(self) -> int:
         return len(self._events)
 
+    def top_nodes(self, k: int) -> Tuple[int, ...]:
+        """Hottest-first node ids by window touch count, up to ``k``.
+
+        ``snapshot().hot_nodes`` caps at ``top_k`` — sized for drift
+        comparison, not for cache fills; the tiered feature path admits a
+        *capacity*-sized hot list through here instead."""
+        return tuple(n for n, v in self._counts.most_common(int(k))
+                     if v > 0)
+
     def recent_seed_batches(self, limit: Optional[int] = None) -> list:
         """Seed-id arrays of the newest ``limit`` window batches (oldest
         first).  The serving cluster replays these as *shadow traffic*
@@ -107,9 +121,16 @@ class WorkloadStats:
         t1 = self._events[-1][0]
         n_req = sum(e[4] for e in self._events)
         # requests/second: arrivals AFTER the window-opening batch over the
-        # window span (the first batch anchors t0, its requests predate it)
-        arrivals = n_req - self._events[0][4]
-        rate = arrivals / (t1 - t0) if n > 1 and t1 > t0 else 0.0
+        # window span (the first batch anchors t0, its requests predate it).
+        # A degenerate span (n == 1, or all timestamps equal — a frozen
+        # clock) carries the last measured rate instead of reporting 0.0:
+        # the request stream did not stop, the clock did.
+        if n > 1 and t1 > t0:
+            arrivals = n_req - self._events[0][4]
+            rate = arrivals / (t1 - t0)
+            self._last_rate = rate
+        else:
+            rate = self._last_rate
         seeds = float(np.mean([e[1] for e in self._events]))
         frontier = float(np.mean([e[2] for e in self._events]))
         hot = tuple(k for k, v in self._counts.most_common(self.top_k)

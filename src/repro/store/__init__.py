@@ -1,0 +1,27 @@
+"""Tiered feature storage: host feature store + device hot-row cache.
+
+The paper's headline baseline gap is against UVM-style page-granular
+feature access (§2.2, fig 8): real GNN feature tables outgrow device
+memory, and the question is *how* the cold rows travel.  This package
+makes that memory-bound regime real in the reproduction:
+
+* :class:`FeatureStore` — the host tier: the full ``(num_nodes, D)``
+  feature table in page-aligned host memory with a row-gather API (the
+  DMA-source analogue of pinned memory on GPU platforms).
+* :class:`HotFeatureCache` — the device tier: a bounded ``(capacity, D)``
+  row cache holding the hottest nodes, admission driven by the serving
+  workload's hot-seed histogram, validity/eviction following the
+  :class:`repro.serve.hotcache.HotNodeCache` semantics.
+* :class:`TieredFeatures` — binds the two tiers to a padded PGAS layout
+  (:class:`repro.core.placement.AggregationPlan`) and assembles
+  ring-tile chunks / full padded tables on demand, feeding
+  :func:`repro.core.pipeline.mgg_aggregate_streamed`'s double-buffered
+  host→device prefetch.
+
+See docs/storage.md for the end-to-end story.
+"""
+from .feature_store import FeatureStore
+from .hotfeatures import HotFeatureCache
+from .tiered import TieredFeatures
+
+__all__ = ["FeatureStore", "HotFeatureCache", "TieredFeatures"]

@@ -1,0 +1,91 @@
+"""Host-side tier of the tiered feature path: the full node-feature table.
+
+MGG keeps node embeddings in a PGAS heap spanning all GPUs; the UVM
+baseline it beats (§2.2) instead leaves them in host memory and migrates
+4 KB pages on demand.  The tiered path here takes a third position —
+features live on the host in a *row-gather* store (this class) and only
+a bounded hot set is device-resident (:class:`~repro.store.HotFeatureCache`)
+— so the repro can serve graphs whose feature table does not fit on
+device while still streaming at row granularity, not page granularity.
+
+On CUDA platforms the host tier would be *pinned* (page-locked) memory so
+the gather DMA bypasses a staging copy.  JAX's CPU/TPU backends expose no
+page-locking API, so the closest faithful analogue is what this class
+guarantees: one contiguous, aligned, dtype-stable buffer that
+``jax.device_put`` can transfer from without conversion or re-staging.
+The accounting (rows/bytes gathered) is what the cost model and fig8
+consume, and it is exact either way.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import numpy as np
+
+__all__ = ["FeatureStore"]
+
+
+class FeatureStore:
+    """Full ``(num_nodes, d_feat)`` feature table in host memory.
+
+    The store is the single source of truth for feature values: the
+    device hot cache and every assembled tile are derived from it, and
+    :meth:`update_row` bumps a monotone version counter that
+    :class:`~repro.store.TieredFeatures` uses to invalidate derived rows.
+    """
+
+    def __init__(self, features: np.ndarray, copy: bool = True):
+        x = np.array(features, dtype=np.float32, order="C", copy=copy)
+        if x.ndim != 2:
+            raise ValueError(f"features must be (num_nodes, d_feat), "
+                             f"got shape {x.shape}")
+        self.x = x
+        self.version = 0          # bumped on every row update
+        # gather accounting: the host→device traffic model reads these
+        self.gathers = 0          # gather() calls
+        self.rows_gathered = 0    # total rows returned across calls
+        self.updates = 0
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def d_feat(self) -> int:
+        return int(self.x.shape[1])
+
+    @property
+    def itemsize(self) -> int:
+        return int(self.x.itemsize)
+
+    @property
+    def bytes_gathered(self) -> int:
+        return self.rows_gathered * self.d_feat * self.itemsize
+
+    def gather(self, node_ids: Union[np.ndarray, Sequence[int]]) -> np.ndarray:
+        """Row-gather ``x[node_ids]`` as a fresh contiguous buffer.
+
+        The copy is deliberate: the caller hands the result straight to
+        ``jax.device_put``, and a contiguous buffer is the transfer-ready
+        shape (a strided view would be re-staged by the backend anyway).
+        Counts toward the gather accounting even when ``node_ids`` is
+        empty — an issued transfer of zero rows is still an issue slot in
+        the prefetch pipeline.
+        """
+        ids = np.asarray(node_ids, dtype=np.int64).ravel()
+        self.gathers += 1
+        self.rows_gathered += int(ids.size)
+        return np.ascontiguousarray(self.x[ids])
+
+    def row(self, node: int) -> np.ndarray:
+        """One row, copied (callers must not alias the store)."""
+        return self.x[int(node)].copy()
+
+    def update_row(self, node: int, value: np.ndarray) -> None:
+        """In-place feature update at ``node`` (live feature refresh)."""
+        v = np.asarray(value, dtype=np.float32)
+        if v.shape != (self.d_feat,):
+            raise ValueError(f"expected shape ({self.d_feat},), got {v.shape}")
+        self.x[int(node)] = v
+        self.version += 1
+        self.updates += 1

@@ -1,0 +1,197 @@
+"""TieredFeatures: bind the host store + device hot cache to a PGAS layout.
+
+This is the coordination layer of the tiered feature path: given a
+:class:`~repro.core.placement.AggregationPlan` (which fixes the padded
+PGAS layout and the ring-tile chunking), it assembles device-resident
+feature *chunks* — one ring tile per device — sourcing each row from the
+device hot cache when resident and from the host
+:class:`~repro.store.FeatureStore` otherwise.
+
+Two consumers:
+
+* :func:`repro.core.pipeline.mgg_aggregate_streamed` pulls chunks one at
+  a time through :meth:`chunk_fetcher`; the pipeline dispatches chunk
+  *i*'s ring ppermute asynchronously and then calls back here for chunk
+  *i+1*, so the host row gather (synchronous NumPy) and the
+  ``device_put`` upload overlap the in-flight ring — the double-buffered
+  prefetch of the tentpole.
+* The serving engine's full pass calls :meth:`padded_table` to
+  materialize the whole padded table transiently; assembly is chunk-by-
+  chunk, so later chunks' host gathers overlap earlier chunks' device
+  scatters under JAX's async dispatch, and the buffer is dropped after
+  the pass — steady-state device residency is the hot cache alone.
+
+**Bitwise guarantee**: every assembled row is the float32 bits of the
+store's current row — whether it traveled via the cache (filled by
+``store.gather`` at admission) or via the cold-path gather — and padding
+rows are zeros, exactly like :func:`~repro.core.placement.pad_embeddings`.
+Assembly is therefore bitwise-identical to the all-resident padded table
+at ANY capacity, which is what makes the tiered forward bitwise-equal to
+the all-resident forward (property-tested).
+
+Feature rows are keyed by global node id, so tuner moves that change the
+plan (``set_plan``) keep every cached row valid — only the chunk/layout
+maps are recomputed.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.placement import AggregationPlan
+
+from .feature_store import FeatureStore
+from .hotfeatures import HotFeatureCache
+
+__all__ = ["TieredFeatures"]
+
+
+class TieredFeatures:
+    """Tiered (host store + device hot cache) view of one PGAS layout."""
+
+    def __init__(self, store: FeatureStore, plan: AggregationPlan,
+                 capacity: int,
+                 shard: Optional[Callable] = None):
+        self.store = store
+        self.shard = shard            # e.g. GNNEngine.shard; None = default
+        self.cache = HotFeatureCache(store.num_nodes, capacity, store.d_feat)
+        # tiered-level accounting survives cache resizes / plan moves
+        self.host_rows_streamed = 0   # cold rows uploaded during assembly
+        self.cache_rows_served = 0    # rows sourced from the device tier
+        self.assemblies = 0           # chunks assembled
+        self.set_plan(plan)
+
+    @property
+    def capacity(self) -> int:
+        return self.cache.capacity
+
+    @property
+    def resident_fraction(self) -> float:
+        return self.cache.resident_rows / max(1, self.store.num_nodes)
+
+    # -- layout --------------------------------------------------------------
+
+    def set_plan(self, plan: AggregationPlan) -> None:
+        """(Re)bind to a PGAS layout.  Cached rows stay valid — the cache
+        key is the global node id, not a padded offset — so a tuner move
+        only recomputes the chunk maps."""
+        if plan.bounds[-1] != self.store.num_nodes:
+            raise ValueError(
+                f"plan covers {int(plan.bounds[-1])} nodes, store holds "
+                f"{self.store.num_nodes}")
+        self.plan = plan
+        counts = plan.node_counts
+        tile, rows = plan.tile_rows, plan.rows_per_dev
+        # per chunk c: (global node ids, offsets into the (n_dev·tile) chunk
+        # buffer, offsets into the (n_dev·rows) full padded table)
+        self._chunks: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        for c in range(plan.dist):
+            ids, pos, fpos = [], [], []
+            for d in range(plan.n_dev):
+                lo, hi = c * tile, min((c + 1) * tile, int(counts[d]))
+                if hi > lo:
+                    o = np.arange(lo, hi, dtype=np.int64)
+                    ids.append(int(plan.bounds[d]) + o)
+                    pos.append(d * tile + (o - lo))
+                    fpos.append(d * rows + o)
+            cat = lambda a: (np.concatenate(a) if a
+                             else np.zeros(0, dtype=np.int64))
+            self._chunks.append((cat(ids), cat(pos).astype(np.int32),
+                                 cat(fpos).astype(np.int32)))
+
+    # -- admission / updates -------------------------------------------------
+
+    def admit(self, hot_nodes: Sequence[int]) -> int:
+        """Refresh the device tier from a hottest-first node list (the
+        serving engine passes the WorkloadStats hot-seed histogram)."""
+        return self.cache.admit(hot_nodes, self.store)
+
+    def resize(self, capacity: int) -> None:
+        """Adopt a new capacity (tuner knob move).  The cache restarts
+        cold; the next admission refills it from the current hot list."""
+        if capacity == self.cache.capacity:
+            return
+        self.cache = HotFeatureCache(self.store.num_nodes, capacity,
+                                     self.store.d_feat)
+
+    def update(self, node: int, value: np.ndarray) -> None:
+        """Live feature update: the store is the source of truth, and the
+        derived device row (if resident) is invalidated so no later
+        assembly — prefetched or not — can serve the stale bits."""
+        self.store.update_row(node, value)
+        self.cache.invalidate(np.array([node], dtype=np.int64))
+
+    # -- assembly ------------------------------------------------------------
+
+    def _source(self, ids: np.ndarray):
+        """Split one row set into (cold ids+positions idx, hot slot ids)."""
+        if self.cache.capacity:
+            slots = self.cache.slots(ids)
+        else:
+            slots = np.full(ids.shape, -1, dtype=np.int32)
+        hot = slots >= 0
+        self.host_rows_streamed += int((~hot).sum())
+        self.cache_rows_served += int(hot.sum())
+        return hot, slots
+
+    def _assemble(self, buf, ids, pos):
+        """Scatter rows for ``ids`` into device buffer ``buf`` at ``pos``:
+        cold rows via host gather + device_put (async upload), hot rows
+        via a device-side gather from the cache table."""
+        import jax
+        import jax.numpy as jnp
+
+        hot, slots = self._source(ids)
+        cold_rows = self.store.gather(ids[~hot])
+        buf = buf.at[jnp.asarray(pos[~hot])].set(jax.device_put(cold_rows))
+        if hot.any():
+            buf = buf.at[jnp.asarray(pos[hot])].set(
+                self.cache.table[jnp.asarray(slots[hot])])
+        self.assemblies += 1
+        return buf
+
+    def device_chunk(self, c: int):
+        """Assemble ring chunk ``c``: the ``(n_dev · tile_rows, d_feat)``
+        device array holding every device's chunk-``c`` tile."""
+        import jax.numpy as jnp
+
+        ids, pos, _ = self._chunks[c]
+        buf = jnp.zeros((self.plan.n_dev * self.plan.tile_rows,
+                         self.store.d_feat), jnp.float32)
+        buf = self._assemble(buf, ids, pos)
+        return self.shard(buf) if self.shard is not None else buf
+
+    def chunk_fetcher(self) -> Callable[[int], object]:
+        """The ``fetch_chunk`` callable for
+        :func:`~repro.core.pipeline.mgg_aggregate_streamed`."""
+        return self.device_chunk
+
+    def padded_table(self):
+        """Materialize the full padded PGAS table, chunk by chunk (later
+        chunks' host gathers overlap earlier chunks' device scatters via
+        async dispatch).  Transient: callers drop it after the pass."""
+        import jax.numpy as jnp
+
+        buf = jnp.zeros((self.plan.padded_nodes, self.store.d_feat),
+                        jnp.float32)
+        for ids, _, fpos in self._chunks:
+            buf = self._assemble(buf, ids, fpos)
+        return self.shard(buf) if self.shard is not None else buf
+
+    # -- accounting ----------------------------------------------------------
+
+    def report(self) -> dict:
+        return dict(
+            capacity=self.capacity,
+            resident_rows=self.cache.resident_rows,
+            resident_fraction=self.resident_fraction,
+            hit_rate=self.cache.hit_rate,
+            host_rows_streamed=self.host_rows_streamed,
+            host_bytes_streamed=self.host_rows_streamed
+            * self.store.d_feat * self.store.itemsize,
+            cache_rows_served=self.cache_rows_served,
+            admissions=self.cache.admissions,
+            evictions=self.cache.evictions,
+            store_updates=self.store.updates,
+        )

@@ -111,6 +111,76 @@ def test_reverse_edge_invalidation_covers_in_frontier(case):
 
 
 # ---------------------------------------------------------------------------
+# HotNodeCache capacity-policy regressions
+# ---------------------------------------------------------------------------
+
+def test_store_capacity_without_hot_list_marks_nothing_valid():
+    """Regression: a capacity-bounded cache given NO hot list must mark
+    ZERO rows valid — the old behavior fell back to all-valid, silently
+    disabling the memory bound."""
+    cache = HotNodeCache(32, capacity=8)
+    cache.store(object(), hot_nodes=None)
+    assert not cache.valid.any()
+    assert cache.lookup(np.arange(32)) == 32      # every row is a miss
+    cache.store(object(), hot_nodes=[3, 5])
+    assert cache.valid.sum() == 2
+    assert cache.ready(np.array([3, 5]))
+    assert not cache.ready(np.array([3, 4]))
+
+
+def test_store_capacity_truncates_hot_list():
+    cache = HotNodeCache(32, capacity=2)
+    cache.store(object(), hot_nodes=[7, 9, 11, 13])   # hottest first
+    assert cache.valid.sum() == 2
+    assert cache.ready(np.array([7, 9]))
+    assert not cache.ready(np.array([11]))
+
+
+@given(st.integers(1, 40), st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_invalidate_counts_unique_rows_only(n, dup):
+    """Regression: duplicate ids in an invalidation batch (a transpose
+    row can repeat under multi-edges) must count each row ONCE — the
+    return value feeds invalidation accounting."""
+    cache = HotNodeCache(n)
+    cache.store(object())
+    ids = np.repeat(np.arange(n, dtype=np.int64)[: max(1, n // 2)], dup)
+    dirtied = cache.invalidate(ids)
+    assert dirtied == max(1, n // 2)              # unique rows, not len(ids)
+    assert cache.invalidate(ids) == 0             # second pass: already dirty
+
+
+# ---------------------------------------------------------------------------
+# WorkloadStats under a frozen clock (replayed shadow traffic)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 12), st.floats(10.0, 1000.0))
+@settings(max_examples=30, deadline=None)
+def test_frozen_clock_window_carries_last_rate(n_frozen, rate):
+    """Regression: once every batch in the window shares one timestamp
+    (shadow replay under a frozen clock), the snapshot must carry the
+    last measured rate instead of collapsing to 0 — a zero rate against
+    a live baseline reads as full drift and triggers a spurious retune."""
+    stats = WorkloadStats(window=8)
+    seeds = np.array([1, 2], dtype=np.int64)
+    for i in range(9):                           # live phase: real spacing
+        stats.record(i / rate, seeds, 10)
+    live = stats.snapshot().rate
+    assert live > 0
+    for _ in range(n_frozen):                    # frozen clock from here on
+        stats.record(9.0 / rate, seeds, 10)
+    frozen = stats.snapshot().rate
+    assert frozen > 0, "frozen-clock window collapsed the rate to zero"
+    if n_frozen >= 8:                            # window fully degenerate
+        assert frozen == pytest.approx(stats._last_rate)
+    base = stats.snapshot()
+    drift = WorkloadStats.drift(
+        TrafficSnapshot(base.requests, live, base.mean_seeds,
+                        base.mean_frontier, base.hot_nodes), base)
+    assert drift < 1.0, "frozen clock faked a full-drift rate change"
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: update_features(v) never leaves a stale cached answer
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,325 @@
+"""Unit tests for the tiered feature storage layer (repro.store) and the
+knobs it adds to the runtime: the host FeatureStore, the device
+HotFeatureCache (admission / eviction / invalidation semantics), the
+TieredFeatures coordinator, the tuner's cap and fuse dimensions, and the
+cost model's host-gather term."""
+import math
+
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.autotune import (FUSE_RING_EFF, TPU_V5E, WorkloadShape,
+                                 estimate_latency)
+from repro.runtime.tuner import OnlineTuner, PerLayerTuner
+from repro.store import FeatureStore, HotFeatureCache, TieredFeatures
+
+
+def _store(n=40, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return FeatureStore(rng.normal(size=(n, d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# FeatureStore
+# ---------------------------------------------------------------------------
+
+def test_feature_store_gather_and_accounting():
+    s = _store()
+    ids = np.array([3, 0, 7, 3], dtype=np.int64)
+    rows = s.gather(ids)
+    assert rows.flags["C_CONTIGUOUS"]
+    np.testing.assert_array_equal(rows, s.x[ids])
+    assert s.gathers == 1 and s.rows_gathered == 4
+    s.gather(np.zeros(0, dtype=np.int64))         # empty gathers count too
+    assert s.gathers == 2 and s.rows_gathered == 4
+    assert s.bytes_gathered == 4 * s.d_feat * s.itemsize
+
+
+def test_feature_store_gather_returns_copy():
+    s = _store()
+    rows = s.gather(np.array([1]))
+    rows[:] = 99.0
+    assert not np.any(s.x[1] == 99.0)
+
+
+def test_feature_store_update_row():
+    s = _store()
+    v = np.arange(s.d_feat, dtype=np.float32)
+    s.update_row(5, v)
+    np.testing.assert_array_equal(s.row(5), v)
+    assert s.version == 1 and s.updates == 1
+    with pytest.raises(ValueError):
+        s.update_row(5, np.zeros(s.d_feat + 1, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# HotFeatureCache
+# ---------------------------------------------------------------------------
+
+def test_hotfeatures_capacity_clamped():
+    s = _store(n=10)
+    assert HotFeatureCache(10, 99, s.d_feat).capacity == 10
+    assert HotFeatureCache(10, -3, s.d_feat).capacity == 0
+    zero = HotFeatureCache(10, 0, s.d_feat)
+    assert zero.table is None
+    assert zero.admit([1, 2], s) == 0             # nothing admissible
+
+
+def test_hotfeatures_admit_hottest_first_and_dedupe():
+    s = _store(n=20)
+    c = HotFeatureCache(20, 3, s.d_feat)
+    fetched = c.admit([5, 5, 9, 1, 7], s)         # dup 5; 7 over capacity
+    assert fetched == 3
+    assert c.resident_rows == 3
+    assert c.resident(np.array([5, 9, 1])).all()
+    assert not c.resident(np.array([7])).any()
+    # rows carry the store's bits
+    slots = c.slots(np.array([5, 9, 1], dtype=np.int64))
+    np.testing.assert_array_equal(np.asarray(c.table)[slots],
+                                  s.x[[5, 9, 1]])
+
+
+def test_hotfeatures_eviction_of_cold_rows():
+    s = _store(n=20)
+    c = HotFeatureCache(20, 2, s.d_feat)
+    c.admit([1, 2], s)
+    fetched = c.admit([2, 3], s)                  # 1 cools off, 3 heats up
+    assert fetched == 1
+    assert c.resident(np.array([2, 3])).all()
+    assert not c.resident(np.array([1])).any()
+    assert c.evictions == 1
+    # a re-admit of a resident-valid row fetches nothing
+    assert c.admit([2, 3], s) == 0
+
+
+def test_hotfeatures_invalidate_then_readmit_keeps_maps_consistent():
+    """Regression: a node re-admitted after invalidation must not leave a
+    stale _node_at entry behind — reusing that slot for another node in
+    the same admit() used to wipe the fresh mapping and strand the row in
+    an unreachable slot, then crash the next admit on exhausted slots."""
+    s = _store(n=20)
+    c = HotFeatureCache(20, 2, s.d_feat)
+    c.admit([0, 1], s)
+    c.invalidate(np.array([0, 1]))
+    assert c.admit([1, 2], s) == 2                # re-admit 1, admit 2
+    assert c.resident(np.array([1, 2])).all()
+    slots = c.slots(np.array([1, 2], dtype=np.int64))
+    assert (slots >= 0).all() and slots[0] != slots[1]
+    np.testing.assert_array_equal(np.asarray(c.table)[slots], s.x[[1, 2]])
+    # the same hot set is a no-op, not an AssertionError on leaked slots
+    assert c.admit([1, 2], s) == 0
+    # slot maps agree: every valid slot round-trips node -> slot -> node
+    for slot in range(c.capacity):
+        if c._valid[slot]:
+            assert c._slot_of[c._node_at[slot]] == slot
+
+
+def test_hotfeatures_hit_accounting_and_invalidate():
+    s = _store(n=20)
+    c = HotFeatureCache(20, 4, s.d_feat)
+    c.admit([0, 1, 2, 3], s)
+    slots = c.slots(np.array([0, 1, 9], dtype=np.int64))
+    assert (slots[:2] >= 0).all() and slots[2] == -1
+    assert c.hits == 2 and c.misses == 1
+    assert c.hit_rate == pytest.approx(2 / 3)
+    # invalidate dedupes and returns rows actually dirtied
+    assert c.invalidate(np.array([1, 1, 9])) == 1
+    assert not c.resident(np.array([1])).any()
+    assert c.invalidate(np.array([1])) == 0
+    # the freed slot is reusable
+    assert c.admit([0, 2, 3, 7], s) == 1
+    assert c.resident(np.array([7])).any()
+
+
+# ---------------------------------------------------------------------------
+# TieredFeatures
+# ---------------------------------------------------------------------------
+
+def _plan_and_x(n=60, d=5, n_dev=2, **kw):
+    g = C.power_law(n, avg_degree=4.0, seed=1)
+    plan = C.build_plan(g, n_dev, ps=4, dist=kw.pop("dist", 2))
+    x = np.random.default_rng(1).normal(size=(n, d)).astype(np.float32)
+    return g, plan, x
+
+
+def test_tiered_plan_must_cover_store():
+    _, plan, x = _plan_and_x()
+    with pytest.raises(ValueError):
+        TieredFeatures(FeatureStore(x[:-1]), plan, 0)
+
+
+def test_tiered_padded_table_matches_pad_embeddings():
+    _, plan, x = _plan_and_x()
+    for cap in (0, 10, 60):
+        t = TieredFeatures(FeatureStore(x), plan, cap)
+        if cap:
+            t.admit(list(range(cap)))
+        np.testing.assert_array_equal(np.asarray(t.padded_table()),
+                                      C.pad_embeddings(plan, x))
+
+
+def test_tiered_chunks_tile_the_padded_table():
+    _, plan, x = _plan_and_x(dist=3)
+    t = TieredFeatures(FeatureStore(x), plan, 0)
+    full = C.pad_embeddings(plan, x)
+    for c in range(plan.dist):
+        chunk = np.asarray(t.device_chunk(c))
+        for d in range(plan.n_dev):
+            lo = d * plan.rows_per_dev + c * plan.tile_rows
+            np.testing.assert_array_equal(
+                chunk[d * plan.tile_rows:(d + 1) * plan.tile_rows],
+                full[lo:lo + plan.tile_rows])
+
+
+def test_tiered_set_plan_keeps_cache_rows():
+    g, plan, x = _plan_and_x()
+    t = TieredFeatures(FeatureStore(x), plan, 12)
+    t.admit(list(range(12)))
+    assert t.cache.resident_rows == 12
+    t.set_plan(C.build_plan(g, 2, ps=4, dist=3))  # tuner move: new layout
+    assert t.cache.resident_rows == 12            # keyed by node id
+    np.testing.assert_array_equal(np.asarray(t.padded_table()),
+                                  C.pad_embeddings(t.plan, x))
+
+
+def test_tiered_update_invalidates_and_reserves_fresh_bits():
+    _, plan, x = _plan_and_x()
+    t = TieredFeatures(FeatureStore(x), plan, 12)
+    t.admit(list(range(12)))
+    v = 7.0 * np.ones(x.shape[1], np.float32)
+    t.update(3, v)
+    assert not t.cache.resident(np.array([3])).any()
+    full = np.asarray(t.padded_table())
+    expect = x.copy()
+    expect[3] = v
+    np.testing.assert_array_equal(full, C.pad_embeddings(plan, expect))
+
+
+def test_tiered_resize_and_report():
+    _, plan, x = _plan_and_x()
+    t = TieredFeatures(FeatureStore(x), plan, 12)
+    t.admit(list(range(12)))
+    t.padded_table()
+    before = t.report()
+    assert before["host_rows_streamed"] > 0
+    t.resize(4)                                   # cold restart
+    assert t.capacity == 4 and t.cache.resident_rows == 0
+    after = t.report()
+    # tiered-level accounting survives the resize
+    assert after["host_rows_streamed"] == before["host_rows_streamed"]
+    for k in ("capacity", "resident_fraction", "hit_rate",
+              "host_bytes_streamed", "cache_rows_served", "admissions",
+              "evictions", "store_updates"):
+        assert k in after
+
+
+# ---------------------------------------------------------------------------
+# tuner knobs: cap and fuse
+# ---------------------------------------------------------------------------
+
+def _drive(tuner, lat_fn, limit=400):
+    for _ in range(limit):
+        if tuner.converged:
+            break
+        cfg = tuner.propose()
+        if cfg is None:
+            break
+        tuner.observe(lat_fn(cfg))
+    return tuner
+
+
+def test_online_tuner_cap_dimension():
+    t = _drive(
+        OnlineTuner((256, 512), (1, 2), (16,), cap_space=(0, 1000, 4000)),
+        lambda c: 1.0 / c["ps"] + 0.1 * c["dist"] + 1e-5 * (4000 - c["cap"]))
+    assert t.converged and t.best["cap"] == 4000
+    # warm start carries the cap
+    t2 = OnlineTuner((256, 512), (1, 2), (16,), cap_space=(0, 1000, 4000),
+                     warm_start=dict(t.best))
+    assert t2.propose()["cap"] == 4000
+
+
+def test_online_tuner_without_cap_space_unchanged():
+    t = _drive(OnlineTuner((256, 512), (1, 2), (16,)),
+               lambda c: 1.0 / c["ps"] + 0.1 * c["dist"])
+    assert t.converged and set(t.best) == {"ps", "dist", "pb"}
+
+
+def test_per_layer_tuner_fuse_probe_kept_iff_better():
+    def lat(cfgs):
+        tot = 0.0
+        for i, c in enumerate(cfgs):
+            base = 1.0 + 0.1 * c["dist"]
+            f = c.get("fuse", False)
+            tot += base * (0.8 if (f and i == 0) else (1.3 if f else 1.0))
+        return tot
+
+    t = _drive(PerLayerTuner(2, (256,), (1, 2), (16,),
+                             fuse_space=(False, True)), lat)
+    assert t.converged
+    assert t.best[0]["fuse"] is True              # fusion helps layer 0
+    assert t.best[1]["fuse"] is False             # and hurts layer 1
+
+
+def test_per_layer_tuner_cap_pinned_across_layers():
+    t = _drive(
+        PerLayerTuner(2, (256,), (1, 2), (16,), cap_space=(0, 2000)),
+        lambda cfgs: sum(1.0 + 0.1 * c["dist"] for c in cfgs)
+        + 1e-4 * (2000 - cfgs[0].get("cap", 0)))
+    assert t.converged
+    caps = {c["cap"] for c in t.best}
+    assert caps == {2000}                         # one shared feature table
+
+
+def test_per_layer_tuner_without_fuse_space_unchanged():
+    t = _drive(PerLayerTuner(2, (256,), (1, 2), (16,)),
+               lambda cfgs: sum(1.0 + 0.1 * c["dist"] for c in cfgs))
+    assert t.converged and all("fuse" not in c for c in t.best)
+
+
+# ---------------------------------------------------------------------------
+# cost model: host-gather term + fuse calibration
+# ---------------------------------------------------------------------------
+
+_SHAPE = WorkloadShape(n_dev=4, d_feat=64, rows_per_dev=4096,
+                       local_edges_max=40_000, remote_edges_max=20_000)
+
+
+def test_estimate_latency_gather_term_monotone_in_host_rows():
+    lats = [estimate_latency(_SHAPE, 16, 2, 16, host_rows=r)
+            for r in (0, 1000, 10_000, 100_000, 1_000_000)]
+    assert lats == sorted(lats)
+    assert lats[0] == estimate_latency(_SHAPE, 16, 2, 16)   # None ≡ 0
+    assert lats[-1] > lats[0]                     # huge gathers DO cost
+
+
+def test_estimate_latency_gather_fill_scales_with_dist():
+    """More chunks ⇒ smaller exposed fill (better overlap), as long as the
+    gather itself still hides under the ring."""
+    rows = 20_000
+    l1 = estimate_latency(_SHAPE, 16, 1, 16, host_rows=rows)
+    l4 = estimate_latency(_SHAPE, 16, 4, 16, host_rows=rows)
+    exp1 = l1 - estimate_latency(_SHAPE, 16, 1, 16)
+    exp4 = l4 - estimate_latency(_SHAPE, 16, 4, 16)
+    assert exp4 < exp1
+
+
+def test_estimate_latency_fuse_calibration():
+    """The fused path divides the per-step update term by FUSE_RING_EFF
+    (< 1: fused ring steps run below peak) — fused must therefore model
+    slower than perfect folding but still hide under a transfer-bound
+    ring."""
+    assert 0.0 < FUSE_RING_EFF <= 1.0
+    unfused = estimate_latency(_SHAPE, 16, 2, 16, d_out=64, fuse=False)
+    fused = estimate_latency(_SHAPE, 16, 2, 16, d_out=64, fuse=True)
+    assert fused != unfused
+    assert math.isfinite(fused) and fused > 0
+
+
+def test_estimate_latency_single_device_pays_full_gather():
+    lone = WorkloadShape(n_dev=1, d_feat=64, rows_per_dev=4096,
+                         local_edges_max=40_000, remote_edges_max=0)
+    base = estimate_latency(lone, 16, 1, 16)
+    loaded = estimate_latency(lone, 16, 1, 16, host_rows=50_000)
+    assert loaded > base

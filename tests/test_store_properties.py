@@ -1,0 +1,144 @@
+"""Property tests for the tiered feature path (repro.store): the three
+acceptance guarantees of the memory-bound regime —
+
+1. the streamed (cached + prefetch) forward is **bitwise-equal** to the
+   all-resident forward at ANY capacity (in particular any capacity that
+   covers the working set), because assembly is sourcing-independent;
+2. the feature-cache hit rate is **monotone in capacity** under
+   hottest-first admission (prefix property: the rows resident at
+   capacity c are a subset of those resident at any c' ≥ c);
+3. after ``update_features`` no assembly — prefetched or not — ever
+   serves the stale row.
+"""
+import numpy as np
+
+from repro.testing.hypo import given, settings, strategies as st
+
+import repro.core as C
+from repro.core.pipeline import mgg_aggregate_streamed
+from repro.dist import flat_ring_mesh
+from repro.store import FeatureStore, HotFeatureCache, TieredFeatures
+
+_MESH = {}
+
+
+def _mesh():
+    if not _MESH:
+        _MESH["v"] = flat_ring_mesh(1)
+    return _MESH["v"]
+
+
+def cases(draw):
+    n = draw(st.integers(20, 120))
+    d = draw(st.integers(2, 12))
+    seed = draw(st.integers(0, 10_000))
+    g = C.power_law(n, avg_degree=draw(st.floats(2.0, 6.0)),
+                    locality=draw(st.floats(0.0, 0.6)), seed=seed)
+    x = np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+    dist = draw(st.sampled_from([1, 2, 3]))
+    cap = draw(st.integers(0, n))
+    return g, x, dist, cap
+
+
+case_st = st.composite(cases)()
+
+
+def _tiers(g, x, dist, cap, store=None):
+    plan = C.build_plan(g, 1, ps=4, dist=dist)
+    t = TieredFeatures(store or FeatureStore(x), plan, cap)
+    if cap:
+        # hottest-first by degree; any hot list exercises the same paths
+        t.admit(np.argsort(-g.degrees)[:cap].tolist())
+    return t, plan
+
+
+@given(case_st)
+@settings(max_examples=15, deadline=None)
+def test_streamed_forward_bitwise_equal_any_capacity(case):
+    """Guarantee 1: capacity (0, partial, ≥ working set) never changes a
+    single bit of the streamed aggregation output."""
+    g, x, dist, cap = case
+    t_cap, plan = _tiers(g, x, dist, cap)
+    t_all, _ = _tiers(g, x, dist, g.num_nodes)    # capacity ⊇ working set
+    t_none, _ = _tiers(g, x, dist, 0)
+    outs = [np.asarray(mgg_aggregate_streamed(t.chunk_fetcher(), plan,
+                                              _mesh()))
+            for t in (t_cap, t_all, t_none)]
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[0], outs[2])
+    # and assembly reproduces the resident padded table bit for bit
+    np.testing.assert_array_equal(np.asarray(t_cap.padded_table()),
+                                  C.pad_embeddings(plan, x))
+
+
+def hit_cases(draw):
+    n = draw(st.integers(20, 120))
+    seed = draw(st.integers(0, 10_000))
+    caps = sorted({draw(st.integers(0, n)) for _ in range(4)})
+    n_lookups = draw(st.integers(1, 6))
+    return n, seed, caps, n_lookups
+
+
+hit_case_st = st.composite(hit_cases)()
+
+
+@given(hit_case_st)
+@settings(max_examples=25, deadline=None)
+def test_hit_rate_monotone_in_capacity(case):
+    """Guarantee 2: for one hot list and one lookup sequence, a larger
+    cache never hits less — hottest-first admission is a prefix policy."""
+    n, seed, caps, n_lookups = case
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    hot = rng.permutation(n)                      # hottest-first ranking
+    lookups = [rng.integers(0, n, size=rng.integers(1, 16))
+               for _ in range(n_lookups)]
+    hits = []
+    for cap in caps:
+        store = FeatureStore(x)
+        c = HotFeatureCache(n, cap, store.d_feat)
+        c.admit(hot.tolist(), store)
+        for ids in lookups:
+            c.slots(ids.astype(np.int64))
+        hits.append(c.hits)
+    assert hits == sorted(hits), (caps, hits)
+
+
+def update_cases(draw):
+    n = draw(st.integers(20, 100))
+    seed = draw(st.integers(0, 10_000))
+    dist = draw(st.sampled_from([1, 2, 3]))
+    cap = draw(st.integers(1, n))
+    n_updates = draw(st.integers(1, 8))
+    return n, seed, dist, cap, n_updates
+
+
+update_case_st = st.composite(update_cases)()
+
+
+@given(update_case_st)
+@settings(max_examples=15, deadline=None)
+def test_no_stale_row_after_update(case):
+    """Guarantee 3: interleaving updates with assemblies (so updated rows
+    may sit resident in the hot tier AND inside already-fetched chunks),
+    every later assembly serves the store's current bits."""
+    n, seed, dist, cap, n_updates = case
+    rng = np.random.default_rng(seed)
+    g = C.power_law(n, avg_degree=4.0, seed=seed)
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    t, plan = _tiers(g, x, dist, cap)
+    expect = x.copy()
+    t.padded_table()                              # warm: chunks fetched once
+    for _ in range(n_updates):
+        v = int(rng.integers(0, n))
+        val = rng.normal(size=x.shape[1]).astype(np.float32)
+        t.update(v, val)
+        expect[v] = val
+        np.testing.assert_array_equal(np.asarray(t.padded_table()),
+                                      C.pad_embeddings(plan, expect))
+        out = np.asarray(mgg_aggregate_streamed(t.chunk_fetcher(), plan,
+                                                _mesh()))
+        t_ref, _ = _tiers(g, expect, dist, 0)
+        ref = np.asarray(mgg_aggregate_streamed(t_ref.chunk_fetcher(), plan,
+                                                _mesh()))
+        assert np.array_equal(out, ref), "stale row served after update"

@@ -36,6 +36,9 @@ MULTIDEV_SCRIPTS = [
     "serve_gnn.py",          # 8-dev serving: drift → retune, cache, equality
     "serve_cluster.py",      # 2 replicas on disjoint 4-dev halves: staggered
                              # retune, shared cache, zero drops
+    "feature_store.py",      # tiered host store + hot cache: streamed ring
+                             # bitwise across capacities, prefetch overlap,
+                             # tiered serving ≡ resident serving
 ]
 
 # dryrun_lite.py runs via test_dryrun_machinery_small_mesh above
