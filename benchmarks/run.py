@@ -10,11 +10,20 @@ run as subprocesses with 8 forced host devices (benchmarks/_common.py).
 measured-search path, the online runtime tuner, and the benchmark
 subprocess harness) so benchmark code cannot rot silently.  It fails the
 process on any error, like the full run.
+
+Full (non-smoke) runs also write a ``BENCH_<stamp>.json`` perf snapshot
+next to the CSV stream: a machine fingerprint (host, platform, JAX
+backend/devices) plus every per-figure row, so runs on different
+machines/dates can be diffed.  ``--no-snapshot`` disables it,
+``--snapshot-dir`` relocates it.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
 
 from benchmarks._common import run_subprocess
@@ -36,17 +45,58 @@ SMOKE_MODULES = ["fig8_mgg_vs_uvm", "fig9_ablations", "fig10_autotune",
                  "fig11_serving"]
 
 
+def machine_fingerprint() -> dict:
+    """Identify the machine a snapshot was measured on (enough to tell
+    two snapshots apart, not to uniquely identify hardware)."""
+    import multiprocessing
+    import platform
+
+    fp = {
+        "hostname": platform.node(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "cpu_count": multiprocessing.cpu_count(),
+    }
+    try:
+        import jax
+        fp["jax"] = jax.__version__
+        fp["backend"] = jax.default_backend()
+        fp["device_kind"] = jax.devices()[0].device_kind
+    except Exception:
+        pass
+    return fp
+
+
+def write_snapshot(path: str, rows_by_module: dict, args_ns) -> None:
+    snap = {
+        "stamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "machine": machine_fingerprint(),
+        "args": {"quick": args_ns.quick, "only": args_ns.only,
+                 "devices": args_ns.devices},
+        "modules": rows_by_module,
+    }
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True, default=str)
+    print(f"# perf snapshot: {path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--only", default="")
     ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--no-snapshot", action="store_true",
+                    help="skip the BENCH_<stamp>.json perf snapshot")
+    ap.add_argument("--snapshot-dir", default=".",
+                    help="directory for the perf snapshot (default: cwd)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
     failures = []
+    rows_by_module: dict = {}
     if args.smoke:
         for mod in SMOKE_MODULES:
             if only and mod not in only:
@@ -74,6 +124,7 @@ def main() -> None:
             for row in run_subprocess(mod, devices=args.devices):
                 print(f"{row['name']},{row.get('us_per_call', '')},"
                       f"\"{row.get('derived', '')}\"")
+                rows_by_module.setdefault(mod, []).append(dict(row))
             sys.stdout.flush()
         except Exception as e:
             failures.append((mod, e))
@@ -86,9 +137,15 @@ def main() -> None:
             for row in module.run(False):
                 print(f"{row['name']},{row.get('us_per_call', '')},"
                       f"\"{row.get('derived', '')}\"")
+                rows_by_module.setdefault(mod, []).append(dict(row))
         except Exception as e:
             traceback.print_exc()
             failures.append((mod, e))
+    if not args.no_snapshot and rows_by_module:
+        stamp = time.strftime("%Y%m%d_%H%M%S")
+        write_snapshot(os.path.join(args.snapshot_dir,
+                                    f"BENCH_{stamp}.json"),
+                       rows_by_module, args)
     if failures:
         print(f"# {len(failures)} benchmark module(s) failed", file=sys.stderr)
         sys.exit(1)

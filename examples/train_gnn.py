@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 import repro.core as C
 from repro.dist import flat_ring_mesh
+from repro.obs import MetricsRegistry, Tracer
 from repro.runtime import DynamicGNNEngine, ProfileConfig
 from repro.train.data import graph_features
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
@@ -57,9 +58,17 @@ def main():
                          "--per-layer-tune)")
     ap.add_argument("--tune-cache", default="",
                     help="JSON path persisting tuned configs across runs")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write a Chrome-trace JSON (per-step spans + "
+                         "tuner audit events — open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default="", metavar="PATH",
+                    help="write the metrics snapshot + tuner audit trail")
     args = ap.parse_args()
     args.per_layer_tune = args.per_layer_tune or args.tune_fuse
     args.dynamic_tune = args.dynamic_tune or args.per_layer_tune
+
+    tracer = Tracer() if args.trace else None
+    registry = MetricsRegistry()
 
     g, meta = C.paper_dataset(args.dataset, scale=0.5)
     # demo-friendly label space (the full #Class makes a 100-step CPU demo
@@ -86,6 +95,7 @@ def main():
             tune_fuse=args.tune_fuse,
             layer_dims=layer_dims,
             log_fn=print,
+            tracer=tracer, metrics=registry,
         )
     else:
         eng = C.GNNEngine.build(g, mesh, ps=16, dist=2,
@@ -118,6 +128,12 @@ def main():
         params, opt, loss = step(params, opt)
         jax.block_until_ready(loss)
         dt = time.perf_counter() - t0
+        if tracer is not None:
+            # the timing exists regardless — tracing just records it, so
+            # the loss curve is bitwise-identical with tracing on or off
+            tracer.complete("train.step", t0, t0 + dt, cat="train",
+                            args={"step": i})
+        registry.histogram("train.step_seconds").observe(dt)
         if args.dynamic_tune and eng.observe_step(dt):
             # tuner moved: the plan (and possibly the padded layout)
             # changed — re-pad and re-jit; params are untouched
@@ -136,6 +152,14 @@ def main():
         print(f"tuned config: {eng.config} after "
               f"{eng.tuner.measured} measurements "
               f"({len(eng.history) - 1} swaps)")
+    if args.metrics_json:
+        audit = eng.audit if args.dynamic_tune else []
+        registry.dump_json(args.metrics_json, extra={"audit": audit})
+        print(f"metrics snapshot: {args.metrics_json}")
+    if tracer is not None:
+        tracer.dump_chrome(args.trace)
+        print(f"chrome trace: {args.trace} ({len(tracer)} events "
+              f"— open in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -186,7 +186,8 @@ class GNNEngine:
 
     def aggregate_streamed(self, tiered, layer: int = 0,
                            update_w: Optional[jax.Array] = None,
-                           stats: Optional[Dict] = None) -> jax.Array:
+                           stats: Optional[Dict] = None,
+                           tracer=None) -> jax.Array:
         """Partial-resident aggregation: chunks are pulled on demand from
         a :class:`repro.store.TieredFeatures` (host store + device hot
         cache), with each tile's host→device gather prefetched while the
@@ -202,6 +203,7 @@ class GNNEngine:
             pb=lp.pb,
             update_w=update_w,
             stats=stats,
+            tracer=tracer,
         )
 
     def gcn_norm_aggregate(self, x: jax.Array, layer: int = 0) -> jax.Array:

@@ -265,6 +265,7 @@ def mgg_aggregate_streamed(
     pb: Optional[int] = None,
     update_w: Optional[jax.Array] = None,
     stats: Optional[dict] = None,
+    tracer=None,
 ) -> jax.Array:
     """Pipelined aggregation over *partial-resident* features.
 
@@ -296,28 +297,57 @@ def mgg_aggregate_streamed(
     previous chunk's ring was already dispatched (structural overlap,
     ``dist - 1`` per call), ``prefetch_inflight`` counts those where the
     ring result was verifiably still unrealized when the fetch returned.
+
+    ``tracer`` (optional :class:`repro.obs.Tracer`) records the ring-step
+    timeline: per-chunk ``mgg.stream.fetch`` / ``mgg.stream.ring`` spans,
+    the assembled local pass, and an explicit drain wait, rolled up into
+    an ``mgg.stream.aggregate`` span whose ``overlap_efficiency`` arg is
+    ``1 − exposed_comm / total`` (exposed = pipeline-fill fetch + drain —
+    the transfer time nothing overlaps).  Only span bookkeeping differs
+    with tracing on: the output value is identical, and the enabled path
+    adds one extra ``block_until_ready`` that the caller's own drain would
+    otherwise pay.
     """
     n_dev, dist, tile_rows = plan.n_dev, plan.dist, plan.tile_rows
     arrays = jax.tree.map(jnp.asarray, plan_device_arrays(plan))
     if stats is not None:
         stats.setdefault("prefetch_issued", 0)
         stats.setdefault("prefetch_inflight", 0)
+    tracing = tracer is not None and tracer.enabled
 
     fused = update_w is not None
     extra = (update_w,) if fused else ()
     chunks = []
     partials = []
-    cur = fetch_chunk(0)                       # pipeline fill (not hidden)
+    if tracing:
+        t_start = tracer.now()
+        t0 = tracer.now()
+        cur = fetch_chunk(0)
+        t_fill = tracer.now() - t0             # pipeline fill (not hidden)
+        tracer.complete("mgg.stream.fetch", t0, t0 + t_fill,
+                        cat="mgg", args={"chunk": 0, "fill": True})
+    else:
+        cur = fetch_chunk(0)                   # pipeline fill (not hidden)
     for c in range(dist):
         chunks.append(cur)
         if n_dev > 1:
             # dispatched asynchronously: returns before the ring executes
             ring = _streamed_ring_fn(mesh, axis_name, n_dev, dist, c,
                                      use_kernel, acc_dtype, pb, fused)
-            partials.append(ring(cur, arrays, *extra))
+            if tracing:
+                with tracer.span("mgg.stream.ring", cat="mgg", chunk=c,
+                                 dist=dist, n_dev=n_dev):
+                    partials.append(ring(cur, arrays, *extra))
+            else:
+                partials.append(ring(cur, arrays, *extra))
         if c + 1 < dist:
             # host gather + upload for tile c+1 overlaps ring c in flight
-            cur = fetch_chunk(c + 1)
+            if tracing:
+                with tracer.span("mgg.stream.fetch", cat="mgg",
+                                 chunk=c + 1, fill=False):
+                    cur = fetch_chunk(c + 1)
+            else:
+                cur = fetch_chunk(c + 1)
             if stats is not None:
                 stats["prefetch_issued"] += 1
                 last = partials[-1] if partials else None
@@ -328,10 +358,32 @@ def mgg_aggregate_streamed(
     x_full = _streamed_assemble_fn(mesh, axis_name, n_dev, dist)(*chunks)
     local = _streamed_local_fn(mesh, axis_name, use_kernel, acc_dtype, pb,
                                fused)
-    out = local(x_full, arrays, *extra)
+    if tracing:
+        with tracer.span("mgg.stream.local", cat="mgg", dist=dist):
+            out = local(x_full, arrays, *extra)
+    else:
+        out = local(x_full, arrays, *extra)
     for p in partials:                         # fixed order ⇒ deterministic
         out = out + p
-    return out.astype(chunks[0].dtype)
+    out = out.astype(chunks[0].dtype)
+    if tracing:
+        # drain: the wait nothing overlaps.  block_until_ready changes
+        # only when the host observes completion, never the values.
+        t0 = tracer.now()
+        jax.block_until_ready(out)
+        t_drain = tracer.now() - t0
+        tracer.complete("mgg.stream.drain", t0, t0 + t_drain, cat="mgg")
+        total = tracer.now() - t_start
+        exposed = t_fill + t_drain
+        overlap = max(0.0, 1.0 - exposed / total) if total > 0 else 0.0
+        tracer.complete("mgg.stream.aggregate", t_start, t_start + total,
+                        cat="mgg",
+                        args={"dist": dist, "n_dev": n_dev,
+                              "overlap_efficiency": overlap,
+                              "exposed_s": exposed, "total_s": total})
+        if stats is not None:
+            stats["overlap_efficiency"] = overlap
+    return out
 
 
 # The streamed entry point is called once per chunk per aggregation, so —

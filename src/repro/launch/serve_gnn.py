@@ -5,7 +5,12 @@
         --model gcn --dynamic-tune --requests 200 --rotate --burst 4
 
 Reports p50/p99 request latency per phase, the layer-1 cache hit rate,
-and the retune trail (config history) when ``--dynamic-tune`` is on.
+and the retune trail (tuner audit events) when ``--dynamic-tune`` is on.
+``--trace PATH`` writes a Chrome-trace JSON (request lifecycles, tuner
+audit instants, and a streamed-pipeline profile pass with per-ring-step
+spans and overlap efficiency — load it in ui.perfetto.dev);
+``--metrics-json PATH`` writes the metrics snapshot plus the audit trail
+machine-readably.  See docs/observability.md.
 ``--per-layer-tune`` re-optimizes one (ps, dist, pb) per GNN layer
 (implies --dynamic-tune); ``--fuse-update`` serves with the dense ·W
 update fused into the ring.
@@ -34,13 +39,62 @@ import jax
 
 import repro.core as C
 from repro.dist import flat_ring_mesh
+from repro.obs import MetricsRegistry, Tracer
 from repro.runtime import DynamicGNNEngine, ProfileConfig
 from repro.serve import (GNNServeEngine, ServeCluster, TrafficPhase,
-                         ZipfTraffic, make_router, run_trace)
+                         WorkloadStats, ZipfTraffic, make_router, run_trace)
 
 
 def _pct(lat, q):
     return float(np.percentile(np.asarray(lat), q)) if len(lat) else 0.0
+
+
+def _print_audit(audit, indent="  "):
+    """Human view of the tuner audit trail (the machine view goes to
+    --metrics-json)."""
+    for ev in audit:
+        if ev["event"] == "probe":
+            continue                       # one line per probe is too chatty
+        detail = ", ".join(f"{k}={v}" for k, v in ev.items()
+                           if k not in ("event", "measured"))
+        print(f"{indent}[{ev['measured']:4d} measured] "
+              f"{ev['event']}: {detail}")
+
+
+def _dump_obs(args, tracer, registry, engines):
+    """Write --trace / --metrics-json.  ``engines`` are the serve engines
+    whose dynamic runtimes contribute audit trails."""
+    audits = {f"replica{i}": e.eng.audit
+              for i, e in enumerate(engines) if e.dynamic}
+    if args.metrics_json:
+        registry.dump_json(args.metrics_json, extra={"audit": audits})
+        print(f"[serve_gnn] metrics snapshot: {args.metrics_json}")
+    if tracer is not None and args.trace:
+        tracer.dump_chrome(args.trace)
+        print(f"[serve_gnn] chrome trace: {args.trace} "
+              f"({len(tracer)} events — open in ui.perfetto.dev)")
+
+
+def _profile_pipeline(srv, tracer, passes=3):
+    """Run a few streamed aggregations through the live tiered store so
+    the trace carries ring-step spans (``mgg.stream.*``) with measured
+    overlap efficiency.  Serving's full pass jits the whole forward, so
+    per-ring-step host timing is only observable through this explicit
+    streamed profile pass — values are identical (fixed-order sum), only
+    the schedule is traced."""
+    if srv.tiers is None:
+        print("[serve_gnn] pipeline profile skipped "
+              "(needs --feature-capacity for the tiered streamed path)")
+        return
+    stats = {}
+    for _ in range(passes):
+        out = srv.eng.aggregate_streamed(srv.tiers, stats=stats,
+                                         tracer=tracer)
+        jax.block_until_ready(out)
+    print(f"[serve_gnn] pipeline profile: overlap efficiency "
+          f"{stats.get('overlap_efficiency', 0.0):.3f} "
+          f"(prefetch {stats.get('prefetch_inflight', 0)}/"
+          f"{stats.get('prefetch_issued', 0)} in flight)")
 
 
 def main() -> None:
@@ -80,8 +134,24 @@ def main() -> None:
                          "each other's retunes through it)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--check-every", type=int, default=8,
+                    help="micro-batches between traffic-drift checks")
+    ap.add_argument("--stats-window", type=int, default=32,
+                    help="WorkloadStats window (smaller = drift-sensitive)")
+    ap.add_argument("--min-records", type=int, default=8,
+                    help="stats records required before drift checks")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON (open in "
+                         "ui.perfetto.dev): request lifecycles, ring-step "
+                         "pipeline spans, tuner audit events")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot + tuner "
+                         "audit trail as JSON")
     args = ap.parse_args()
     args.dynamic_tune = args.dynamic_tune or args.per_layer_tune
+
+    tracer = Tracer() if args.trace else None
+    registry = MetricsRegistry()
 
     g, meta = C.paper_dataset(args.dataset, scale=args.scale)
     dim = min(int(meta["dim"]), 64)
@@ -100,7 +170,7 @@ def main() -> None:
             tempfile.mkdtemp(prefix="mgg-serve-"), "tuned.json")
         print(f"[serve_gnn] shared config cache: {cache_path}")
 
-    def build_replica():
+    def build_replica(idx=0):
         if args.dynamic_tune:
             layer_dims = C.aggregation_widths(args.model, params,
                                               fused=args.fuse_update) \
@@ -111,15 +181,21 @@ def main() -> None:
                 pb_space=(1,),
                 window=ProfileConfig(warmup=1, iters=2),
                 fuse_update=args.fuse_update, layer_dims=layer_dims,
-                cache_path=cache_path, log_fn=print)
+                cache_path=cache_path, log_fn=print,
+                tracer=tracer, metrics=registry)
         else:
             eng = C.GNNEngine.build(g, mesh, ps=8, dist=1,
                                     fuse_update=args.fuse_update)
+        labels = {"replica": idx} if args.replicas > 1 else {}
         return GNNServeEngine(eng, params, args.model, x, g,
                               slots=args.slots,
+                              stats=WorkloadStats(window=args.stats_window),
+                              check_every=args.check_every,
+                              min_records=args.min_records,
                               use_cache=not args.no_cache,
                               feature_capacity=args.feature_capacity,
-                              log_fn=print)
+                              log_fn=print, tracer=tracer,
+                              metrics=registry, obs_labels=labels)
 
     phases = [
         TrafficPhase(requests=args.requests, alpha=args.alpha,
@@ -133,9 +209,10 @@ def main() -> None:
     traffic = ZipfTraffic(g.num_nodes, dim, phases, seed=args.seed)
 
     if args.replicas > 1:
-        replicas = [build_replica() for _ in range(args.replicas)]
+        replicas = [build_replica(i) for i in range(args.replicas)]
         cluster = ServeCluster(replicas, router=make_router(args.router),
-                               log_fn=print)
+                               log_fn=print, tracer=tracer,
+                               metrics=registry)
         results = cluster.run_trace(traffic)
         lat = [r.latency for r in results]
         rep = cluster.report()
@@ -162,6 +239,14 @@ def main() -> None:
                     print(f"  replica {i}: cap {t['capacity']} rows "
                           f"({t['resident_fraction']:.1%} resident), "
                           f"feature hit rate {t['hit_rate']:.3f}")
+        if args.dynamic_tune:
+            for i, r in enumerate(replicas):
+                if r.dynamic and r.eng.audit:
+                    print(f"  replica {i} audit trail:")
+                    _print_audit(r.eng.audit, indent="    ")
+        if tracer is not None:
+            _profile_pipeline(replicas[0], tracer)
+        _dump_obs(args, tracer, registry, replicas)
         return
 
     srv = build_replica()
@@ -184,8 +269,12 @@ def main() -> None:
     if args.dynamic_tune:
         print(f"retunes {rep['retunes']}, rebuilds {rep['rebuilds']}, "
               f"final config {rep['config']}")
-        for step, cfg in srv.eng.history:
-            print(f"  step {step:5d}: {cfg}")
+        # retune trail, straight from the tuner audit events (the same
+        # records --metrics-json captures machine-readably)
+        _print_audit(srv.eng.audit)
+    if tracer is not None:
+        _profile_pipeline(srv, tracer)
+    _dump_obs(args, tracer, registry, [srv])
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.dist import make_mesh
 from repro.models import transformer as T
+from repro.obs import MetricsRegistry, Tracer
 from repro.train import (AdamWConfig, LMDataConfig, Trainer, TrainState,
                          adamw_init, lm_batch, make_train_step)
 
@@ -48,7 +49,17 @@ def main() -> None:
     ap.add_argument("--ring-tp", action="store_true",
                     help="route TP matmuls through the ring-pipelined "
                          "collectives instead of XLA SPMD defaults")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the training loop "
+                         "(per-step spans, straggler/restart/retune "
+                         "instants — open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot as JSON")
     args = ap.parse_args()
+
+    tracer = Tracer() if args.trace else None
+    registry = MetricsRegistry() if (args.trace or args.metrics_json) \
+        else None
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -89,11 +100,18 @@ def main() -> None:
             s += 1
 
     tr = Trainer(step_fn, data_it(), TrainState(params, opt),
-                 workdir=args.workdir or None, ckpt_every=args.ckpt_every)
+                 workdir=args.workdir or None, ckpt_every=args.ckpt_every,
+                 tracer=tracer, metrics=registry)
     tr.maybe_restore()
     losses = tr.run(args.steps)
     print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"stragglers={tr.stragglers} restarts={tr.restarts}")
+    if args.metrics_json:
+        registry.dump_json(args.metrics_json)
+        print(f"[launch] metrics snapshot: {args.metrics_json}")
+    if tracer is not None:
+        tracer.dump_chrome(args.trace)
+        print(f"[launch] chrome trace: {args.trace} ({len(tracer)} events)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,20 @@
+"""repro.obs — low-overhead tracing + metrics for the MGG stack.
+
+Leaf package: imports nothing from the rest of ``repro`` so core /
+runtime / serve / store can all depend on it without cycles.
+
+Two primitives:
+
+- :class:`Tracer` (tracer.py): nestable wall-clock spans with an
+  injectable monotonic clock, bounded ring buffer, thread safety, and a
+  strict no-op fast path when disabled.  Exports Chrome-trace JSON
+  (opens directly in ui.perfetto.dev) and JSONL.
+- :class:`MetricsRegistry` (metrics.py): labeled counters / gauges /
+  histograms with percentile summaries and a JSON snapshot.
+
+See docs/observability.md for the span taxonomy and metric names.
+"""
+from repro.obs.tracer import NULL_TRACER, Tracer
+from repro.obs.metrics import MetricsRegistry
+
+__all__ = ["Tracer", "NULL_TRACER", "MetricsRegistry"]

@@ -32,6 +32,14 @@ Schema v2 adds **per-layer** entries: a tuned config may be either one
 global ``{ps, dist, pb}`` or ``{"layers": [{ps, dist, pb}, ...]}`` keyed
 by the joint fingerprint of every layer's WorkloadShape (the per-layer
 tuner's warm start).
+
+Schema v3 rounds out the knob set: the tiered feature-cache capacity
+(``cap``, an int) and the per-layer fused-update dataflow (``fuse``, a
+bool) persist alongside ``(ps, dist, pb)`` when the committed config
+carries them — previously only the three schedule knobs round-tripped,
+so a re-opened search re-probed capacity and fuse from scratch.  v2
+files are discarded with the same one-time-per-path RuntimeWarning as
+v1 (tuning starts cold, never a crash).
 """
 from __future__ import annotations
 
@@ -54,7 +62,7 @@ from repro.core.autotune import WorkloadShape
 __all__ = ["ConfigCache", "hardware_fingerprint", "shape_fingerprint",
            "layers_fingerprint"]
 
-_VERSION = 2
+_VERSION = 3
 
 _KNOBS = ("ps", "dist", "pb")
 
@@ -64,8 +72,24 @@ _VERSION_WARNED: Set[str] = set()
 
 
 def _valid_cfg(cfg: Any) -> bool:
-    return (isinstance(cfg, dict)
-            and all(isinstance(cfg.get(k), int) for k in _KNOBS))
+    if not isinstance(cfg, dict) \
+            or not all(isinstance(cfg.get(k), int) for k in _KNOBS):
+        return False
+    if "cap" in cfg and not isinstance(cfg["cap"], int):
+        return False
+    if "fuse" in cfg and not isinstance(cfg["fuse"], bool):
+        return False
+    return True
+
+
+def _pack_cfg(cfg: Dict[str, Any]) -> Dict[str, Any]:
+    """The persisted knob set: (ps, dist, pb) plus the optional v3 knobs."""
+    out: Dict[str, Any] = {k: int(cfg[k]) for k in _KNOBS}
+    if "cap" in cfg:
+        out["cap"] = int(cfg["cap"])
+    if "fuse" in cfg:
+        out["fuse"] = bool(cfg["fuse"])
+    return out
 
 
 def hardware_fingerprint() -> str:
@@ -183,7 +207,7 @@ class ConfigCache:
             return None
         cfg = entry.get("config")
         if _valid_cfg(cfg):
-            return {k: int(cfg[k]) for k in _KNOBS}
+            return _pack_cfg(cfg)
         return None
 
     def put(self, shape: WorkloadShape, config: Dict[str, int],
@@ -191,14 +215,14 @@ class ConfigCache:
         with self._locked():
             entries = self._load()
             entries[self.key(shape, hw)] = dict(
-                config={k: int(config[k]) for k in _KNOBS},
+                config=_pack_cfg(config),
                 latency=float(latency),
                 shape=dataclasses.asdict(shape),
                 hw=hw or self.hw,
             )
             self._store(entries)
 
-    # -- per-layer entries (schema v2) ----------------------------------------
+    # -- per-layer entries (schema v2+) ---------------------------------------
 
     def layers_key(self, shapes: Sequence[WorkloadShape],
                    hw: Optional[str] = None) -> str:
@@ -214,7 +238,7 @@ class ConfigCache:
         layers = cfg.get("layers") if isinstance(cfg, dict) else None
         if (isinstance(layers, list) and len(layers) == len(shapes)
                 and all(_valid_cfg(c) for c in layers)):
-            return [{k: int(c[k]) for k in _KNOBS} for c in layers]
+            return [_pack_cfg(c) for c in layers]
         return None
 
     def put_layers(self, shapes: Sequence[WorkloadShape],
@@ -223,8 +247,7 @@ class ConfigCache:
         with self._locked():
             entries = self._load()
             entries[self.layers_key(shapes, hw)] = dict(
-                config=dict(layers=[{k: int(c[k]) for k in _KNOBS}
-                                    for c in configs]),
+                config=dict(layers=[_pack_cfg(c) for c in configs]),
                 latency=float(latency),
                 shape=[dataclasses.asdict(s) for s in shapes],
                 hw=hw or self.hw,

@@ -36,12 +36,25 @@ from repro.core.autotune import (HardwareSpec, TPU_V5E, WorkloadShape,
                                  layer_workload_shapes)
 from repro.core.gnn import GNNEngine
 from repro.core.graph import CSRGraph
+from repro.obs import NULL_TRACER
 from repro.runtime.cache import ConfigCache
 from repro.runtime.profiler import LatencyWindow, ProfileConfig
 from repro.runtime.tuner import (DEFAULT_DIST, DEFAULT_PB, DEFAULT_PS,
                                  OnlineTuner, PerLayerTuner, make_vmem_check)
 
 __all__ = ["DynamicGNNEngine"]
+
+
+def _finite(obj):
+    """JSON-safe copy: non-finite floats become None (Perfetto rejects
+    the ``Infinity`` literal Python's json module would otherwise emit)."""
+    if isinstance(obj, dict):
+        return {k: _finite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_finite(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
 
 
 def _as_config_dict(cfg) -> Dict:
@@ -82,10 +95,18 @@ class DynamicGNNEngine:
         layer_dims: Optional[Sequence[int]] = None,
         hw: HardwareSpec = TPU_V5E,
         log_fn: Callable[[str], None] = lambda _s: None,
+        tracer=None,
+        metrics=None,
     ):
         self.graph = graph
         self.mesh = mesh
         self.tuner = tuner
+        # observability: tuner audit events flow through _on_audit into the
+        # tracer (as tuner.* instants) and metrics registry.  NULL_TRACER's
+        # recording calls are no-ops, so the default costs one branch.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        tuner.audit_sink = self._on_audit
         self.shape = shape
         self.cache = cache
         self.hw = hw
@@ -148,6 +169,8 @@ class DynamicGNNEngine:
         fuse_update: bool = False,
         layer_dims: Optional[Sequence[int]] = None,
         log_fn: Callable[[str], None] = lambda _s: None,
+        tracer=None,
+        metrics=None,
     ) -> "DynamicGNNEngine":
         """``layer_dims`` (one aggregation feature width per layer, e.g.
         ``aggregation_widths(model, params)``) selects per-layer tuning:
@@ -211,7 +234,7 @@ class DynamicGNNEngine:
                   cache=cache, axis_name=axis_name, interleave=interleave,
                   use_kernel=use_kernel, self_loops=self_loops,
                   fuse_update=fuse_update, layer_dims=layer_dims, hw=hw,
-                  log_fn=log_fn)
+                  log_fn=log_fn, tracer=tracer, metrics=metrics)
         if layer_dims is not None:
             eng._layer_shapes = shapes
         eng._model_d_feat = int(d_feat)
@@ -313,6 +336,12 @@ class DynamicGNNEngine:
     def aggregate_update(self, x, w, layer: int = 0):
         return self.engine.aggregate_update(x, w, layer=layer)
 
+    def aggregate_streamed(self, tiered, layer: int = 0, update_w=None,
+                           stats=None, tracer=None):
+        return self.engine.aggregate_streamed(
+            tiered, layer=layer, update_w=update_w, stats=stats,
+            tracer=tracer if tracer is not None else self.tracer)
+
     def gcn_norm_aggregate(self, x, layer: int = 0):
         return self.engine.gcn_norm_aggregate(x, layer=layer)
 
@@ -325,6 +354,20 @@ class DynamicGNNEngine:
     def mean_aggregate_update(self, x, w, layer: int = 0):
         return self.engine.mean_aggregate_update(x, w, layer=layer)
 
+    # -- observability -------------------------------------------------------
+
+    @property
+    def audit(self) -> List[dict]:
+        """The tuner's audit trail (probe/reopen/retreat/adopt/commit
+        events) — the machine-readable answer to "why this config"."""
+        return self.tuner.audit
+
+    def _on_audit(self, ev: dict) -> None:
+        safe = _finite(ev)
+        self.tracer.instant("tuner." + ev["event"], cat="tuner", **safe)
+        if self.metrics is not None:
+            self.metrics.counter("tuner.events", event=ev["event"]).inc()
+
     # -- the online tuning protocol ------------------------------------------
 
     def observe_step(self, dt: float) -> bool:
@@ -335,6 +378,8 @@ class DynamicGNNEngine:
         with ``dist``) and re-jit anything that closed over the engine.
         """
         self.step_count += 1
+        if self.metrics is not None:
+            self.metrics.histogram("runtime.step_seconds").observe(dt)
         if self.tuner.converged:
             return False
         self._window.add(dt)
@@ -411,11 +456,12 @@ class DynamicGNNEngine:
                         else self.cache.get(shape))
                 warm = self._clamp_pb(warm, self.tuner.pb_space)
             if warm is not None:
-                self.tuner.reopen(warm_start=warm, mode="adopt")
+                self.tuner.reopen(warm_start=warm, mode="adopt",
+                                  cause="cache_adopt")
                 adopted = True
                 self.log(f"[runtime] adopting shared-cache config: {warm}")
             else:
-                self.tuner.reopen()
+                self.tuner.reopen(cause="traffic_drift")
             reopened = True
         if reopened and self.per_layer and not adopted:
             # the layer count / per-layer widths may have moved: resize the
@@ -456,6 +502,9 @@ class DynamicGNNEngine:
         self.log(f"[runtime] tuning converged after "
                  f"{self.tuner.measured} measurements: {best} "
                  f"({self.tuner.best_latency * 1e3:.2f} ms)")
+        self.tuner._emit("commit", config=_as_config_dict(best),
+                         latency=self.tuner.best_latency,
+                         step=self.step_count)
         return self._set_config(_as_config_dict(best))
 
     def _set_config(self, cfg: Dict,

@@ -30,6 +30,11 @@ Extras over the offline search, per the paper's runtime:
   is stale.
 * **budget** — a hard cap on measurements; the search reports the best
   config seen when the budget runs out.
+* **audit trail** — every probe / reopen / retreat / adopt / convergence
+  lands in ``tuner.audit`` as a structured event (and streams through an
+  optional ``audit_sink`` callable), so *why* the runtime picked a config
+  is machine-readable instead of buried in launcher prints.  See
+  docs/observability.md for the event schema.
 """
 from __future__ import annotations
 
@@ -40,6 +45,34 @@ from repro.core.autotune import (HardwareSpec, TPU_V5E, SearchResult,
                                  WorkloadShape, vmem_bytes)
 
 __all__ = ["OnlineTuner", "PerLayerTuner", "make_vmem_check", "shape_drift"]
+
+_AUDIT_CAP = 10_000   # bounded like the tracer ring buffers
+
+
+class _AuditMixin:
+    """Shared audit-event plumbing for both tuners.
+
+    Events are plain dicts with an ``event`` key (``probe`` / ``reopen``
+    / ``retreat`` / ``adopt`` / ``converged`` / ``budget_exhausted``),
+    appended to the bounded ``self.audit`` list and streamed through
+    ``self.audit_sink`` when one is set (the engine forwards them to its
+    tracer/metrics).  A sink that raises never breaks the search.
+    """
+
+    def _init_audit(self, audit_sink=None) -> None:
+        self.audit: List[dict] = []
+        self.audit_sink = audit_sink
+
+    def _emit(self, event: str, **fields) -> None:
+        ev = {"event": event, "measured": self.measured, **fields}
+        if len(self.audit) >= _AUDIT_CAP:
+            del self.audit[:_AUDIT_CAP // 2]
+        self.audit.append(ev)
+        if self.audit_sink is not None:
+            try:
+                self.audit_sink(ev)
+            except Exception:
+                pass
 
 # (ps, dist, pb) — or (ps, dist, pb, cap) when a cap_space is configured
 Key = Tuple[int, ...]
@@ -73,7 +106,7 @@ def shape_drift(a: WorkloadShape, b: WorkloadShape) -> float:
     return rel
 
 
-class OnlineTuner:
+class OnlineTuner(_AuditMixin):
     """Incremental ps → dist → wpb search over externally-measured latencies.
 
     ``cap_space`` (optional, the tiered feature path's device-cache
@@ -97,6 +130,7 @@ class OnlineTuner:
         budget: Optional[int] = None,
         drift_threshold: float = 0.25,
         warm_start: Optional[Dict[str, int]] = None,
+        audit_sink: Optional[Callable[[dict], None]] = None,
     ):
         self.ps_space = tuple(sorted(ps_space))
         self.dist_space = tuple(sorted(dist_space))
@@ -113,6 +147,7 @@ class OnlineTuner:
         self.trajectory: List[Tuple[Dict[str, int], float]] = []
         self._gen: Optional[Iterator[Key]] = None
         self._pending: Optional[Key] = None
+        self._init_audit(audit_sink)
         self.reset(warm_start=warm_start)
 
     # -- knob/key mapping (3 knobs, or 4 with a cap_space) -------------------
@@ -155,6 +190,8 @@ class OnlineTuner:
             raise RuntimeError("observe() on a converged tuner — call "
                                "reset() or observe_shape() to re-open")
         self.measured += 1
+        self._emit("probe", config=self._cfg(self._pending),
+                   latency=float(latency))
         if self.budget is not None and self.measured >= self.budget:
             # budget exhausted: record this sample and stop the search
             key = self._pending
@@ -162,6 +199,8 @@ class OnlineTuner:
             self.trajectory.append((self._cfg(key), float(latency)))
             self._gen.close()
             self._pending = None
+            self._emit("budget_exhausted", best=self.best,
+                       best_latency=self.best_latency)
             return
         self._advance(float(latency))
 
@@ -189,9 +228,10 @@ class OnlineTuner:
                             table=dict(self.table))
 
     def reopen(self, warm_start: Optional[Dict[str, int]] = None,
-               mode: str = "search") -> None:
+               mode: str = "search", cause: str = "drift") -> None:
         """Re-open the search, warm-started from ``warm_start`` (the best
-        config seen so far by default).
+        config seen so far by default).  ``cause`` tags the audit event
+        (``shape_drift`` / ``traffic_drift`` / ``cache_adopt`` / ...).
 
         Owns the reopen bookkeeping for every drift path — shape drift
         (:meth:`observe_shape`) and caller-forced traffic drift
@@ -208,6 +248,8 @@ class OnlineTuner:
         """
         self.reopens += 1
         warm = warm_start if warm_start is not None else self.best
+        self._emit("reopen", cause=cause, mode=mode, warm=warm,
+                   reopens=self.reopens)
         if (mode == "adopt" and warm is not None
                 and (self.vmem_check is None
                      or self.vmem_check(warm["ps"], warm["dist"],
@@ -216,6 +258,7 @@ class OnlineTuner:
             self.trajectory = []
             self._gen = self._adopt(warm)
             self._advance(None)
+            self._emit("adopt", config=dict(warm))
         else:
             self.reset(warm_start=warm)
 
@@ -233,7 +276,7 @@ class OnlineTuner:
         if shape_drift(self._shape, shape) <= self.drift_threshold:
             return False
         self._shape = shape
-        self.reopen()
+        self.reopen(cause="shape_drift")
         return True
 
     # -- the search as a generator (identical control flow to the offline
@@ -244,6 +287,8 @@ class OnlineTuner:
             self._pending = self._gen.send(latency)
         except StopIteration:
             self._pending = None
+            self._emit("converged", best=self.best,
+                       best_latency=self.best_latency)
 
     def _search(self, warm: Optional[Dict[str, int]]):
         table, traj = self.table, self.trajectory
@@ -306,6 +351,8 @@ class OnlineTuner:
             a = yield from mget(ps_retreat, dist, pb2, cap)
             b = yield from mget(ps, dist, pb, cap)
             if a < b:
+                self._emit("retreat", ps_from=ps, ps_to=ps_retreat,
+                           pb_from=pb, pb_to=pb2, latency=a)
                 ps, pb = ps_retreat, pb2
 
         # Stop-at-top-3: probe unmeasured single-knob neighbors of the
@@ -340,7 +387,7 @@ class OnlineTuner:
         return out
 
 
-class PerLayerTuner:
+class PerLayerTuner(_AuditMixin):
     """Layer-wise (ps, dist, wpb) search over full-forward step times.
 
     GNN layers have radically different shapes (GCN: wide input layer vs a
@@ -394,6 +441,7 @@ class PerLayerTuner:
         drift_threshold: float = 0.25,
         warm_start=None,    # None | global dict | per-layer list of dicts
         tune_global_first: bool = True,
+        audit_sink: Optional[Callable[[dict], None]] = None,
     ):
         if num_layers < 1:
             raise ValueError("num_layers must be >= 1")
@@ -418,6 +466,7 @@ class PerLayerTuner:
         self.reopens = 0
         self._shapes: Optional[List[WorkloadShape]] = None
         self.trajectory: List[Tuple[List[Dict[str, int]], float]] = []
+        self._init_audit(audit_sink)
         self.reset(warm_start=warm_start)
 
     # -- public protocol -----------------------------------------------------
@@ -496,6 +545,8 @@ class PerLayerTuner:
         cfgs = self.propose()
         self.measured += 1
         self.trajectory.append((cfgs, latency))
+        self._emit("probe", phase=self._phase_name(), configs=cfgs,
+                   latency=latency)
         if latency < self._best_lat:
             self._best_lat, self._best_cfgs = latency, cfgs
         if self._adopt_pending:
@@ -503,6 +554,7 @@ class PerLayerTuner:
             # closes the search (see OnlineTuner.reopen(mode="adopt"))
             self._adopt_pending = False
             self._done = True
+            self._emit("adopt", configs=cfgs, latency=latency)
             return
         if self._fuse_pending is not None:
             # single flip probe: keep the flip iff it beats the latency the
@@ -522,6 +574,20 @@ class PerLayerTuner:
         if (self.budget is not None and self.measured >= self.budget
                 and not self._done):
             self._commit_phase(exhausted=True)
+            self._emit("budget_exhausted", best=self.best,
+                       best_latency=self._best_lat)
+        if self._done:
+            self._emit("converged", best=self.best,
+                       best_latency=self._best_lat)
+
+    def _phase_name(self) -> str:
+        if self._adopt_pending:
+            return "adopt"
+        if self._fuse_pending is not None:
+            return f"fuse:{self._fuse_pending}"
+        if self._sub_layer is None:
+            return "global"
+        return f"layer:{self._sub_layer}"
 
     @property
     def best(self) -> Optional[List[Dict[str, int]]]:
@@ -534,10 +600,11 @@ class PerLayerTuner:
     def best_latency(self) -> float:
         return self._best_lat
 
-    def reopen(self, warm_start=None, mode: str = "search") -> None:
+    def reopen(self, warm_start=None, mode: str = "search",
+               cause: str = "drift") -> None:
         """Re-open per-layer phases, warm-started from ``warm_start`` (the
         best configs so far by default — traffic/shape drift made the
-        measured surface stale).
+        measured surface stale).  ``cause`` tags the audit event.
 
         ``mode="adopt"`` with a per-layer warm list trusts it outright:
         the joint configs are measured once and the search converges (the
@@ -548,6 +615,8 @@ class PerLayerTuner:
         self.reopens += 1
         warm = warm_start if warm_start is not None \
             else (self.best or self._configs)
+        self._emit("reopen", cause=cause, mode=mode, warm=warm,
+                   reopens=self.reopens)
         if mode == "adopt" and self._adoptable(warm):
             self.trajectory = []
             self._best_lat = math.inf
@@ -627,7 +696,7 @@ class PerLayerTuner:
         if drift <= self.drift_threshold:
             return False
         self._shapes = shapes
-        self.reopen()
+        self.reopen(cause="shape_drift")
         return True
 
     # -- internals -----------------------------------------------------------

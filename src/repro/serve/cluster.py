@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, NULL_TRACER
 from repro.serve.gnn import GNNServeEngine, ServeResult
 from repro.serve.router import LeastLoadRouter, Router
 from repro.serve.traffic import TrafficEvent
@@ -70,6 +71,8 @@ class ServeCluster:
         max_shadow_batches: int = 64,
         shadow_window: int = 8,
         log_fn=lambda _s: None,
+        tracer=None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if not replicas:
             raise ValueError("a cluster needs at least one replica")
@@ -116,11 +119,32 @@ class ServeCluster:
         self._gid: Dict[Tuple[int, int], int] = {}   # (replica, local) → gid
         self._gid_replica: Dict[int, int] = {}       # gid → replica
         self._last_routed = 0
-        self.user_served = 0
-        self.shadow_served = 0
-        self.staggered_retunes = 0
-        self.deferred_retunes = 0
+        # cluster counters live in the registry (shared with the replicas
+        # when the builder passes one everywhere); the legacy attributes
+        # are read-through properties so report() stays a thin view.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_user = self.metrics.counter("cluster.user_served")
+        self._c_shadow = self.metrics.counter("cluster.shadow_served")
+        self._c_staggered = self.metrics.counter("cluster.staggered_retunes")
+        self._c_deferred = self.metrics.counter("cluster.deferred_retunes")
         self.retune_log: List[Dict] = []
+
+    @property
+    def user_served(self) -> int:
+        return self._c_user.value
+
+    @property
+    def shadow_served(self) -> int:
+        return self._c_shadow.value
+
+    @property
+    def staggered_retunes(self) -> int:
+        return self._c_staggered.value
+
+    @property
+    def deferred_retunes(self) -> int:
+        return self._c_deferred.value
 
     # -- clocks / accounting -------------------------------------------------
 
@@ -157,12 +181,18 @@ class ServeCluster:
                 if fresh:
                     # one deferral per wait (re-asks while the same token
                     # holder searches are not new deferrals)
-                    self.deferred_retunes += 1
+                    self._c_deferred.inc()
+                    self.tracer.instant("cluster.retune_deferred",
+                                        cat="cluster", replica=i,
+                                        drift=float(score))
                 return False
             self._token = i
             self._state[i] = _DRAINING
             self._from_cache[i] = self._commit_seq > self._want_seq[i]
-            self.staggered_retunes += 1
+            self._c_staggered.inc()
+            self.tracer.instant("cluster.drain_begin", cat="cluster",
+                                replica=i, drift=float(score),
+                                from_cache=self._from_cache[i])
             self.log(f"[serve.cluster] replica {i} drift {score:.2f} → "
                      f"token acquired (drain → retune"
                      f"{' [adopt from shared cache]' if self._from_cache[i] else ''}"
@@ -193,6 +223,9 @@ class ServeCluster:
             committed=committed, shadow_batches=self._shadow_count,
             search_size=srv.search_sizes[-1] if committed
             and srv.search_sizes else None))
+        self.tracer.instant("cluster.rejoin", cat="cluster", replica=i,
+                            committed=committed,
+                            shadow_batches=self._shadow_count)
         self.log(f"[serve.cluster] replica {i} rejoined "
                  f"(config {srv.config}, "
                  f"{self._shadow_count} shadow batches)")
@@ -236,10 +269,10 @@ class ServeCluster:
         for r in results:
             gid = self._gid.pop((i, r.request_id), None)
             if gid is None:                    # shadow replay: discard
-                self.shadow_served += 1
+                self._c_shadow.inc()
                 continue
             out.append(dataclasses.replace(r, request_id=gid))
-        self.user_served += len(out)
+        self._c_user.inc(len(out))
         return out
 
     def _step_replica(self, i: int) -> List[ServeResult]:
@@ -277,6 +310,8 @@ class ServeCluster:
 
     def _begin_tuning(self, i: int) -> None:
         srv = self.replicas[i]
+        self.tracer.instant("cluster.shadow_begin", cat="cluster",
+                            replica=i)
         self._shadow_batches = srv.stats.recent_seed_batches(
             limit=self.shadow_window)
         self._shadow_cursor = 0
@@ -345,17 +380,20 @@ class ServeCluster:
     # -- reporting -----------------------------------------------------------
 
     def report(self) -> Dict[str, object]:
+        """Thin view over the registry + per-replica reports (schema
+        unchanged): every cluster counter is either its own registry
+        series or the fold of the replicas' registry-backed series."""
         per = [r.report() for r in self.replicas]
         tiered = [p["tiers"] for p in per if p.get("tiers")]
         return dict(
             replicas=len(self.replicas),
             router=self.router.name,
-            served=self.user_served,
-            shadow_served=self.shadow_served,
+            served=self._c_user.value,
+            shadow_served=self._c_shadow.value,
             pending=sum(r.pending_requests for r in self.replicas),
             dropped=sum(p["dropped"] for p in per),
-            staggered_retunes=self.staggered_retunes,
-            deferred_retunes=self.deferred_retunes,
+            staggered_retunes=self._c_staggered.value,
+            deferred_retunes=self._c_deferred.value,
             retune_log=list(self.retune_log),
             # cluster-wide tiered-storage accounting (replicas each hold
             # their own hot cache over their own host store)

@@ -54,6 +54,7 @@ import numpy as np
 from repro.core.gnn import apply_from_stage, apply_stage, num_stages
 from repro.core.graph import CSRGraph, khop_in_frontier, neighbors_of
 from repro.core.placement import pgas_rows
+from repro.obs import MetricsRegistry, NULL_TRACER
 from repro.runtime.engine import DynamicGNNEngine
 from repro.serve.hotcache import HotNodeCache
 from repro.serve.stats import TrafficSnapshot, WorkloadStats
@@ -80,6 +81,7 @@ class _Pending:
     seeds: np.ndarray
     t_arrival: float          # traffic timestamp (stats / rate drift)
     t_submit: float           # wall clock (latency accounting)
+    t_trace: float = 0.0      # tracer clock at admission (span timelines)
 
 
 class GNNServeEngine:
@@ -107,6 +109,9 @@ class GNNServeEngine:
         clock: Callable[[], float] = time.perf_counter,
         retune_gate: Optional[
             Callable[["GNNServeEngine", float], bool]] = None,
+        tracer=None,
+        metrics: Optional[MetricsRegistry] = None,
+        obs_labels: Optional[dict] = None,
     ):
         self.eng = engine
         self.params = params
@@ -143,11 +148,33 @@ class GNNServeEngine:
         self._baseline: Optional[TrafficSnapshot] = None
         self._queue: Deque[_Pending] = deque()
         self._next_id = 0
-        self.served = 0
-        self.shadow_served = 0       # replayed batches (record_stats off)
-        self.batches = 0             # ALL micro-batches (drives check_every)
-        self.retunes = 0             # traffic-drift search re-opens
-        self.rebuilds = 0            # plan/jit rebuilds (tuner moves)
+        # observability: counters live in a MetricsRegistry (shared with
+        # sibling replicas when the caller passes one, labeled per
+        # replica); served/batches/... read-through properties keep the
+        # pre-registry surface intact.  The tracer records request
+        # lifecycle spans; NULL_TRACER makes every recording call a no-op.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.obs_labels = dict(obs_labels or {})
+        _c = lambda name: self.metrics.counter(name, **self.obs_labels)
+        self._c_served = _c("serve.served")
+        self._c_shadow = _c("serve.shadow_served")   # record_stats off
+        self._c_batches = _c("serve.batches")  # ALL batches (check_every)
+        self._c_retunes = _c("serve.retunes")  # traffic-drift re-opens
+        self._c_rebuilds = _c("serve.rebuilds")  # plan/jit rebuilds
+        self._g_queue = self.metrics.gauge("serve.queue_depth",
+                                           **self.obs_labels)
+        self._h_latency = self.metrics.histogram("serve.request_seconds",
+                                                 **self.obs_labels)
+        self._h_batch = self.metrics.histogram("serve.batch_seconds",
+                                               **self.obs_labels)
+        if self.dynamic:
+            # thread the same sinks into the runtime so tuner audit events
+            # land in this trace/registry (engine construction predates us)
+            if tracer is not None:
+                engine.tracer = self.tracer
+            if engine.metrics is None:
+                engine.metrics = self.metrics
         # measurements (≈ configs visited) per closed search, in order;
         # the cluster asserts shared-cache adoption makes these shrink
         self.search_sizes: List[int] = []
@@ -166,12 +193,36 @@ class GNNServeEngine:
             if cap is None:   # adopt the tuner's cap knob when it has one
                 cap = (engine.feature_capacity or 0) if self.dynamic else 0
             self.tiers = TieredFeatures(store, self.eng.plan, int(cap),
-                                        shard=self.eng.shard)
+                                        shard=self.eng.shard,
+                                        metrics=self.metrics,
+                                        labels=self.obs_labels)
             self.x = store.x   # the store owns the bits; keep a shared view
 
         self.xp = None
         self._refresh_tables()
         self._build_steps()
+
+    # -- registry-backed counters (legacy read surface) ----------------------
+
+    @property
+    def served(self) -> int:
+        return self._c_served.value
+
+    @property
+    def shadow_served(self) -> int:
+        return self._c_shadow.value
+
+    @property
+    def batches(self) -> int:
+        return self._c_batches.value
+
+    @property
+    def retunes(self) -> int:
+        return self._c_retunes.value
+
+    @property
+    def rebuilds(self) -> int:
+        return self._c_rebuilds.value
 
     # -- jit / layout management ---------------------------------------------
 
@@ -209,7 +260,9 @@ class GNNServeEngine:
         self._step_cached = jax.jit(cached)
 
     def _on_rebuild(self) -> None:
-        self.rebuilds += 1
+        self._c_rebuilds.inc()
+        self.tracer.instant("serve.rebuild", cat="serve",
+                            config=self.eng.config)
         if self.tiers is not None and self.dynamic:
             # the tuner may have moved the cap knob; adopt it (cold
             # restart — the next admission refills from the live hot set)
@@ -235,8 +288,10 @@ class GNNServeEngine:
         rid = self._next_id
         self._next_id += 1
         now = self.clock()
-        self._queue.append(_Pending(rid, seeds,
-                                    now if t is None else float(t), now))
+        self._queue.append(_Pending(
+            rid, seeds, now if t is None else float(t), now,
+            t_trace=self.tracer.now() if self.tracer.enabled else 0.0))
+        self._g_queue.set(len(self._queue))
         return rid
 
     @property
@@ -278,6 +333,15 @@ class GNNServeEngine:
             n_seeds += p.seeds.size
         if not batch:
             return []
+        tracing = self.tracer.enabled
+        if tracing:
+            t_batch0 = self.tracer.now()
+            for p in batch:
+                # queue wait: admission → slot assignment
+                self.tracer.complete("serve.queue_wait", p.t_trace,
+                                     t_batch0, cat="serve",
+                                     args={"request_id": p.request_id})
+        self._g_queue.set(len(self._queue))
 
         seeds = np.concatenate([p.seeds for p in batch])
         padded = np.zeros(self.slots, dtype=np.int64)   # masked tail slots
@@ -289,12 +353,14 @@ class GNNServeEngine:
         # on a shallower frontier would serve stale logits after a deep
         # feature update.  One more hop on top of the same BFS gives the
         # full receptive-field size for the stats.
-        f_need = khop_in_frontier(self.g_full, seeds,
-                                  max(0, self.k_hops - 1))
-        fk_size = np.unique(np.concatenate(
-            [f_need, neighbors_of(self.g_full, f_need).astype(np.int64)])
-        ).size if self.k_hops > 0 else f_need.size
-        misses = self.cache.lookup(f_need)
+        with self.tracer.span("serve.frontier", cat="serve",
+                              n_seeds=int(n_seeds)):
+            f_need = khop_in_frontier(self.g_full, seeds,
+                                      max(0, self.k_hops - 1))
+            fk_size = np.unique(np.concatenate(
+                [f_need, neighbors_of(self.g_full, f_need).astype(np.int64)])
+            ).size if self.k_hops > 0 else f_need.size
+            misses = self.cache.lookup(f_need)
         if self.record_stats:
             self.stats.record(batch[-1].t_arrival, seeds, fk_size,
                               n_requests=len(batch))
@@ -310,22 +376,27 @@ class GNNServeEngine:
         # table-None guard), so zero misses ⇔ the cached pass is safe
         use_cached = (self.use_cache and not self._tuning and misses == 0)
         t0 = self.clock()
-        if use_cached:
-            out = self._step_cached(self.params, self.cache.table, rows)
-            jax.block_until_ready(out)
-        else:
-            # tiered mode assembles the padded table transiently — later
-            # chunks' host gathers overlap earlier chunks' device work
-            xp = self.xp if self.tiers is None else self.tiers.padded_table()
-            out, h1 = self._step_full(self.params, xp, rows)
-            jax.block_until_ready((out, h1))
-            if self.use_cache:
-                hot = self.stats.snapshot().hot_nodes \
-                    if self.cache.capacity is not None else None
-                self.cache.store(h1, hot_nodes=hot)
+        with self.tracer.span("serve.aggregate", cat="serve",
+                              cached=bool(use_cached),
+                              frontier=int(fk_size)):
+            if use_cached:
+                out = self._step_cached(self.params, self.cache.table, rows)
+                jax.block_until_ready(out)
+            else:
+                # tiered mode assembles the padded table transiently — later
+                # chunks' host gathers overlap earlier chunks' device work
+                xp = self.xp if self.tiers is None \
+                    else self.tiers.padded_table()
+                out, h1 = self._step_full(self.params, xp, rows)
+                jax.block_until_ready((out, h1))
+                if self.use_cache:
+                    hot = self.stats.snapshot().hot_nodes \
+                        if self.cache.capacity is not None else None
+                    self.cache.store(h1, hot_nodes=hot)
         dt = self.clock() - t0
+        self._h_batch.observe(dt)
 
-        self.batches += 1
+        self._c_batches.inc()
         if self.dynamic and self._tuning:
             if self.eng.observe_step(dt):
                 self._on_rebuild()
@@ -345,19 +416,29 @@ class GNNServeEngine:
         logits = np.asarray(out)
         results, off = [], 0
         now = self.clock()
+        t_emit = self.tracer.now() if tracing else 0.0
         for p in batch:
             k = p.seeds.size
-            results.append(ServeResult(
+            res = ServeResult(
                 request_id=p.request_id, seeds=p.seeds,
                 logits=logits[off:off + k], latency=now - p.t_submit,
-                cached=use_cached))
+                cached=use_cached)
+            results.append(res)
+            self._h_latency.observe(res.latency)
+            if tracing:
+                # admission → emit lifecycle span (queue wait + batch)
+                self.tracer.complete(
+                    "serve.request", p.t_trace, t_emit, cat="serve",
+                    args={"request_id": p.request_id, "n_seeds": int(k),
+                          "cached": bool(use_cached),
+                          "shadow": not self.record_stats})
             off += k
         if self.record_stats:
             # shadow-replay batches (record_stats off) answer no user:
             # `served` stays reconcilable with the cluster-level count
-            self.served += len(results)
+            self._c_served.inc(len(results))
         else:
-            self.shadow_served += len(results)
+            self._c_shadow.inc(len(results))
         return results
 
     def drain(self) -> List[ServeResult]:
@@ -408,7 +489,9 @@ class GNNServeEngine:
         """
         if not self.dynamic or self._tuning:
             return
-        self.retunes += 1
+        self._c_retunes.inc()
+        self.tracer.instant("serve.retune", cat="serve",
+                            from_cache=bool(from_cache))
         self._baseline = self.stats.snapshot() if len(self.stats) else None
         cfg_before = dict(self.eng.config)
         measured_before = self.eng.tuner.measured
@@ -428,11 +511,12 @@ class GNNServeEngine:
         return self.eng.config
 
     def report(self) -> Dict[str, object]:
+        """Thin view over the metrics registry (schema unchanged)."""
         return dict(
-            served=self.served, shadow_served=self.shadow_served,
-            batches=self.batches,
+            served=self._c_served.value, shadow_served=self._c_shadow.value,
+            batches=self._c_batches.value,
             pending=self.pending_requests, dropped=0,
-            retunes=self.retunes, rebuilds=self.rebuilds,
+            retunes=self._c_retunes.value, rebuilds=self._c_rebuilds.value,
             search_sizes=list(self.search_sizes),
             cache_hit_rate=round(self.cache.hit_rate, 4),
             cache_stores=self.cache.stores,

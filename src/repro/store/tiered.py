@@ -40,6 +40,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.placement import AggregationPlan
+from repro.obs import MetricsRegistry
 
 from .feature_store import FeatureStore
 from .hotfeatures import HotFeatureCache
@@ -52,15 +53,44 @@ class TieredFeatures:
 
     def __init__(self, store: FeatureStore, plan: AggregationPlan,
                  capacity: int,
-                 shard: Optional[Callable] = None):
+                 shard: Optional[Callable] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 labels: Optional[dict] = None):
         self.store = store
         self.shard = shard            # e.g. GNNEngine.shard; None = default
         self.cache = HotFeatureCache(store.num_nodes, capacity, store.d_feat)
-        # tiered-level accounting survives cache resizes / plan moves
-        self.host_rows_streamed = 0   # cold rows uploaded during assembly
-        self.cache_rows_served = 0    # rows sourced from the device tier
-        self.assemblies = 0           # chunks assembled
+        # tiered-level accounting survives cache resizes / plan moves.
+        # Counters live in a MetricsRegistry (a shared one when the caller
+        # passes it — the serving engine labels by replica); the legacy
+        # int attributes (host_rows_streamed, ...) are read-through
+        # properties over the same series, so report() and every external
+        # consumer see identical numbers.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.labels = dict(labels or {})
+        self._c_host_rows = self.metrics.counter(
+            "store.host_rows_streamed", **self.labels)
+        self._c_host_bytes = self.metrics.counter(
+            "store.host_bytes_streamed", **self.labels)
+        self._c_cache_rows = self.metrics.counter(
+            "store.cache_rows_served", **self.labels)
+        self._c_assemblies = self.metrics.counter(
+            "store.assemblies", **self.labels)
         self.set_plan(plan)
+
+    @property
+    def host_rows_streamed(self) -> int:
+        """Cold rows uploaded during assembly (host → device misses)."""
+        return self._c_host_rows.value
+
+    @property
+    def cache_rows_served(self) -> int:
+        """Rows sourced from the device tier (hits)."""
+        return self._c_cache_rows.value
+
+    @property
+    def assemblies(self) -> int:
+        """Chunks assembled."""
+        return self._c_assemblies.value
 
     @property
     def capacity(self) -> int:
@@ -131,8 +161,11 @@ class TieredFeatures:
         else:
             slots = np.full(ids.shape, -1, dtype=np.int32)
         hot = slots >= 0
-        self.host_rows_streamed += int((~hot).sum())
-        self.cache_rows_served += int(hot.sum())
+        cold = int((~hot).sum())
+        self._c_host_rows.inc(cold)
+        self._c_host_bytes.inc(cold * self.store.d_feat
+                               * self.store.itemsize)
+        self._c_cache_rows.inc(int(hot.sum()))
         return hot, slots
 
     def _assemble(self, buf, ids, pos):
@@ -148,7 +181,7 @@ class TieredFeatures:
         if hot.any():
             buf = buf.at[jnp.asarray(pos[hot])].set(
                 self.cache.table[jnp.asarray(slots[hot])])
-        self.assemblies += 1
+        self._c_assemblies.inc()
         return buf
 
     def device_chunk(self, c: int):
@@ -187,10 +220,9 @@ class TieredFeatures:
             resident_rows=self.cache.resident_rows,
             resident_fraction=self.resident_fraction,
             hit_rate=self.cache.hit_rate,
-            host_rows_streamed=self.host_rows_streamed,
-            host_bytes_streamed=self.host_rows_streamed
-            * self.store.d_feat * self.store.itemsize,
-            cache_rows_served=self.cache_rows_served,
+            host_rows_streamed=self._c_host_rows.value,
+            host_bytes_streamed=self._c_host_bytes.value,
+            cache_rows_served=self._c_cache_rows.value,
             admissions=self.cache.admissions,
             evictions=self.cache.evictions,
             store_updates=self.store.updates,

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import encdec, transformer
+from repro.obs import NULL_TRACER
 from repro.train import checkpoint as ckpt_lib
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
@@ -144,6 +145,8 @@ class Trainer:
         log_every: int = 10,
         log_fn: Callable[[str], None] = print,
         tune_cb: Optional[Callable[[float, int], Optional[Callable]]] = None,
+        tracer=None,
+        metrics=None,
     ):
         self.step_fn = step_fn
         self.data_it = data_it
@@ -157,6 +160,12 @@ class Trainer:
         self.log_every = log_every
         self.log = log_fn
         self.tune_cb = tune_cb
+        # observability: span per step + step-time histogram.  The step
+        # timing (t0 / block_until_ready / dt) exists regardless, so
+        # tracing adds no synchronization — losses are bitwise-identical
+        # either way (asserted in tests/test_obs.py).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
         self.step_times: list = []
         self.stragglers = 0
         self.restarts = 0
@@ -184,6 +193,10 @@ class Trainer:
                 self.stragglers += 1
                 self.log(f"[trainer] straggler at step {step}: "
                          f"{dt:.3f}s vs median {med:.3f}s")
+                self.tracer.instant("train.straggler", cat="train",
+                                    step=step, dt=dt, median=med)
+                if self.metrics is not None:
+                    self.metrics.counter("train.stragglers").inc()
         self.step_times.append(dt)
 
     def run(self, num_steps: int, metrics_cb: Optional[Callable] = None):
@@ -202,12 +215,20 @@ class Trainer:
                 self.restarts += 1
                 self.log(f"[trainer] step {step} failed ({e!r}); "
                          f"retry {retries}/{self.max_retries}")
+                self.tracer.instant("train.restart", cat="train", step=step)
+                if self.metrics is not None:
+                    self.metrics.counter("train.restarts").inc()
                 if retries > self.max_retries or not self.maybe_restore():
                     raise
                 step = self.state.step
                 continue
             retries = 0
             dt = time.perf_counter() - t0
+            if self.tracer.enabled:
+                self.tracer.complete("train.step", t0, t0 + dt, cat="train",
+                                     args={"step": step})
+            if self.metrics is not None:
+                self.metrics.histogram("train.step_seconds").observe(dt)
             self._watchdog(dt, step)
             if self.tune_cb is not None:
                 # Online tuning (repro.runtime): the callback digests the
@@ -222,6 +243,10 @@ class Trainer:
                     self.step_times.clear()
                     self.log(f"[trainer] dynamic-tune: step fn swapped "
                              f"at step {step} (retune #{self.retunes})")
+                    self.tracer.instant("train.retune", cat="train",
+                                        step=step, retune=self.retunes)
+                    if self.metrics is not None:
+                        self.metrics.counter("train.retunes").inc()
             self.state = TrainState(params, opt, step + 1)
             losses.append(float(metrics["loss"]))
             if self.mgr is not None:

@@ -428,7 +428,7 @@ def test_cache_per_layer_roundtrip_and_warm_start():
 def test_cache_v1_files_discarded_with_one_warning():
     """Pre-refactor cache files (schema v1) read as empty — never a crash,
     a single RuntimeWarning per path (PR-5: the discard is no longer
-    silent), and the next put writes a clean v2 file."""
+    silent), and the next put writes a clean current-schema file."""
     import pytest
     from repro.core.autotune import WorkloadShape
 
@@ -449,7 +449,7 @@ def test_cache_v1_files_discarded_with_one_warning():
         cache.put(shape, dict(ps=4, dist=1, pb=1), 1e-3)
         assert cache.get(shape) == dict(ps=4, dist=1, pb=1)
         with open(path) as f:
-            assert json.load(f)["version"] == 2
+            assert json.load(f)["version"] == 3
 
 
 def test_per_layer_warm_starts_from_global_cache_entry():

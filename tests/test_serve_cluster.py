@@ -355,3 +355,71 @@ def test_cluster_trace_with_drift_zero_drops_and_staggered_retune(tmp_path):
                 jax.jit(lambda p, t: apply(p, eng, t))(params, xp)))
         np.testing.assert_allclose(r.logits, offline[i][r.seeds],
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# observability: cluster counters reconcile with per-replica counters
+# ---------------------------------------------------------------------------
+
+def test_cluster_report_counters_equal_per_replica_sums(tmp_path):
+    """Every counter in ServeCluster.report() must equal the fold of the
+    per-replica counters: the cluster's own registry series and the
+    replicas' label-scoped series are two views of the same traffic, and
+    the registry rewrite must keep them consistent."""
+    from repro.obs import MetricsRegistry
+
+    g, x, params, _apply = _graph_setup(seed=5, n=300)
+    registry = MetricsRegistry()
+    cache_path = str(tmp_path / "tuned.json")
+
+    def replica(i):
+        eng = DynamicGNNEngine.build(
+            g, flat_ring_mesh(1), d_feat=x.shape[1], ps_space=(2, 4, 8),
+            dist_space=(1, 2), pb_space=(1,),
+            window=ProfileConfig(warmup=0, iters=1), cache_path=cache_path,
+            metrics=registry)
+        return GNNServeEngine(eng, params, "gcn", x, g, slots=4,
+                              stats=WorkloadStats(window=8, top_k=8),
+                              check_every=2, min_records=4,
+                              feature_capacity=32,
+                              metrics=registry, obs_labels={"replica": i})
+
+    replicas = [replica(i) for i in range(2)]
+    cluster = ServeCluster(replicas, router=LocalityRouter(),
+                           metrics=registry)
+    phases = [
+        TrafficPhase(requests=40, alpha=1.4, rate=100.0, seeds_max=3),
+        TrafficPhase(requests=40, alpha=1.4, rate=400.0, rotate=True,
+                     seeds_max=3),
+    ]
+    results = cluster.run_trace(
+        ZipfTraffic(g.num_nodes, x.shape[1], phases, seed=11))
+    rep = cluster.report()
+    per = rep["per_replica"]
+
+    assert rep["served"] == len(results) == 80
+    # replica-side `served` already excludes shadow-replay batches, so
+    # the cluster's user-visible count is exactly the per-replica sum
+    assert rep["served"] == sum(p["served"] for p in per)
+    # the replica-side shadow flag and the cluster-side gid bookkeeping
+    # count the exact same replayed batches
+    assert rep["shadow_served"] == sum(p["shadow_served"] for p in per)
+    assert rep["dropped"] == sum(p["dropped"] for p in per)
+    tiers = [p["tiers"] for p in per if p.get("tiers")]
+    assert len(tiers) == 2
+    assert rep["host_rows_streamed"] == sum(
+        t["host_rows_streamed"] for t in tiers)
+    assert rep["cache_rows_served"] == sum(
+        t["cache_rows_served"] for t in tiers)
+
+    # the shared registry's label-summed totals agree with both views
+    assert registry.counter_total("serve.served") == rep["served"]
+    assert registry.counter_total("serve.served") == \
+        sum(p["served"] for p in per)
+    assert registry.counter_total("serve.shadow_served") == \
+        rep["shadow_served"]
+    assert registry.counter_total("cluster.user_served") == rep["served"]
+    assert registry.counter_total("store.host_rows_streamed") == \
+        rep["host_rows_streamed"]
+    assert registry.counter_total("store.cache_rows_served") == \
+        rep["cache_rows_served"]
