@@ -4,6 +4,13 @@ The main benchmark process sees exactly ONE CPU device (per the brief).
 Multi-device measurements therefore run in subprocesses that set
 ``--xla_force_host_platform_device_count`` before importing jax; each
 benchmark module doubles as that subprocess entry point (``--json`` mode).
+
+Timing helpers return :class:`TimingSample` — a float (the median, so
+every ``round(t * 1e6, 1)`` call site is unchanged) that also carries the
+raw per-iteration samples.  Rows splat ``**sample_fields(t)`` to persist
+``us_median`` / ``us_mad`` / ``samples_us`` into the snapshot (schema v2),
+which is what lets ``benchmarks/diff.py`` express its regression threshold
+in MAD multiples instead of raw percentages.
 """
 from __future__ import annotations
 
@@ -12,9 +19,14 @@ import os
 import subprocess
 import sys
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SNAPSHOT_SCHEMA = 2
+# raw samples persisted per row are capped (fig11 rows reduce hundreds of
+# request latencies; median/MAD stay exact over the full set)
+MAX_STORED_SAMPLES = 32
 
 
 def run_subprocess(module: str, devices: int = 8,
@@ -49,8 +61,57 @@ def force_devices_from_env() -> None:
             f"--xla_force_host_platform_device_count={n}")
 
 
-def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-clock seconds per call (after warmup, block_until_ready)."""
+class TimingSample(float):
+    """A median latency (seconds) that remembers its raw samples.
+
+    Subclassing float keeps every existing ``round(t * 1e6, 1)`` /
+    arithmetic call site working; ``sample_fields(t)`` extracts the
+    snapshot-v2 robustness fields.
+    """
+
+    samples: List[float]
+
+    def __new__(cls, samples: Sequence[float]):
+        ss = sorted(float(s) for s in samples)
+        if not ss:
+            raise ValueError("TimingSample needs at least one sample")
+        self = super().__new__(cls, ss[len(ss) // 2])
+        self.samples = ss
+        return self
+
+
+def median_mad_us(samples_s: Sequence[float]) -> Dict[str, float]:
+    """Median and median-absolute-deviation of samples, in microseconds."""
+    ss = sorted(float(s) for s in samples_s)
+    med = ss[len(ss) // 2]
+    dev = sorted(abs(s - med) for s in ss)
+    mad = dev[len(dev) // 2]
+    return {"us_median": round(med * 1e6, 3), "us_mad": round(mad * 1e6, 3)}
+
+
+def sample_stats(samples_s: Sequence[float]) -> Dict:
+    """Snapshot-v2 row fields from raw per-iteration seconds."""
+    ss = [float(s) for s in samples_s]
+    out = median_mad_us(ss)
+    out["iters"] = len(ss)
+    out["samples_us"] = [round(s * 1e6, 3)
+                         for s in sorted(ss)[:MAX_STORED_SAMPLES]]
+    return out
+
+
+def sample_fields(t) -> Dict:
+    """Row fields for a :func:`timeit` result; `{}` for a bare float."""
+    if isinstance(t, TimingSample):
+        return sample_stats(t.samples)
+    return {}
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> TimingSample:
+    """Median wall-clock seconds per call (after warmup, block_until_ready).
+
+    Returns a :class:`TimingSample` so callers can persist the raw
+    per-iteration samples alongside the median.
+    """
     import jax
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
@@ -59,8 +120,66 @@ def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+    return TimingSample(times)
+
+
+def machine_fingerprint() -> dict:
+    """Identify the machine a snapshot was measured on.
+
+    Enough to tell two snapshots apart — and, for ``benchmarks/diff.py``,
+    to decide whether a row-by-row latency comparison is meaningful at
+    all: ``backend`` / ``device_kind`` / ``device_count`` must match
+    (host memory and accelerator memory are recorded for the report, not
+    the compatibility check).
+    """
+    import multiprocessing
+    import platform
+
+    fp = {
+        "hostname": platform.node(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "cpu_count": multiprocessing.cpu_count(),
+    }
+    try:
+        fp["host_memory_bytes"] = (os.sysconf("SC_PAGE_SIZE")
+                                   * os.sysconf("SC_PHYS_PAGES"))
+    except (ValueError, OSError, AttributeError):
+        pass
+    try:
+        import jax
+        devs = jax.devices()
+        fp["jax"] = jax.__version__
+        fp["backend"] = jax.default_backend()
+        fp["device_kind"] = devs[0].device_kind
+        fp["device_count"] = len(devs)
+        try:  # accelerator memory: absent on CPU backends
+            stats = devs[0].memory_stats() or {}
+            if "bytes_limit" in stats:
+                fp["device_memory_bytes"] = int(stats["bytes_limit"])
+        except Exception:
+            pass
+    except Exception:
+        pass
+    return fp
+
+
+def write_snapshot(path: str, rows_by_module: dict, args: dict) -> None:
+    """Write a schema-v2 perf snapshot (UTC ISO-8601 stamp)."""
+    snap = {
+        "schema": SNAPSHOT_SCHEMA,
+        "stamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "machine": machine_fingerprint(),
+        "args": dict(args),
+        "modules": rows_by_module,
+    }
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True, default=str)
+    print(f"# perf snapshot: {path}", file=sys.stderr)
 
 
 def emit(rows: List[Dict], as_json: bool) -> None:

@@ -1,0 +1,243 @@
+"""Perf-regression diff over BENCH_*.json snapshots (schema v1/v2).
+
+Library (``load_snapshot`` / ``compare`` / ``render``) plus a CLI:
+
+    PYTHONPATH=src python -m benchmarks.diff BENCH_BASELINE.json \
+        bench/BENCH_ci.json [--mad-mult 8] [--min-rel 0.5] [--force]
+
+Rows are matched by ``(module, name)``.  A row regresses when the new
+median exceeds the baseline median by more than the *noise band* — a
+threshold expressed in MAD multiples of the measured jitter, not a raw
+percentage, so tight-variance rows are held to tight tolerances while
+noisy rows are not flagged for wobbling inside their own spread:
+
+    band = max(mad_mult * max(MAD_base, MAD_new), min_rel * median_base)
+
+``min_rel`` is the relative floor for rows without samples (schema-v1
+snapshots, search-result rows) and for near-zero-MAD rows where a MAD
+band alone would flag scheduler noise.  Improvements are reported but
+never fail the diff.
+
+Snapshots from different machines (backend / device kind / device count
+mismatch) are refused unless ``--force`` — cross-machine latency deltas
+are hardware deltas, not regressions.  Exit codes: 0 clean, 1 regression
+found, 2 refused/unusable input.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# fingerprint fields that must match for a latency diff to be meaningful
+COMPAT_FIELDS = ("backend", "device_kind", "device_count")
+DEFAULT_MAD_MULT = 5.0
+DEFAULT_MIN_REL = 0.10
+
+
+class SnapshotError(ValueError):
+    """The file is not a usable benchmark snapshot."""
+
+
+def load_snapshot(path: str) -> dict:
+    """Parse + structurally validate a snapshot (v1 or v2)."""
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except OSError as e:
+        raise SnapshotError(f"{path}: {e}") from e
+    except ValueError as e:
+        raise SnapshotError(f"{path}: not JSON ({e})") from e
+    if not isinstance(snap, dict) or "modules" not in snap:
+        raise SnapshotError(f"{path}: no 'modules' section — not a "
+                            f"BENCH_*.json snapshot")
+    if not isinstance(snap["modules"], dict):
+        raise SnapshotError(f"{path}: 'modules' is not a mapping")
+    snap.setdefault("schema", 1)
+    snap.setdefault("machine", {})
+    return snap
+
+
+def fingerprint_mismatches(a: dict, b: dict) -> List[str]:
+    """Human-readable reasons the two machines are not comparable."""
+    out = []
+    for field in COMPAT_FIELDS:
+        va, vb = a.get(field), b.get(field)
+        if va is not None and vb is not None and va != vb:
+            out.append(f"{field}: {va!r} vs {vb!r}")
+    return out
+
+
+def _row_stats(row: dict) -> Optional[Tuple[float, float]]:
+    """(median_us, mad_us) for a row; None when it carries no latency.
+
+    v2 rows have exact ``us_median``/``us_mad``; v1 rows fall back to the
+    single ``us_per_call`` with an unknown (0) MAD — the relative floor
+    carries the whole noise band for those.
+    """
+    if "us_median" in row:
+        return float(row["us_median"]), float(row.get("us_mad", 0.0))
+    us = row.get("us_per_call")
+    if us in (None, ""):
+        return None
+    try:
+        return float(us), 0.0
+    except (TypeError, ValueError):
+        return None
+
+
+@dataclasses.dataclass
+class Finding:
+    module: str
+    name: str
+    kind: str          # "regression" | "improvement"
+    base_us: float
+    new_us: float
+    band_us: float     # the noise band the delta had to clear
+
+    @property
+    def rel(self) -> float:
+        return (self.new_us - self.base_us) / max(1e-12, self.base_us)
+
+
+@dataclasses.dataclass
+class CompareResult:
+    findings: List[Finding]
+    compared: int
+    skipped: List[str]          # rows without usable latency
+    missing_in_new: List[str]   # (module, name) present only in base
+    new_rows: List[str]         # present only in new
+
+    @property
+    def regressions(self) -> List[Finding]:
+        return [f for f in self.findings if f.kind == "regression"]
+
+    @property
+    def improvements(self) -> List[Finding]:
+        return [f for f in self.findings if f.kind == "improvement"]
+
+
+def _rows_by_key(snap: dict) -> Dict[Tuple[str, str], dict]:
+    out: Dict[Tuple[str, str], dict] = {}
+    for module, rows in snap["modules"].items():
+        for row in rows or []:
+            name = row.get("name")
+            if name:
+                out[(module, str(name))] = row
+    return out
+
+
+def compare(base: dict, new: dict, *, mad_mult: float = DEFAULT_MAD_MULT,
+            min_rel: float = DEFAULT_MIN_REL,
+            force: bool = False) -> CompareResult:
+    """Row-by-row diff of two loaded snapshots.
+
+    Raises :class:`SnapshotError` on a machine-fingerprint mismatch
+    unless ``force`` — see the module docstring for the noise band.
+    """
+    mismatches = fingerprint_mismatches(base.get("machine", {}),
+                                        new.get("machine", {}))
+    if mismatches and not force:
+        raise SnapshotError(
+            "snapshots are from different machines ("
+            + "; ".join(mismatches)
+            + ") — latency deltas would be hardware deltas, not "
+              "regressions; pass --force to compare anyway")
+    rows_a, rows_b = _rows_by_key(base), _rows_by_key(new)
+    findings: List[Finding] = []
+    skipped: List[str] = []
+    compared = 0
+    for key in sorted(set(rows_a) & set(rows_b)):
+        sa, sb = _row_stats(rows_a[key]), _row_stats(rows_b[key])
+        if sa is None or sb is None:
+            skipped.append("/".join(key))
+            continue
+        (base_us, base_mad), (new_us, new_mad) = sa, sb
+        band = max(mad_mult * max(base_mad, new_mad),
+                   min_rel * abs(base_us))
+        compared += 1
+        delta = new_us - base_us
+        if delta > band:
+            findings.append(Finding(*key, "regression", base_us, new_us,
+                                    band))
+        elif -delta > band:
+            findings.append(Finding(*key, "improvement", base_us, new_us,
+                                    band))
+    findings.sort(key=lambda f: -abs(f.rel))
+    return CompareResult(
+        findings=findings, compared=compared, skipped=skipped,
+        missing_in_new=sorted("/".join(k) for k in set(rows_a) - set(rows_b)),
+        new_rows=sorted("/".join(k) for k in set(rows_b) - set(rows_a)),
+    )
+
+
+def render(result: CompareResult, base_stamp: str = "",
+           new_stamp: str = "") -> str:
+    """Human-readable diff report."""
+    lines = [f"bench diff: {result.compared} rows compared"
+             + (f" ({base_stamp} -> {new_stamp})"
+                if base_stamp or new_stamp else "")]
+    for f in result.findings:
+        arrow = "REGRESSION" if f.kind == "regression" else "improvement"
+        lines.append(
+            f"  {arrow:>11}  {f.module}/{f.name}: "
+            f"{f.base_us:.1f}us -> {f.new_us:.1f}us "
+            f"({f.rel:+.1%}, band ±{f.band_us:.1f}us)")
+    if not result.findings:
+        lines.append("  all rows inside the noise band")
+    if result.missing_in_new:
+        lines.append("  rows only in baseline: "
+                     + ", ".join(result.missing_in_new))
+    if result.new_rows:
+        lines.append("  new rows (not in baseline): "
+                     + ", ".join(result.new_rows))
+    if result.skipped:
+        lines.append(f"  skipped (no latency): {', '.join(result.skipped)}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json perf snapshots")
+    ap.add_argument("base", help="baseline snapshot (e.g. "
+                                 "BENCH_BASELINE.json)")
+    ap.add_argument("new", help="candidate snapshot")
+    ap.add_argument("--mad-mult", type=float, default=DEFAULT_MAD_MULT,
+                    help="noise band in MAD multiples "
+                         f"(default {DEFAULT_MAD_MULT})")
+    ap.add_argument("--min-rel", type=float, default=DEFAULT_MIN_REL,
+                    help="relative noise-band floor "
+                         f"(default {DEFAULT_MIN_REL})")
+    ap.add_argument("--force", action="store_true",
+                    help="compare across machine fingerprints")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the findings machine-readably")
+    args = ap.parse_args(argv)
+    try:
+        base, new = load_snapshot(args.base), load_snapshot(args.new)
+        result = compare(base, new, mad_mult=args.mad_mult,
+                         min_rel=args.min_rel, force=args.force)
+    except SnapshotError as e:
+        print(f"[bench.diff] REFUSED: {e}", file=sys.stderr)
+        return 2
+    print(render(result, base.get("stamp", ""), new.get("stamp", "")))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "base": args.base, "new": args.new,
+                "compared": result.compared,
+                "findings": [dataclasses.asdict(x) for x in result.findings],
+                "missing_in_new": result.missing_in_new,
+                "new_rows": result.new_rows, "skipped": result.skipped,
+            }, f, indent=2)
+    if result.regressions:
+        print(f"[bench.diff] FAIL: {len(result.regressions)} row(s) "
+              f"regressed beyond the noise band", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

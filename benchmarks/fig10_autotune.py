@@ -108,6 +108,24 @@ def run(as_json: bool, smoke: bool = False) -> list:
         us_per_call=round(t_model_pick * 1e6, 1),
         derived=f"model_best={res_m.best};"
                 f"gap_to_grid={t_model_pick / t_grid_best:.2f}"))
+
+    # --- calibration: fit the analytical model to the measured surface ----
+    # every config the searches measured (the profiler's memo table +
+    # the online tuner's audit trail) becomes a fit observation
+    from repro.obs.calibrate import fit_spec
+    obs = profiler.observations() + tuner.observations()
+    cal = fit_spec(w, obs)
+    scales = {k: round(v, 4) for k, v in cal.scales.items() if v != 1.0}
+    rows.append(dict(
+        name="fig10_calibration",
+        us_per_call=0.0,
+        derived=(f"n_obs={cal.n_observations};"
+                 f"stock_err={cal.base_error:.3f};"
+                 f"calibrated_err={cal.error:.3f};"
+                 f"scales={scales}")))
+    if smoke:
+        # the fit grid contains the identity scale: never worse than stock
+        assert cal.error <= cal.base_error, (cal.error, cal.base_error)
     return rows
 
 

@@ -39,7 +39,8 @@ import os
 import sys
 import tempfile
 
-from benchmarks._common import emit, force_devices_from_env
+from benchmarks._common import (emit, force_devices_from_env,
+                                sample_stats)
 
 force_devices_from_env()
 
@@ -185,6 +186,7 @@ def run(as_json: bool, smoke: bool = False) -> list:
     rows.append(dict(
         name="fig11_serving_static",
         us_per_call=round(float(np.percentile(lat_s, 50)) * 1e6, 1),
+        **sample_stats(lat_s),
         derived=(f"p99_us={np.percentile(lat_s, 99) * 1e6:.0f};"
                  f"hit_rate={rep_s['cache_hit_rate']};"
                  f"dropped={rep_s['dropped']};"
@@ -198,6 +200,7 @@ def run(as_json: bool, smoke: bool = False) -> list:
     rows.append(dict(
         name="fig11_serving_retune",
         us_per_call=round(float(np.percentile(lat_d, 50)) * 1e6, 1),
+        **sample_stats(lat_d),
         derived=(f"p99_us={np.percentile(lat_d, 99) * 1e6:.0f};"
                  f"hit_rate={rep_d['cache_hit_rate']};"
                  f"dropped={rep_d['dropped']};"
@@ -217,6 +220,7 @@ def run(as_json: bool, smoke: bool = False) -> list:
         rows.append(dict(
             name=f"fig11_serving_{model}",
             us_per_call=round(float(np.percentile(lat_m, 50)) * 1e6, 1),
+        **sample_stats(lat_m),
             derived=(f"p99_us={np.percentile(lat_m, 99) * 1e6:.0f};"
                      f"hit_rate={rep_m['cache_hit_rate']};"
                      f"dropped={rep_m['dropped']};"
@@ -246,6 +250,7 @@ def _cluster_rows(g, x, params, apply_fn, spaces, mesh, *, smoke, tmpdir):
     rows.append(dict(
         name="fig11_cluster_single",
         us_per_call=round(float(np.percentile(lat_1, 50)) * 1e6, 1),
+        **sample_stats(lat_1),
         derived=(f"p99_us={np.percentile(lat_1, 99) * 1e6:.0f};"
                  f"retunes={rep_1['retunes']};"
                  f"dropped={rep_1['dropped']}")))
@@ -262,6 +267,7 @@ def _cluster_rows(g, x, params, apply_fn, spaces, mesh, *, smoke, tmpdir):
         rows.append(dict(
             name=f"fig11_cluster_{n_rep}_{router_name}",
             us_per_call=round(float(np.percentile(lat_c, 50)) * 1e6, 1),
+        **sample_stats(lat_c),
             derived=(f"p99_us={np.percentile(lat_c, 99) * 1e6:.0f};"
                      f"staggered={rep_c['staggered_retunes']};"
                      f"deferred={rep_c['deferred_retunes']};"

@@ -12,7 +12,8 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks._common import emit, force_devices_from_env, timeit
+from benchmarks._common import (emit, force_devices_from_env, sample_fields,
+                                timeit)
 
 force_devices_from_env()
 
@@ -61,6 +62,7 @@ def _ef_gradient_rows(mesh, n_dev: int) -> list:
     t_plain = timeit(plain, grads)
     return [dict(
         name="fig2_ef_gradient_wire", us_per_call=round(t_ef * 1e6, 1),
+        **sample_fields(t_ef),
         derived=(f"fp32_wire_bytes={bytes_fp32};int8_wire_bytes={bytes_int8};"
                  f"reduction={reduction:.2f}x;"
                  f"plain_us={t_plain*1e6:.1f};"
@@ -98,10 +100,11 @@ def run(as_json: bool) -> list:
         ratio = t_comm / t_comp
         rows.append(dict(
             name=f"fig2_{name}_comm", us_per_call=round(t_comm * 1e6, 1),
+            **sample_fields(t_comm),
             derived=f"ratio_comm_over_comp={ratio:.2f}"))
         rows.append(dict(
             name=f"fig2_{name}_comp", us_per_call=round(t_comp * 1e6, 1),
-            derived=""))
+            **sample_fields(t_comp), derived=""))
         # roofline-term version on the paper's REAL sizes + target hardware
         e = meta["real_edges"]
         v = meta["real_nodes"]

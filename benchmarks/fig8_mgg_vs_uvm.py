@@ -33,7 +33,8 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks._common import emit, force_devices_from_env, timeit
+from benchmarks._common import (emit, force_devices_from_env, sample_fields,
+                                timeit)
 
 force_devices_from_env()
 
@@ -203,6 +204,7 @@ def run(as_json: bool, smoke: bool = False) -> list:
             rows.append(dict(
                 name=f"fig8_{model}_{name}",
                 us_per_call=round(t_mgg * 1e6, 1),
+                **sample_fields(t_mgg),
                 derived=(f"uvm_us={t_uvm*1e6:.1f};"
                          f"tiered_us={t_tier*1e6:.1f};"
                          f"cpu_ratio={t_uvm/t_mgg:.2f};"

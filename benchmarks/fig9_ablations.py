@@ -23,7 +23,8 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks._common import emit, force_devices_from_env, timeit
+from benchmarks._common import (emit, force_devices_from_env, sample_fields,
+                                timeit)
 
 force_devices_from_env()
 
@@ -91,6 +92,7 @@ def _per_layer_vs_global(g, mesh, d, *, candidates, global_cfg, name):
     distinct = len({(c["ps"], c["dist"]) for c in best})
     return dict(
         name=name, us_per_call=round(t_per_layer * 1e6, 1),
+        **sample_fields(t_per_layer),
         derived=(f"global_us={t_global*1e6:.1f};"
                  f"speedup={t_global/t_per_layer:.2f};"
                  f"configs={[(c['ps'], c['dist']) for c in best]};"
@@ -117,6 +119,7 @@ def _fused_vs_unfused(g, mesh, d, *, cfg, name, check=False):
         np.testing.assert_allclose(of, ou, rtol=2e-4, atol=2e-4)
     return dict(
         name=name, us_per_call=round(t_fused * 1e6, 1),
+        **sample_fields(t_fused),
         derived=(f"unfused_us={t_unfused*1e6:.1f};"
                  f"speedup={t_unfused/t_fused:.2f}"))
 

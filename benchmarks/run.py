@@ -11,22 +11,28 @@ measured-search path, the online runtime tuner, and the benchmark
 subprocess harness) so benchmark code cannot rot silently.  It fails the
 process on any error, like the full run.
 
-Full (non-smoke) runs also write a ``BENCH_<stamp>.json`` perf snapshot
-next to the CSV stream: a machine fingerprint (host, platform, JAX
-backend/devices) plus every per-figure row, so runs on different
-machines/dates can be diffed.  ``--no-snapshot`` disables it,
-``--snapshot-dir`` relocates it.
+Every run — ``--smoke`` included, so CI always has data — also writes a
+``BENCH_<stamp>.json`` perf snapshot (schema v2): a device-count-complete
+machine fingerprint, a UTC ISO-8601 stamp, and every per-figure row with
+its raw repeated measurements (``us_median`` / ``us_mad`` /
+``samples_us``) alongside the headline ``us_per_call``.  Snapshots land
+in ``bench/`` (gitignored; the committed smoke-scale ``BENCH_BASELINE.json``
+at the repo root is the one tracked exception) and are compared with
+``benchmarks/diff.py`` — the CI ``bench-regression`` job gates PRs on the
+smoke snapshot staying inside the baseline's noise band.
+``--no-snapshot`` disables it, ``--snapshot-dir``/``--snapshot-name``
+relocate it.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
 import traceback
 
-from benchmarks._common import run_subprocess
+from benchmarks._common import (machine_fingerprint, run_subprocess,
+                                write_snapshot)
 
 MULTI_DEVICE_MODULES = [
     "fig2_comm_compute",
@@ -45,40 +51,15 @@ SMOKE_MODULES = ["fig8_mgg_vs_uvm", "fig9_ablations", "fig10_autotune",
                  "fig11_serving"]
 
 
-def machine_fingerprint() -> dict:
-    """Identify the machine a snapshot was measured on (enough to tell
-    two snapshots apart, not to uniquely identify hardware)."""
-    import multiprocessing
-    import platform
-
-    fp = {
-        "hostname": platform.node(),
-        "platform": platform.platform(),
-        "machine": platform.machine(),
-        "python": platform.python_version(),
-        "cpu_count": multiprocessing.cpu_count(),
-    }
-    try:
-        import jax
-        fp["jax"] = jax.__version__
-        fp["backend"] = jax.default_backend()
-        fp["device_kind"] = jax.devices()[0].device_kind
-    except Exception:
-        pass
-    return fp
-
-
-def write_snapshot(path: str, rows_by_module: dict, args_ns) -> None:
-    snap = {
-        "stamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-        "machine": machine_fingerprint(),
-        "args": {"quick": args_ns.quick, "only": args_ns.only,
-                 "devices": args_ns.devices},
-        "modules": rows_by_module,
-    }
-    with open(path, "w") as f:
-        json.dump(snap, f, indent=2, sort_keys=True, default=str)
-    print(f"# perf snapshot: {path}", file=sys.stderr)
+def _maybe_snapshot(args, rows_by_module: dict) -> None:
+    if args.no_snapshot or not rows_by_module:
+        return
+    name = args.snapshot_name or \
+        f"BENCH_{time.strftime('%Y%m%d_%H%M%S', time.gmtime())}.json"
+    write_snapshot(
+        os.path.join(args.snapshot_dir, name), rows_by_module,
+        {"quick": args.quick, "smoke": args.smoke, "only": args.only,
+         "devices": 2 if args.smoke else args.devices})
 
 
 def main() -> None:
@@ -89,8 +70,12 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--no-snapshot", action="store_true",
                     help="skip the BENCH_<stamp>.json perf snapshot")
-    ap.add_argument("--snapshot-dir", default=".",
-                    help="directory for the perf snapshot (default: cwd)")
+    ap.add_argument("--snapshot-dir", default="bench",
+                    help="directory for the perf snapshot "
+                         "(default: bench/, gitignored)")
+    ap.add_argument("--snapshot-name", default=None,
+                    help="snapshot file name (default: BENCH_<utcstamp>.json;"
+                         " a fixed name lets CI diff it deterministically)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -106,10 +91,12 @@ def main() -> None:
                                           timeout=600):
                     print(f"{row['name']},{row.get('us_per_call', '')},"
                           f"\"{row.get('derived', '')}\"")
+                    rows_by_module.setdefault(mod, []).append(dict(row))
                 sys.stdout.flush()
             except Exception as e:
                 failures.append((mod, e))
                 print(f"{mod},ERROR,\"{e}\"", file=sys.stderr)
+        _maybe_snapshot(args, rows_by_module)
         if failures:
             print(f"# {len(failures)} smoke module(s) failed",
                   file=sys.stderr)
@@ -141,11 +128,7 @@ def main() -> None:
         except Exception as e:
             traceback.print_exc()
             failures.append((mod, e))
-    if not args.no_snapshot and rows_by_module:
-        stamp = time.strftime("%Y%m%d_%H%M%S")
-        write_snapshot(os.path.join(args.snapshot_dir,
-                                    f"BENCH_{stamp}.json"),
-                       rows_by_module, args)
+    _maybe_snapshot(args, rows_by_module)
     if failures:
         print(f"# {len(failures)} benchmark module(s) failed", file=sys.stderr)
         sys.exit(1)

@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks._common import emit, force_devices_from_env, timeit
+from benchmarks._common import (emit, force_devices_from_env, sample_fields,
+                                timeit)
 
 force_devices_from_env()
 
@@ -42,6 +43,7 @@ def run(as_json: bool) -> list:
         rows.append(dict(
             name=f"table1_{name}",
             us_per_call=round(times["direct"] * 1e6, 1),
+            **sample_fields(times["direct"]),
             derived=(f"batched_us={times['batched']*1e6:.1f};"
                      f"direct_over_batched="
                      f"{times['batched']/times['direct']:.2f}")))

@@ -11,7 +11,8 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks._common import emit, force_devices_from_env, timeit
+from benchmarks._common import (emit, force_devices_from_env, sample_fields,
+                                timeit)
 
 force_devices_from_env()
 
@@ -86,6 +87,7 @@ def run(as_json: bool) -> list:
         rows.append(dict(
             name=f"table4_{name}",
             us_per_call=round(t_mgg * 1e6, 1),
+            **sample_fields(t_mgg),
             derived=(f"dgcl_us={t_dgcl*1e6:.1f};"
                      f"gcn_speedup={t_dgcl/t_mgg:.2f};"
                      f"prep_mgg_ms={t_mgg_prep*1e3:.1f};"

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks._common import emit, force_devices_from_env, timeit
+from benchmarks._common import (emit, force_devices_from_env, sample_fields,
+                                timeit)
 
 force_devices_from_env()
 
@@ -101,6 +102,7 @@ def run(as_json: bool) -> list:
     return [dict(
         name="table5_full_vs_sampled",
         us_per_call=round(t_full * 1e6, 1),
+        **sample_fields(t_full),
         derived=(f"acc_full={acc_full:.3f};acc_sampled={acc_samp:.3f};"
                  f"acc_gain={(acc_full-acc_samp)*100:.1f}pp;"
                  f"latency_ratio={t_full/t_samp:.2f}"))]

@@ -50,7 +50,14 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
-    """Per-chip hardware constants for the analytical model."""
+    """Per-chip hardware constants for the analytical model.
+
+    The shipped constants (:data:`TPU_V5E`, :data:`A100_NVSWITCH`) are
+    datasheet numbers; :mod:`repro.obs.calibrate` can replace them with
+    values *measured* on the live machine — either micro-probed directly
+    (``spec_from_probes``) or fitted to the tuner's audit-trail latencies
+    (``fit_spec``), via :meth:`scaled`.
+    """
 
     name: str
     peak_flops: float        # FLOP/s (bf16 for TPU)
@@ -61,6 +68,17 @@ class HardwareSpec:
     host_bw: float = 32e9    # host→device bytes/s (PCIe gen4 ×16 class);
     #                          the tiered feature path's cold-row gathers
     #                          stream over this link
+
+    def scaled(self, suffix: str = "+calibrated",
+               **scales: float) -> "HardwareSpec":
+        """A copy with named float fields multiplied by the given scales
+        (identity scales elide the copy), e.g. ``hw.scaled(link_bw=0.5)``
+        for a machine whose ring moves half the datasheet bytes/s."""
+        changed = {k: getattr(self, k) * float(v)
+                   for k, v in scales.items() if float(v) != 1.0}
+        if not changed:
+            return self
+        return dataclasses.replace(self, name=self.name + suffix, **changed)
 
 
 # Target hardware for the roofline (per the brief): TPU v5e.

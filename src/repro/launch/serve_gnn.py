@@ -39,7 +39,7 @@ import jax
 
 import repro.core as C
 from repro.dist import flat_ring_mesh
-from repro.obs import MetricsRegistry, Tracer
+from repro.obs import MetricsRegistry, Tracer, merge_traces
 from repro.runtime import DynamicGNNEngine, ProfileConfig
 from repro.serve import (GNNServeEngine, ServeCluster, TrafficPhase,
                          WorkloadStats, ZipfTraffic, make_router, run_trace)
@@ -61,15 +61,35 @@ def _print_audit(audit, indent="  "):
               f"{ev['event']}: {detail}")
 
 
-def _dump_obs(args, tracer, registry, engines):
+def _dump_obs(args, tracer, registry, engines, replica_tracers=None):
     """Write --trace / --metrics-json.  ``engines`` are the serve engines
-    whose dynamic runtimes contribute audit trails."""
+    whose dynamic runtimes contribute audit trails.  With per-replica
+    tracers (``--replicas N --trace``) each replica's events are dumped
+    as a JSONL sidecar and folded into ONE Perfetto timeline — the
+    cluster (router/drain/rejoin) on its own process row, each replica
+    on its own — via :func:`repro.obs.merge_traces`."""
     audits = {f"replica{i}": e.eng.audit
               for i, e in enumerate(engines) if e.dynamic}
     if args.metrics_json:
         registry.dump_json(args.metrics_json, extra={"audit": audits})
         print(f"[serve_gnn] metrics snapshot: {args.metrics_json}")
-    if tracer is not None and args.trace:
+    if tracer is None or not args.trace:
+        return
+    if replica_tracers:
+        paths, labels = [], []
+        for label, t in [("cluster", tracer)] + [
+                (f"replica{i}", rt)
+                for i, rt in enumerate(replica_tracers)]:
+            p = f"{args.trace}.{label}.jsonl"
+            t.dump_jsonl(p)
+            paths.append(p)
+            labels.append(label)
+        merge_traces(paths, labels, out=args.trace)
+        n = len(tracer) + sum(len(t) for t in replica_tracers)
+        print(f"[serve_gnn] merged chrome trace: {args.trace} "
+              f"({n} events across {len(paths)} timelines — open in "
+              f"ui.perfetto.dev; sidecars: {args.trace}.*.jsonl)")
+    else:
         tracer.dump_chrome(args.trace)
         print(f"[serve_gnn] chrome trace: {args.trace} "
               f"({len(tracer)} events — open in ui.perfetto.dev)")
@@ -170,7 +190,8 @@ def main() -> None:
             tempfile.mkdtemp(prefix="mgg-serve-"), "tuned.json")
         print(f"[serve_gnn] shared config cache: {cache_path}")
 
-    def build_replica(idx=0):
+    def build_replica(idx=0, rep_tracer=None):
+        rtr = rep_tracer if rep_tracer is not None else tracer
         if args.dynamic_tune:
             layer_dims = C.aggregation_widths(args.model, params,
                                               fused=args.fuse_update) \
@@ -182,7 +203,7 @@ def main() -> None:
                 window=ProfileConfig(warmup=1, iters=2),
                 fuse_update=args.fuse_update, layer_dims=layer_dims,
                 cache_path=cache_path, log_fn=print,
-                tracer=tracer, metrics=registry)
+                tracer=rtr, metrics=registry)
         else:
             eng = C.GNNEngine.build(g, mesh, ps=8, dist=1,
                                     fuse_update=args.fuse_update)
@@ -194,7 +215,7 @@ def main() -> None:
                               min_records=args.min_records,
                               use_cache=not args.no_cache,
                               feature_capacity=args.feature_capacity,
-                              log_fn=print, tracer=tracer,
+                              log_fn=print, tracer=rtr,
                               metrics=registry, obs_labels=labels)
 
     phases = [
@@ -209,7 +230,13 @@ def main() -> None:
     traffic = ZipfTraffic(g.num_nodes, dim, phases, seed=args.seed)
 
     if args.replicas > 1:
-        replicas = [build_replica(i) for i in range(args.replicas)]
+        # each replica records onto its OWN tracer (pid = replica index +
+        # 1; the cluster keeps pid 0) so the dump can merge N replica
+        # timelines into one Perfetto view with distinct process rows
+        rep_tracers = ([Tracer(pid=i + 1) for i in range(args.replicas)]
+                       if tracer is not None else None)
+        replicas = [build_replica(i, rep_tracers[i] if rep_tracers else None)
+                    for i in range(args.replicas)]
         cluster = ServeCluster(replicas, router=make_router(args.router),
                                log_fn=print, tracer=tracer,
                                metrics=registry)
@@ -245,8 +272,9 @@ def main() -> None:
                     print(f"  replica {i} audit trail:")
                     _print_audit(r.eng.audit, indent="    ")
         if tracer is not None:
-            _profile_pipeline(replicas[0], tracer)
-        _dump_obs(args, tracer, registry, replicas)
+            _profile_pipeline(replicas[0], rep_tracers[0])
+        _dump_obs(args, tracer, registry, replicas,
+                  replica_tracers=rep_tracers)
         return
 
     srv = build_replica()

@@ -12,9 +12,24 @@ Two primitives:
 - :class:`MetricsRegistry` (metrics.py): labeled counters / gauges /
   histograms with percentile summaries and a JSON snapshot.
 
+One exception to leaf-ness, deliberately quarantined: ``calibrate.py``
+fits the §4 analytical latency model to measured latencies and so must
+import ``repro.core.autotune``.  It is never imported here eagerly —
+``import repro.obs.calibrate`` explicitly (or touch the lazy
+``repro.obs.calibrate`` attribute) — so ``from repro.obs import Tracer``
+stays dependency-free.
+
 See docs/observability.md for the span taxonomy and metric names.
 """
-from repro.obs.tracer import NULL_TRACER, Tracer
+from repro.obs.tracer import NULL_TRACER, Tracer, merge_traces
 from repro.obs.metrics import MetricsRegistry
 
-__all__ = ["Tracer", "NULL_TRACER", "MetricsRegistry"]
+__all__ = ["Tracer", "NULL_TRACER", "MetricsRegistry", "merge_traces",
+           "calibrate"]
+
+
+def __getattr__(name):
+    if name == "calibrate":  # lazy: pulls in repro.core.autotune
+        import repro.obs.calibrate as _cal
+        return _cal
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

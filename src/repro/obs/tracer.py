@@ -190,3 +190,60 @@ NULL_TRACER = Tracer(enabled=False, capacity=1)
 def resolve(tracer: Optional[Tracer]) -> Tracer:
     """Normalize an optional tracer argument to a Tracer instance."""
     return tracer if tracer is not None else NULL_TRACER
+
+
+# ---------------------------------------------------------------------------
+# multi-replica trace merging
+# ---------------------------------------------------------------------------
+
+def _load_events(path: str) -> list:
+    """Events from either export format (JSONL or Chrome ``traceEvents``).
+
+    Both start with ``{``, so sniffing the first byte can't tell them
+    apart: parse as one JSON document first, fall back to line-per-event.
+    """
+    with open(path) as f:
+        text = f.read()
+    try:
+        doc = json.loads(text)
+    except ValueError:
+        return [json.loads(line) for line in text.splitlines()
+                if line.strip()]
+    if isinstance(doc, dict):
+        if "traceEvents" in doc:
+            return list(doc["traceEvents"])
+        return [doc]        # single-line JSONL: one bare event
+    return list(doc)        # bare event array
+
+
+def merge_traces(paths, labels=None, out: Optional[str] = None) -> dict:
+    """Fold N per-replica trace dumps into one Perfetto timeline.
+
+    Each input (JSONL from :meth:`Tracer.dump_jsonl` or Chrome JSON from
+    :meth:`Tracer.dump_chrome`) becomes its own process row: every event
+    is reassigned ``pid=i`` (the input's position), and a Chrome ``M``
+    (``process_name``) metadata event names the row — by ``labels[i]``
+    when given, else ``replica<i>``.  Timestamps are left alone: each
+    tracer's clock already starts at its own epoch, so replica timelines
+    align at zero, which is what you want for comparing per-replica
+    phase timing side by side.
+
+    Returns the merged ``{"traceEvents": [...]}`` object; also writes it
+    to ``out`` when given.  Used by ``launch/serve_gnn.py`` for
+    ``--replicas N --trace``.
+    """
+    merged = []
+    for i, path in enumerate(paths):
+        label = labels[i] if labels and i < len(labels) else f"replica{i}"
+        merged.append({"ph": "M", "name": "process_name", "pid": i,
+                       "tid": 0, "args": {"name": label}})
+        for ev in _load_events(path):
+            ev = dict(ev)
+            ev["pid"] = i
+            merged.append(ev)
+    doc = {"traceEvents": merged, "displayTimeUnit": "ms",
+           "otherData": {"merged_from": len(list(paths))}}
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f)
+    return doc

@@ -367,6 +367,64 @@ class DynamicGNNEngine:
         self.tracer.instant("tuner." + ev["event"], cat="tuner", **safe)
         if self.metrics is not None:
             self.metrics.counter("tuner.events", event=ev["event"]).inc()
+            if ev["event"] == "probe":
+                # model-vs-measured relative error for every probed config:
+                # the continuous check that the §4 analytical model still
+                # ranks configs the way this machine measures them (numpy
+                # only — no device work on the audit path)
+                err = self._model_error(ev)
+                if err is not None:
+                    self.metrics.histogram("tuner.model_error").observe(err)
+
+    def _model_error(self, ev: dict) -> Optional[float]:
+        cfg = ev.get("config") or ev.get("configs")
+        lat = ev.get("latency")
+        if cfg is None or lat is None or not np.isfinite(lat) or lat <= 0:
+            return None
+        from repro.obs.calibrate import model_latency
+        shapes = self._layer_shapes if isinstance(cfg, list) else self.shape
+        if shapes is None:
+            return None
+        try:
+            model = model_latency(shapes, cfg, self.hw,
+                                  interleave=self.interleave)
+        except Exception:
+            return None
+        return abs(model - float(lat)) / float(lat)
+
+    def calibrate(self, *, params=None, adopt: bool = True):
+        """Fit ``self.hw`` to the latencies the search actually measured.
+
+        Runs :func:`repro.obs.calibrate.fit_spec` over the audit trail's
+        probe observations; with ``adopt=True`` (default) the calibrated
+        spec replaces ``self.hw``, so subsequent re-tunes build their VMEM
+        feasibility checks and model-error baselines against measured
+        hardware constants instead of the shipped ones.  Returns the
+        :class:`~repro.obs.calibrate.CalibrationResult` (None when the
+        trail holds no usable measurements yet).
+        """
+        from repro.obs import calibrate as cal
+
+        obs = self.tuner.observations()
+        shapes = self._layer_shapes if self.per_layer else self.shape
+        if shapes is None:
+            return None
+        kw = {} if params is None else {"params": params}
+        result = cal.fit_spec(shapes, obs, self.hw,
+                              interleave=self.interleave, **kw)
+        if result is None:
+            return None
+        if self.metrics is not None:
+            self.metrics.gauge("tuner.calibration_error").set(result.error)
+            self.metrics.gauge("tuner.calibration_error_base") \
+                .set(result.base_error)
+        self.tracer.instant("tuner.calibrate", cat="tuner",
+                            error=result.error, base_error=result.base_error,
+                            n=result.n_observations)
+        self.log(f"[runtime] {result.summary()}")
+        if adopt:
+            self.hw = result.spec
+        return result
 
     # -- the online tuning protocol ------------------------------------------
 

@@ -188,6 +188,15 @@ class AggregateProfiler:
                     interleave=self.interleave))
         return self._table[key]
 
+    def observations(self) -> List[Tuple[dict, float]]:
+        """The memo table as ``(config, latency)`` pairs — calibration
+        fodder for :func:`repro.obs.calibrate.fit_spec` (only meaningful
+        when measuring; in model mode the pairs would just refit the
+        model to itself)."""
+        return [(dict(ps=ps, dist=dist, pb=pb), lat)
+                for (ps, dist, pb), lat in self._table.items()
+                if np.isfinite(lat) and lat > 0.0]
+
     def _measure(self, ps: int, dist: int, pb: int) -> float:
         import jax
         import jax.numpy as jnp

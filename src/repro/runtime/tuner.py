@@ -74,6 +74,25 @@ class _AuditMixin:
             except Exception:
                 pass
 
+    def observations(self) -> List[Tuple[dict, float]]:
+        """Measured ``(config, latency)`` pairs from the audit trail —
+        the calibration fit's input (:mod:`repro.obs.calibrate`).
+        OnlineTuner probes yield config dicts, PerLayerTuner probes
+        per-layer config lists; finite positive latencies only.
+        """
+        out: List[Tuple[dict, float]] = []
+        for ev in self.audit:
+            if ev.get("event") != "probe":
+                continue
+            cfg = ev.get("config") or ev.get("configs")
+            lat = ev.get("latency")
+            if cfg is None or lat is None:
+                continue
+            lat = float(lat)
+            if math.isfinite(lat) and lat > 0.0:
+                out.append((cfg, lat))
+        return out
+
 # (ps, dist, pb) — or (ps, dist, pb, cap) when a cap_space is configured
 Key = Tuple[int, ...]
 

@@ -1,0 +1,225 @@
+"""Benchmark snapshot diff engine (benchmarks/diff.py) + schema v2.
+
+The acceptance criteria of the continuous-perf PR, as tests:
+
+* a snapshot diffed against itself produces ZERO findings and exit 0;
+* an injected ≥20% regression is flagged and exits nonzero;
+* snapshots from incompatible machines are refused without ``--force``;
+* wobble inside the MAD noise band is NOT flagged.
+"""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import diff  # noqa: E402
+from benchmarks._common import (SNAPSHOT_SCHEMA, TimingSample,  # noqa: E402
+                                machine_fingerprint, median_mad_us,
+                                sample_fields, sample_stats, write_snapshot)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _row(name, med_us, mad_us=2.0, iters=5):
+    return {"name": name, "us_per_call": med_us, "us_median": med_us,
+            "us_mad": mad_us, "iters": iters,
+            "samples_us": [med_us - mad_us, med_us, med_us + mad_us]}
+
+
+def _snap(tmp_path, fname, rows_by_module, machine=None):
+    snap = {"schema": SNAPSHOT_SCHEMA, "stamp": "2026-08-09T00:00:00Z",
+            "machine": machine or machine_fingerprint(), "args": {},
+            "modules": rows_by_module}
+    path = str(tmp_path / fname)
+    with open(path, "w") as f:
+        json.dump(snap, f)
+    return path
+
+
+@pytest.fixture
+def base_path(tmp_path):
+    return _snap(tmp_path, "base.json", {
+        "fig9": [_row("fig9a", 100.0), _row("fig9b", 250.0)],
+        "fig11": [_row("fig11_serve", 900.0, mad_us=10.0)]})
+
+
+# -- the three acceptance behaviors ----------------------------------------
+
+def test_self_diff_zero_findings(base_path):
+    base = diff.load_snapshot(base_path)
+    res = diff.compare(base, base)
+    assert res.findings == []
+    assert res.compared == 3
+    assert diff.main([base_path, base_path]) == 0
+
+
+def test_injected_regression_flagged(tmp_path, base_path):
+    base = diff.load_snapshot(base_path)
+    new = copy.deepcopy(base)
+    row = new["modules"]["fig9"][0]
+    for k in ("us_per_call", "us_median"):
+        row[k] = row[k] * 1.25            # +25%: far outside 5·MAD and 10%
+    res = diff.compare(base, new)
+    regs = res.regressions
+    assert len(regs) == 1
+    f = regs[0]
+    assert (f.module, f.name, f.kind) == ("fig9", "fig9a", "regression")
+    assert f.rel == pytest.approx(0.25, abs=0.01)
+    new_path = _snap(tmp_path, "new.json", new["modules"])
+    assert diff.main([base_path, new_path]) == 1          # gate trips
+    assert diff.main([new_path, base_path]) == 0          # improvement: pass
+
+
+def test_twenty_percent_threshold(base_path):
+    """The ISSUE's floor: ≥20% must always trip at default thresholds."""
+    base = diff.load_snapshot(base_path)
+    new = copy.deepcopy(base)
+    for mod in new["modules"].values():
+        for row in mod:
+            for k in ("us_per_call", "us_median"):
+                row[k] = row[k] * 1.20
+    res = diff.compare(base, new)
+    assert len(res.regressions) == res.compared == 3
+
+
+def test_cross_machine_refused_without_force(tmp_path, base_path):
+    base = diff.load_snapshot(base_path)
+    other = dict(base["machine"], device_count=base["machine"]
+                 .get("device_count", 1) + 7, device_kind="tpu_v5e")
+    new_path = _snap(tmp_path, "other.json",
+                     copy.deepcopy(base["modules"]), machine=other)
+    new = diff.load_snapshot(new_path)
+    with pytest.raises(diff.SnapshotError, match="device"):
+        diff.compare(base, new)
+    assert diff.main([base_path, new_path]) == 2
+    # --force overrides; identical timings ⇒ still zero findings
+    res = diff.compare(base, new, force=True)
+    assert res.findings == []
+    assert diff.main([base_path, new_path, "--force"]) == 0
+
+
+def test_mad_band_suppresses_noise(base_path):
+    """Wobble within mad_mult·MAD (but above min_rel·base would flag it
+    if MAD were ignored) stays silent: the band is the MAX of the two."""
+    base = diff.load_snapshot(base_path)
+    new = copy.deepcopy(base)
+    row = new["modules"]["fig11"][0]      # median 900, MAD 10
+    for k in ("us_per_call", "us_median"):
+        row[k] = row[k] + 40.0            # +4.4% < 5·MAD=50 and < 10% floor
+    assert diff.compare(base, new).findings == []
+    # past BOTH the MAD band and the relative floor ⇒ flagged
+    for k in ("us_per_call", "us_median"):
+        row[k] = 900.0 * 1.15             # +15% > 10% floor, +135 > 50
+    assert len(diff.compare(base, new).regressions) == 1
+
+
+def test_min_rel_floor_handles_zero_mad(base_path):
+    """Rows without samples (schema v1 / search-result rows) fall back to
+    MAD 0 — the relative floor keeps scheduler noise from flagging."""
+    base = diff.load_snapshot(base_path)
+    for mod in base["modules"].values():
+        for row in mod:
+            row.pop("us_mad", None)
+            row.pop("us_median", None)
+            row.pop("samples_us", None)
+    new = copy.deepcopy(base)
+    new["modules"]["fig9"][0]["us_per_call"] *= 1.05   # 5% < 10% floor
+    assert diff.compare(base, new).findings == []
+    new["modules"]["fig9"][0]["us_per_call"] = 100.0 * 1.30
+    assert len(diff.compare(base, new).regressions) == 1
+
+
+# -- row accounting --------------------------------------------------------
+
+def test_missing_and_new_rows_reported(base_path):
+    base = diff.load_snapshot(base_path)
+    new = copy.deepcopy(base)
+    del new["modules"]["fig11"]
+    new["modules"]["fig9"].append(_row("fig9_new", 77.0))
+    res = diff.compare(base, new)
+    assert res.missing_in_new == ["fig11/fig11_serve"]
+    assert res.new_rows == ["fig9/fig9_new"]
+    assert res.compared == 2
+
+
+def test_render_mentions_findings(base_path):
+    base = diff.load_snapshot(base_path)
+    new = copy.deepcopy(base)
+    new["modules"]["fig9"][0]["us_median"] = 200.0
+    new["modules"]["fig9"][0]["us_per_call"] = 200.0
+    res = diff.compare(base, new)
+    text = diff.render(res, base.get("stamp", ""), new.get("stamp", ""))
+    assert "fig9a" in text and "regression" in text.lower()
+
+
+def test_cli_json_report(tmp_path, base_path):
+    base = diff.load_snapshot(base_path)
+    new = copy.deepcopy(base)
+    new["modules"]["fig9"][1]["us_median"] = 500.0
+    new["modules"]["fig9"][1]["us_per_call"] = 500.0
+    new_path = _snap(tmp_path, "n.json", new["modules"])
+    report = str(tmp_path / "report.json")
+    rc = diff.main([base_path, new_path, "--json", report])
+    assert rc == 1
+    with open(report) as f:
+        out = json.load(f)
+    assert out["compared"] == 3
+    assert [x["name"] for x in out["findings"]] == ["fig9b"]
+    assert out["findings"][0]["kind"] == "regression"
+
+
+def test_cli_runs_as_script(base_path):
+    """The CI gate invokes the file directly — exit code is the contract."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "diff.py"),
+         base_path, base_path],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr
+    assert "all rows inside the noise band" in proc.stdout
+
+
+# -- schema v2 plumbing ----------------------------------------------------
+
+def test_timing_sample_is_float_and_carries_samples():
+    t = TimingSample([3e-4, 1e-4, 2e-4])
+    assert float(t) == pytest.approx(2e-4)        # median
+    assert round(t * 1e6, 1) == 200.0             # old call sites unchanged
+    assert t.samples == [1e-4, 2e-4, 3e-4]
+    stats = sample_fields(t)
+    assert stats["us_median"] == pytest.approx(200.0)
+    assert stats["us_mad"] == pytest.approx(100.0)
+    assert stats["iters"] == 3
+    assert sample_fields(2e-4) == {}              # bare floats: no stats
+
+
+def test_median_mad_odd_even():
+    assert median_mad_us([1e-4, 2e-4, 9e-4])["us_median"] \
+        == pytest.approx(200.0)
+    # even counts take the upper median (index n//2 of the sorted list)
+    st = sample_stats([1e-4, 3e-4])
+    assert st["us_median"] == pytest.approx(300.0)
+    assert st["us_mad"] == pytest.approx(200.0)
+    assert st["iters"] == 2
+
+
+def test_write_snapshot_schema(tmp_path):
+    path = str(tmp_path / "sub" / "snap.json")   # dir auto-created
+    write_snapshot(path, {"m": [_row("r", 1.0)]}, {"smoke": True})
+    snap = diff.load_snapshot(path)
+    assert snap["schema"] == SNAPSHOT_SCHEMA
+    assert snap["stamp"].endswith("Z") and "T" in snap["stamp"]
+    m = snap["machine"]
+    assert "device_count" in m and "backend" in m
+    assert snap["args"] == {"smoke": True}
+
+
+def test_fingerprint_fields():
+    m = machine_fingerprint()
+    for key in ("backend", "device_kind", "device_count", "python", "jax"):
+        assert key in m, key
+    assert m["device_count"] >= 1
