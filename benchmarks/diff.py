@@ -16,7 +16,9 @@ noisy rows are not flagged for wobbling inside their own spread:
 ``min_rel`` is the relative floor for rows without samples (schema-v1
 snapshots, search-result rows) and for near-zero-MAD rows where a MAD
 band alone would flag scheduler noise.  Improvements are reported but
-never fail the diff.
+never fail the diff; rows present only in the candidate snapshot are
+reported as ``"new"`` findings (latency included, never failing) so a
+PR that adds a benchmark row sees it in the gate report.
 
 Snapshots from different machines (backend / device kind / device count
 mismatch) are refused unless ``--force`` — cross-machine latency deltas
@@ -92,13 +94,15 @@ def _row_stats(row: dict) -> Optional[Tuple[float, float]]:
 class Finding:
     module: str
     name: str
-    kind: str          # "regression" | "improvement"
-    base_us: float
+    kind: str          # "regression" | "improvement" | "new"
+    base_us: float     # 0.0 for "new" rows (no baseline to diff against)
     new_us: float
     band_us: float     # the noise band the delta had to clear
 
     @property
     def rel(self) -> float:
+        if self.kind == "new":
+            return 0.0
         return (self.new_us - self.base_us) / max(1e-12, self.base_us)
 
 
@@ -165,6 +169,13 @@ def compare(base: dict, new: dict, *, mad_mult: float = DEFAULT_MAD_MULT,
         elif -delta > band:
             findings.append(Finding(*key, "improvement", base_us, new_us,
                                     band))
+    # rows only the candidate snapshot carries: report them as "new"
+    # findings (latency included) rather than a silent footnote, so a PR
+    # that ADDS a benchmark row sees it land in the gate report
+    for key in sorted(set(rows_b) - set(rows_a)):
+        sb = _row_stats(rows_b[key])
+        if sb is not None:
+            findings.append(Finding(*key, "new", 0.0, sb[0], 0.0))
     findings.sort(key=lambda f: -abs(f.rel))
     return CompareResult(
         findings=findings, compared=compared, skipped=skipped,
@@ -179,7 +190,13 @@ def render(result: CompareResult, base_stamp: str = "",
     lines = [f"bench diff: {result.compared} rows compared"
              + (f" ({base_stamp} -> {new_stamp})"
                 if base_stamp or new_stamp else "")]
+    covered = set()
     for f in result.findings:
+        if f.kind == "new":
+            covered.add(f"{f.module}/{f.name}")
+            lines.append(f"  {'new':>11}  {f.module}/{f.name}: "
+                         f"{f.new_us:.1f}us (not in baseline)")
+            continue
         arrow = "REGRESSION" if f.kind == "regression" else "improvement"
         lines.append(
             f"  {arrow:>11}  {f.module}/{f.name}: "
@@ -190,9 +207,10 @@ def render(result: CompareResult, base_stamp: str = "",
     if result.missing_in_new:
         lines.append("  rows only in baseline: "
                      + ", ".join(result.missing_in_new))
-    if result.new_rows:
+    latencyless = [r for r in result.new_rows if r not in covered]
+    if latencyless:
         lines.append("  new rows (not in baseline): "
-                     + ", ".join(result.new_rows))
+                     + ", ".join(latencyless))
     if result.skipped:
         lines.append(f"  skipped (no latency): {', '.join(result.skipped)}")
     return "\n".join(lines)

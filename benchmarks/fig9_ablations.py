@@ -15,9 +15,16 @@ per-layer-refactor ablations:
     dimension-aware adaptation).
 (d) fused vs unfused update: the dense ·W matmul inside the ring vs after
     it, numerically equivalence-checked against each other.
+(e) sparsity-aware aggregation (MaxK-GNN direction): top-k-compressed
+    ring payloads at k ∈ {D, D/2, D/4} — per-k ring wire bytes
+    (analytic, exact), measured aggregation step time, and the
+    final-train-accuracy delta of a short GCN run with sparse hidden
+    layers vs the dense baseline.  The accuracy-vs-speed trade the
+    ``k_space`` tuner knob navigates, measured.
 
 ``--smoke`` (wired into ``benchmarks/run.py --smoke`` → CI) shrinks the
-graphs and asserts (c)'s per-layer ≤ global and (d)'s equivalence.
+graphs and asserts (c)'s per-layer ≤ global, (d)'s equivalence, and
+(e)'s wire-byte reduction (k = D/4 must ship < 0.5× the dense bytes).
 """
 from __future__ import annotations
 
@@ -124,6 +131,83 @@ def _fused_vs_unfused(g, mesh, d, *, cfg, name, check=False):
                  f"speedup={t_unfused/t_fused:.2f}"))
 
 
+def _final_accuracy(g, mesh, d, ncls, *, cfg, topk, steps, lr=2e-2):
+    """Final train accuracy of a short GCN run; ``topk`` sparsifies the
+    hidden layers (layer 0 stays dense — see GNNEngine.stage_topk).
+
+    3 layers with ``hidden=d``: GCN aggregates at each layer's OUTPUT
+    width, so the default 16-dim hidden would clamp every probed k to
+    dense — the middle layer must aggregate at ``d`` for k < D to bite.
+    """
+    from repro.train.data import graph_features
+    from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+    x, y, train_mask = graph_features(g.num_nodes, d, ncls, seed=1)
+    init, apply_fn, _kw = C.MODEL_ZOO["gcn"]
+    params = init(jax.random.key(0), d, ncls, hidden=d, num_layers=3)
+    eng = C.GNNEngine.build(g, mesh, ps=cfg["ps"], dist=cfg["dist"],
+                            topk=topk)
+    xp = eng.shard(eng.pad(x))
+    pad1 = lambda a: C.pad_table(eng.plan.bounds, eng.plan.rows_per_dev,
+                                 a[:, None])[:, 0]
+    yp = jnp.asarray(pad1(y.astype(np.int32)))
+    mp = jnp.asarray(pad1(train_mask.astype(np.float32)))
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=lr, warmup_steps=2, total_steps=2 * steps,
+                       weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt):
+        loss, grads = jax.value_and_grad(lambda p: C.masked_cross_entropy(
+            apply_fn(p, eng, xp), yp, mp))(params)
+        params, opt, _ = adamw_update(grads, opt, params, ocfg)
+        return params, opt, loss
+
+    for _ in range(steps):
+        params, opt, _loss = step(params, opt)
+    pred = np.asarray(jnp.argmax(apply_fn(params, eng, xp), axis=-1))
+    m = np.asarray(mp) > 0
+    return float((pred[m] == np.asarray(yp)[m]).mean())
+
+
+def _sparsity_rows(g, mesh, d, ncls, *, cfg, name_prefix, train_steps,
+                   check=False):
+    """fig9e: one row per compression width k ∈ {D, D/2, D/4}."""
+    n_dev = mesh.shape["ring"]
+    x = np.random.default_rng(2).normal(size=(g.num_nodes, d)) \
+        .astype(np.float32)
+    plan = C.build_plan(g, n_dev, ps=cfg["ps"], dist=cfg["dist"])
+    xb = jnp.asarray(C.pad_embeddings(plan, x))
+    dense_fn = jax.jit(lambda z: C.mgg_aggregate(z, plan, mesh))
+    t_dense = timeit(dense_fn, xb)
+    dense_bytes = C.collective_bytes(plan, d)
+    acc_dense = _final_accuracy(g, mesh, d, ncls, cfg=cfg, topk=None,
+                                steps=train_steps)
+    rows = []
+    for k in (d, d // 2, d // 4):
+        fn = jax.jit(lambda z, kk=k: C.mgg_aggregate_sparse(z, plan, mesh,
+                                                            k=kk))
+        t_k = timeit(fn, xb)
+        wire = C.sparse_collective_bytes(plan, d, k)
+        ratio = wire / max(1, dense_bytes)
+        acc_k = acc_dense if k == d else _final_accuracy(
+            g, mesh, d, ncls, cfg=cfg, topk=k, steps=train_steps)
+        if check and k == d // 4:
+            # the tentpole's wire-byte gate: a quarter-width payload must
+            # ship under half the dense bytes (int16 idx ⇒ 0.375×)
+            assert ratio < 0.5, (wire, dense_bytes, ratio)
+        rows.append(dict(
+            name=f"{name_prefix}_k{k}", us_per_call=round(t_k * 1e6, 1),
+            **sample_fields(t_k),
+            derived=(f"dense_us={t_dense*1e6:.1f};"
+                     f"speedup={t_dense/t_k:.2f};"
+                     f"wire_bytes={wire};dense_bytes={dense_bytes};"
+                     f"wire_ratio={ratio:.3f};"
+                     f"acc={acc_k:.3f};acc_dense={acc_dense:.3f};"
+                     f"acc_delta={acc_k - acc_dense:+.3f}")))
+    return rows
+
+
 def run(as_json: bool, smoke: bool = False) -> list:
     n_dev = len(jax.devices())
     mesh = flat_ring_mesh(n_dev)
@@ -141,6 +225,9 @@ def run(as_json: bool, smoke: bool = False) -> list:
         rows.append(_fused_vs_unfused(
             g, mesh, 96, cfg=dict(ps=8, dist=2),
             name="fig9d_fused_update_smoke", check=True))
+        rows.extend(_sparsity_rows(
+            g, mesh, 96, 4, cfg=dict(ps=8, dist=2),
+            name_prefix="fig9e_sparsity_smoke", train_steps=10, check=True))
         return rows
     for name in ("reddit", "products", "proteins"):
         g, meta = C.paper_dataset(name, scale=0.25)
@@ -175,6 +262,9 @@ def run(as_json: bool, smoke: bool = False) -> list:
         rows.append(row_c)
         rows.append(_fused_vs_unfused(g, mesh, d, cfg=dict(ps=16, dist=2),
                                       name=f"fig9d_fused_{name}"))
+        rows.extend(_sparsity_rows(
+            g, mesh, d, 8, cfg=dict(ps=16, dist=2),
+            name_prefix=f"fig9e_sparsity_{name}", train_steps=25))
     return rows
 
 

@@ -28,10 +28,15 @@ from .placement import (
 )
 from .pipeline import (
     mgg_aggregate,
+    mgg_aggregate_sparse,
+    topk_activation,
+    topk_decompress,
+    wire_index_dtype,
     bulk_aggregate,
     fetch_rows_aggregate,
     reference_aggregate,
     collective_bytes,
+    sparse_collective_bytes,
 )
 from .autotune import (
     HardwareSpec,

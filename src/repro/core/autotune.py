@@ -176,6 +176,7 @@ def estimate_latency(
     d_out: Optional[int] = None,
     fuse: bool = False,
     host_rows: Optional[int] = None,
+    topk: Optional[int] = None,
 ) -> float:
     """Modeled per-aggregation latency (seconds) for one device.
 
@@ -205,7 +206,24 @@ def estimate_latency(
     cache capacity ⇒ fewer ``host_rows`` ⇒ lower latency, which is what
     makes capacity a climbable tuner knob; ``host_rows=None`` (or 0)
     models all-resident features (backward-compatible).
+
+    ``topk`` models the sparse ring payload
+    (:func:`repro.core.pipeline.mgg_aggregate_sparse`): each tile ships
+    ``k`` top-k values plus their column indices (int16 below the int16
+    id range, else int32) instead of ``D`` dense floats, scaling the
+    per-step wire bytes by ``k·(itemsize+idx)/(D·itemsize)``.  The
+    gather side reads the narrow compressed rows but still accumulates a
+    dense ``D``-wide output, so compute bytes scale by
+    ``(k·(itemsize+idx) + D·itemsize)/(2·D·itemsize)``.  ``topk=None``
+    (or ≥ D) models the dense pipeline.
     """
+    k = None if topk is None else int(min(int(topk), w.d_feat))
+    idx_b = 2 if w.d_feat <= 32767 else 4
+    wire_mult = 1.0 if k is None \
+        else k * (w.itemsize + idx_b) / (w.d_feat * w.itemsize)
+    comp_mult = 1.0 if k is None \
+        else (k * (w.itemsize + idx_b) + w.d_feat * w.itemsize) \
+        / (2.0 * w.d_feat * w.itemsize)
     t_update = 0.0
     if d_out is not None:
         t_update = 2.0 * w.rows_per_dev * w.d_feat * d_out / hw.peak_flops
@@ -214,15 +232,16 @@ def estimate_latency(
         t_gather = host_rows * w.d_feat * w.itemsize / hw.host_bw
     if w.n_dev == 1:
         bytes_local = 2 * w.local_edges_max * w.d_feat * w.itemsize
-        return bytes_local / hw.hbm_bw + t_update + t_gather
+        return bytes_local * comp_mult / hw.hbm_bw + t_update + t_gather
     tile_rows = -(-w.rows_per_dev // dist)
     steps = (w.n_dev - 1) * dist
-    tile_bytes = tile_rows * w.d_feat * w.itemsize
+    tile_bytes = tile_rows * w.d_feat * w.itemsize * wire_mult
     # partition-padding waste: ~ps/2 wasted slots per node on average; fold
     # into an effective edge multiplier (calibrated vs. plan.stats()).
     pad_mult = 1.0 + 0.5 * ps * w.n_dev / max(1, w.remote_edges_max)
-    re_bytes = 2 * w.remote_edges_max * pad_mult * w.d_feat * w.itemsize
-    lc_bytes = 2 * w.local_edges_max * w.d_feat * w.itemsize
+    re_bytes = 2 * w.remote_edges_max * pad_mult * w.d_feat * w.itemsize \
+        * comp_mult
+    lc_bytes = 2 * w.local_edges_max * w.d_feat * w.itemsize * comp_mult
     t_comm = tile_bytes / hw.link_bw
     t_remote = re_bytes / steps / hw.hbm_bw
     t_local = lc_bytes / steps / hw.hbm_bw
@@ -255,6 +274,7 @@ def estimate_pipeline_latency(
     d_outs: Optional["List[Optional[int]]"] = None,
     fuse: bool = False,
     fuses: Optional["List[bool]"] = None,
+    topk: Optional[int] = None,
 ) -> float:
     """Whole-forward model: Σ over layers of the per-layer estimate.
 
@@ -262,7 +282,10 @@ def estimate_pipeline_latency(
     :func:`layer_workload_shapes`); ``configs[i]`` its ``(ps, dist, pb)``
     and optionally a per-layer ``fuse`` flag (``fuses`` overrides, then
     ``configs[i]['fuse']``, then the call-level ``fuse`` default — the
-    same precedence the per-layer tuner's fuse dimension produces).  The
+    same precedence the per-layer tuner's fuse dimension produces).  A
+    per-config ``k`` (the v4 cache knob) likewise overrides the
+    call-level ``topk`` default; layer 0 is always modeled dense,
+    matching :meth:`GNNEngine.stage_topk`.  The
     analytical counterpart of the per-layer tuner's objective — the tuner
     itself descends MEASURED full-forward latencies (it never calls
     this); use it for offline what-if modeling and roofline reports.  The
@@ -273,11 +296,18 @@ def estimate_pipeline_latency(
         raise ValueError("one config per layer required")
     if d_outs is None:
         d_outs = [None] * len(shapes)
+    def _k(i, c):
+        if i == 0:
+            return None
+        k = c.get("k", topk)
+        return int(k) if k else None
+
     return sum(
         estimate_latency(s, int(c["ps"]), int(c["dist"]), int(c["pb"]),
                          hw=hw, interleave=interleave, d_out=d_outs[i],
                          fuse=bool(fuses[i] if fuses is not None
-                                   else c.get("fuse", fuse)))
+                                   else c.get("fuse", fuse)),
+                         topk=_k(i, c))
         for i, (s, c) in enumerate(zip(shapes, configs))
     )
 

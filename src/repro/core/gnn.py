@@ -38,7 +38,8 @@ from .graph import CSRGraph
 from .placement import (AggregationPlan, LayerPlan, SharedPartition,
                         build_layer_plans, build_partition, pad_embeddings,
                         pad_table)
-from .pipeline import mgg_aggregate, mgg_aggregate_streamed
+from .pipeline import (mgg_aggregate, mgg_aggregate_sparse,
+                       mgg_aggregate_sparse_streamed, mgg_aggregate_streamed)
 
 __all__ = ["GNNEngine", "gcn_init", "gcn_apply", "gin_init", "gin_apply",
            "sage_init", "sage_apply", "gat_init", "gat_apply",
@@ -85,6 +86,7 @@ class GNNEngine:
         use_kernel: bool = False,
         self_loops: bool = True,
         fuse_update: bool = False,
+        topk: Optional[int] = None,
         layer_configs: Optional[Sequence[Dict]] = None,
         partition: Optional[SharedPartition] = None,
     ) -> "GNNEngine":
@@ -104,7 +106,7 @@ class GNNEngine:
             else build_partition(g, n_dev)
         plans = build_layer_plans(g, n_dev, layer_configs, partition=part,
                                   interleave=interleave,
-                                  fuse_update=fuse_update)
+                                  fuse_update=fuse_update, topk=topk)
         plan0 = plans[0].plan
         deg = pad_table(plan0.bounds, plan0.rows_per_dev,
                         g.degrees.astype(np.float32)[:, None])[:, 0]
@@ -165,11 +167,28 @@ class GNNEngine:
         spec = P(self.axis_name) if x.ndim == 1 else P(self.axis_name, None)
         return jax.device_put(x, NamedSharding(self.mesh, spec))
 
+    def stage_topk(self, layer: int) -> Optional[int]:
+        """Effective top-k compression for aggregation stage ``layer``:
+        hidden layers only — layer 0's inputs aren't ours to sparsify, so
+        the input layer always rides the dense ring."""
+        return self.layer_plan(layer).topk if layer >= 1 else None
+
     # -- aggregation ---------------------------------------------------------
 
     def aggregate(self, x: jax.Array, layer: int = 0,
-                  update_w: Optional[jax.Array] = None) -> jax.Array:
+                  update_w: Optional[jax.Array] = None,
+                  topk: Optional[int] = None) -> jax.Array:
         lp = self.layer_plan(layer)
+        if topk:
+            return mgg_aggregate_sparse(
+                x, lp.plan, self.mesh,
+                k=int(topk),
+                axis_name=self.axis_name,
+                interleave=lp.interleave,
+                use_kernel=self.use_kernel,
+                pb=lp.pb,
+                update_w=update_w,
+            )
         return mgg_aggregate(
             x, lp.plan, self.mesh,
             axis_name=self.axis_name,
@@ -179,23 +198,42 @@ class GNNEngine:
             update_w=update_w,
         )
 
-    def aggregate_update(self, x: jax.Array, w: jax.Array,
-                         layer: int = 0) -> jax.Array:
+    def aggregate_update(self, x: jax.Array, w: jax.Array, layer: int = 0,
+                         topk: Optional[int] = None) -> jax.Array:
         """Fused ``(A x) @ W``: the update matmul runs inside the ring."""
-        return self.aggregate(x, layer=layer, update_w=w)
+        return self.aggregate(x, layer=layer, update_w=w, topk=topk)
+
+    def aggregate_sparse(self, x: jax.Array, k: int, layer: int = 0,
+                         update_w: Optional[jax.Array] = None) -> jax.Array:
+        """Explicit-k sparse aggregation (``aggregate`` with ``topk=k``)."""
+        return self.aggregate(x, layer=layer, update_w=update_w, topk=k)
 
     def aggregate_streamed(self, tiered, layer: int = 0,
                            update_w: Optional[jax.Array] = None,
+                           topk: Optional[int] = None,
                            stats: Optional[Dict] = None,
                            tracer=None) -> jax.Array:
         """Partial-resident aggregation: chunks are pulled on demand from
         a :class:`repro.store.TieredFeatures` (host store + device hot
         cache), with each tile's host→device gather prefetched while the
         previous tile's ring is in flight — see
-        :func:`repro.core.pipeline.mgg_aggregate_streamed`."""
+        :func:`repro.core.pipeline.mgg_aggregate_streamed`.  ``topk``
+        additionally compresses each landed chunk so the in-flight rings
+        carry the sparse payload (mgg_aggregate_sparse_streamed)."""
         lp = self.layer_plan(layer)
         if tiered.plan is not lp.plan:
             tiered.set_plan(lp.plan)
+        if topk:
+            return mgg_aggregate_sparse_streamed(
+                tiered.chunk_fetcher(), lp.plan, self.mesh,
+                k=int(topk),
+                axis_name=self.axis_name,
+                use_kernel=self.use_kernel,
+                pb=lp.pb,
+                update_w=update_w,
+                stats=stats,
+                tracer=tracer,
+            )
         return mgg_aggregate_streamed(
             tiered.chunk_fetcher(), lp.plan, self.mesh,
             axis_name=self.axis_name,
@@ -206,26 +244,31 @@ class GNNEngine:
             tracer=tracer,
         )
 
-    def gcn_norm_aggregate(self, x: jax.Array, layer: int = 0) -> jax.Array:
+    def gcn_norm_aggregate(self, x: jax.Array, layer: int = 0,
+                           topk: Optional[int] = None) -> jax.Array:
         """Â x with Â = D^{-1/2}(A+I)D^{-1/2} (self-loops already in plan)."""
         dinv = jax.lax.rsqrt(self.deg)[:, None].astype(x.dtype)
-        return self.aggregate(x * dinv, layer=layer) * dinv
+        return self.aggregate(x * dinv, layer=layer, topk=topk) * dinv
 
     def gcn_norm_aggregate_update(self, x: jax.Array, w: jax.Array,
-                                  layer: int = 0) -> jax.Array:
+                                  layer: int = 0,
+                                  topk: Optional[int] = None) -> jax.Array:
         """Fused ``(Â x) @ W``: the left diagonal scaling commutes with the
         right matmul, so ``D^{-1/2}((A (D^{-1/2} x)) W)`` is exact."""
         dinv = jax.lax.rsqrt(self.deg)[:, None].astype(x.dtype)
-        return self.aggregate_update(x * dinv, w, layer=layer) * dinv
+        return self.aggregate_update(x * dinv, w, layer=layer, topk=topk) \
+            * dinv
 
-    def mean_aggregate(self, x: jax.Array, layer: int = 0) -> jax.Array:
-        return self.aggregate(x, layer=layer) \
+    def mean_aggregate(self, x: jax.Array, layer: int = 0,
+                       topk: Optional[int] = None) -> jax.Array:
+        return self.aggregate(x, layer=layer, topk=topk) \
             / self.deg[:, None].astype(x.dtype)
 
     def mean_aggregate_update(self, x: jax.Array, w: jax.Array,
-                              layer: int = 0) -> jax.Array:
+                              layer: int = 0,
+                              topk: Optional[int] = None) -> jax.Array:
         """Fused ``(D^{-1} A x) @ W`` (same commutation as gcn_norm)."""
-        return self.aggregate_update(x, w, layer=layer) \
+        return self.aggregate_update(x, w, layer=layer, topk=topk) \
             / self.deg[:, None].astype(x.dtype)
 
 
@@ -268,15 +311,17 @@ def gcn_stage(params: Dict, engine: GNNEngine, h: jax.Array,
     n = len(params["layers"])
     layer = params["layers"][i]
     d_in, d_out = layer["w"].shape
+    tk = engine.stage_topk(i)  # hidden layers may ride the sparse ring
     if engine.layer_plan(i).fuse_update:
-        h = engine.gcn_norm_aggregate_update(h, layer["w"], layer=i) \
-            + layer["b"]
+        h = engine.gcn_norm_aggregate_update(h, layer["w"], layer=i,
+                                             topk=tk) + layer["b"]
     elif d_in >= d_out:
         # transform-first; bias after aggregation (PyG convention) so all
         # three dataflows compute identical math up to summation order
-        h = engine.gcn_norm_aggregate(h @ layer["w"], layer=i) + layer["b"]
+        h = engine.gcn_norm_aggregate(h @ layer["w"], layer=i, topk=tk) \
+            + layer["b"]
     else:
-        h = _dense(layer, engine.gcn_norm_aggregate(h, layer=i))
+        h = _dense(layer, engine.gcn_norm_aggregate(h, layer=i, topk=tk))
     if i < n - 1:
         h = jax.nn.relu(h)
     return h
@@ -317,12 +362,13 @@ def gin_stage(params: Dict, engine: GNNEngine, h: jax.Array,
     if i == len(params["layers"]):
         return _dense(params["head"], h)
     layer = params["layers"][i]
+    tk = engine.stage_topk(i)  # sparse ring for hidden layers; self term dense
     if engine.layer_plan(i).fuse_update:
-        z = engine.aggregate_update(h, layer["mlp1"]["w"], layer=i) \
+        z = engine.aggregate_update(h, layer["mlp1"]["w"], layer=i, topk=tk) \
             + layer["eps"] * (h @ layer["mlp1"]["w"]) + layer["mlp1"]["b"]
         z = jax.nn.relu(z)
     else:
-        agg = engine.aggregate(h, layer=i)  # Σ nbrs (+ self via self-loops)
+        agg = engine.aggregate(h, layer=i, topk=tk)  # Σ nbrs (+ self-loop)
         z = agg + layer["eps"] * h  # (1+ε)h + Σ_{u∈N(v)}: self-loop gives 1·h
         z = jax.nn.relu(_dense(layer["mlp1"], z))
     return jax.nn.relu(_dense(layer["mlp2"], z))
@@ -349,11 +395,12 @@ def sage_init(key, in_dim: int, num_classes: int, hidden: int = 32,
 def sage_stage(params: Dict, engine: GNNEngine, h: jax.Array,
                i: int) -> jax.Array:
     layer = params["layers"][i]
+    tk = engine.stage_topk(i)  # sparse ring for hidden layers; self path dense
     if engine.layer_plan(i).fuse_update:
-        nbr = engine.mean_aggregate_update(h, layer["nbr"]["w"], layer=i) \
-            + layer["nbr"]["b"]
+        nbr = engine.mean_aggregate_update(h, layer["nbr"]["w"], layer=i,
+                                           topk=tk) + layer["nbr"]["b"]
     else:
-        nbr = _dense(layer["nbr"], engine.mean_aggregate(h, layer=i))
+        nbr = _dense(layer["nbr"], engine.mean_aggregate(h, layer=i, topk=tk))
     h = _dense(layer["self"], h) + nbr
     if i < len(params["layers"]) - 1:
         h = jax.nn.relu(h)
@@ -402,7 +449,9 @@ def gat_stage(params: Dict, engine: GNNEngine, h: jax.Array,
               i: int) -> jax.Array:
     # GAT's dense W is applied BEFORE aggregation (attention needs Wh per
     # source), so there is no post-aggregation update to fuse: the layer's
-    # fuse_update flag is a no-op and fused == unfused bitwise.
+    # fuse_update flag is a no-op and fused == unfused bitwise.  topk is
+    # likewise not honoured: zeroing entries of the e^s attention numerator
+    # and denominator aggregations would bias the softmax, not sparsify it.
     layer = params["layers"][i]
     nh = layer["a_l"].shape[0]                 # heads (static)
     z = _dense(layer["w"], h)                  # (N, H·hd)

@@ -48,12 +48,18 @@ from .placement import AggregationPlan
 
 __all__ = [
     "mgg_aggregate",
+    "mgg_aggregate_sparse",
     "mgg_aggregate_streamed",
+    "mgg_aggregate_sparse_streamed",
+    "topk_activation",
+    "topk_decompress",
+    "wire_index_dtype",
     "bulk_aggregate",
     "fetch_rows_aggregate",
     "plan_device_arrays",
     "reference_aggregate",
     "collective_bytes",
+    "sparse_collective_bytes",
 ]
 
 
@@ -80,6 +86,68 @@ def _gather_sum(buf: jax.Array, nbrs: jax.Array, mask: jax.Array,
     return jnp.sum(
         g.astype(acc_dtype) * mask[..., None].astype(acc_dtype), axis=1
     )
+
+
+# ---------------------------------------------------------------------------
+# top-k activation compression (MaxK-GNN direction)
+# ---------------------------------------------------------------------------
+
+def topk_activation(x: jax.Array, k: int):
+    """Keep the ``k`` largest entries per row: ``x → (values, col_idx)``.
+
+    The compressed form is CSR-style with a *fixed* shape ``(N, k)`` —
+    ``values[n, s] = x[n, col_idx[n, s]]`` — so jit caches stay warm across
+    steps regardless of which columns survive.  ``lax.top_k`` guarantees the
+    ``k`` column ids of a row are distinct, which is what makes
+    :func:`topk_decompress` an exact (bitwise) inverse at ``k == D`` and
+    order-independent for any ``k``.
+    """
+    values, idx = lax.top_k(x, k)
+    return values, idx.astype(jnp.int32)
+
+
+def wire_index_dtype(d_feat: int):
+    """Narrowest integer dtype that can address a column of width ``d_feat``.
+
+    The column-id half of the compressed payload travels the ring in this
+    dtype: int16 covers every realistic feature width and keeps the wire
+    cost of a ``(value, idx)`` pair at 6 bytes instead of 8.
+    """
+    return jnp.int16 if d_feat <= np.iinfo(np.int16).max else jnp.int32
+
+
+def topk_decompress(values: jax.Array, idx: jax.Array, d_feat: int) -> jax.Array:
+    """Inverse of :func:`topk_activation`: ``(N, k) → (N, d_feat)`` dense.
+
+    Each row's column ids are distinct (a top-k guarantee), so every output
+    slot is written at most once: the scatter is deterministic, bitwise
+    invariant to any permutation of the compressed columns, and — at
+    ``k == d_feat`` — an exact identity.
+    """
+    rows = values.shape[0]
+    out = jnp.zeros((rows, d_feat), values.dtype)
+    rr = jnp.arange(rows, dtype=jnp.int32)[:, None]
+    return out.at[rr, idx.astype(jnp.int32)].set(values)
+
+
+def _sparse_gather_sum(values: jax.Array, idx: jax.Array, nbrs: jax.Array,
+                       mask: jax.Array, d_feat: int, use_kernel: bool,
+                       acc_dtype, pb: Optional[int] = None) -> jax.Array:
+    """Sparse analogue of :func:`_gather_sum` over compressed rows.
+
+    ``use_kernel`` routes to the sparse Pallas kernel, which reads only the
+    ``k`` live ``(value, col)`` pairs per neighbor row (the MaxK-GNN
+    co-design); the jnp path decompresses the buffer once and reuses the
+    dense oracle, so at ``k == d_feat`` it is bitwise-equal to the dense
+    pipeline.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.sparse_neighbor_gather_sum(
+            values, idx, nbrs, mask, d_feat=d_feat, acc_dtype=acc_dtype)
+    return _gather_sum(topk_decompress(values, idx, d_feat), nbrs, mask,
+                       False, acc_dtype, pb)
 
 
 def plan_device_arrays(plan: AggregationPlan) -> Dict[str, np.ndarray]:
@@ -248,6 +316,152 @@ def _mgg_shard_body(
         out = step_work(out, cur, (n_dev - 2) * dist + c)  # epilogue (drain)
 
     return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MGG sparse ring aggregation: top-k compressed payload on the wire
+# ---------------------------------------------------------------------------
+
+def mgg_aggregate_sparse(
+    x: jax.Array,
+    plan: AggregationPlan,
+    mesh: Mesh,
+    *,
+    k: int,
+    axis_name: str = "ring",
+    interleave: bool = True,
+    use_kernel: bool = False,
+    acc_dtype=jnp.float32,
+    pb: Optional[int] = None,
+    update_w: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Sparse-payload variant of :func:`mgg_aggregate`.
+
+    ``x`` is first compressed row-wise with :func:`topk_activation`; the
+    ring then ppermutes the ``(values, col_idx)`` pair — ``k · (4 + 2)``
+    bytes per row instead of ``D · 4`` — and every step decompresses its
+    arriving tile *inside* the step before the same fixed-order masked
+    gather+reduce the dense path runs.  The schedule (chunk-major rings,
+    interleaved local slices, fused ``·W``) is byte-for-byte the dense
+    one's, so:
+
+    * at ``k == D`` the output is **bitwise-equal** to dense
+      :func:`mgg_aggregate` (decompression is an exact inverse);
+    * at ``k < D`` the output is the deterministic aggregation of the
+      top-k-sparsified features — an accuracy/speed trade the caller (the
+      tuner's ``k_space``) opts into explicitly.
+    """
+    n_dev, dist, tile_rows = plan.n_dev, plan.dist, plan.tile_rows
+    d_feat = x.shape[1]
+    k = int(min(k, d_feat))
+    values, idx = topk_activation(x, k)
+    idx = idx.astype(wire_index_dtype(d_feat))
+    arrays = jax.tree.map(jnp.asarray, plan_device_arrays(plan))
+
+    body = functools.partial(
+        _mgg_sparse_shard_body,
+        axis_name=axis_name,
+        n_dev=n_dev,
+        dist=dist,
+        tile_rows=tile_rows,
+        d_feat=d_feat,
+        interleave=interleave,
+        use_kernel=use_kernel,
+        acc_dtype=acc_dtype,
+        pb=pb,
+        fused=update_w is not None,
+    )
+    in_specs = [P(axis_name), P(axis_name), _plan_specs(axis_name)]
+    args = [values, idx, arrays]
+    if update_w is not None:
+        in_specs.append(P(None, None))  # replicated update weight
+        args.append(update_w)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=P(axis_name),
+        check_vma=False,
+    )
+    return fn(*args)
+
+
+def _mgg_sparse_shard_body(
+    values, idx, arrays, w=None, *, axis_name, n_dev, dist, tile_rows,
+    d_feat, interleave, use_kernel, acc_dtype, pb=None, fused=False,
+):
+    """Mirror of :func:`_mgg_shard_body` over the compressed payload."""
+    l_nbrs = arrays["local_nbrs"][0]        # (PL, ps)
+    l_mask = arrays["local_mask"][0]
+    l_tgt = arrays["local_targets"][0]      # (PL,)
+    r_nbrs = arrays["remote_nbrs"][0]       # (S, PR, ps)
+    r_mask = arrays["remote_mask"][0]
+    r_tgt = arrays["remote_targets"][0]     # (S, PR)
+
+    rows, k = values.shape
+    if fused:
+        wacc = w.astype(acc_dtype)
+        d_out = wacc.shape[1]
+        update = lambda partial: partial @ wacc
+    else:
+        d_out = d_feat
+        update = lambda partial: partial
+    gather = lambda v, i, nb, mk: _sparse_gather_sum(
+        v, i, nb, mk, d_feat, use_kernel, acc_dtype, pb)
+    out = jnp.zeros((rows, d_out), acc_dtype)
+    if hasattr(lax, "pcast"):
+        out = lax.pcast(out, (axis_name,), to="varying")
+    else:  # older jax
+        out = lax.pvary(out, (axis_name,))
+    n_steps = r_nbrs.shape[0] if n_dev > 1 else 0
+
+    if interleave and n_steps > 0:
+        pl_total = l_nbrs.shape[0]
+        ls = -(-pl_total // n_steps)  # ceil: local partitions per ring step
+        pad = ls * n_steps - pl_total
+        l_nbrs_s = jnp.pad(l_nbrs, ((0, pad), (0, 0))).reshape(n_steps, ls, -1)
+        l_mask_s = jnp.pad(l_mask, ((0, pad), (0, 0))).reshape(n_steps, ls, -1)
+        l_tgt_s = jnp.pad(l_tgt, ((0, pad),)).reshape(n_steps, ls)
+    else:
+        out = out.at[l_tgt].add(update(gather(values, idx, l_nbrs, l_mask)))
+
+    if n_dev == 1:
+        return out.astype(values.dtype)
+
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    v_tiles = values.reshape(dist, tile_rows, k)
+    i_tiles = idx.reshape(dist, tile_rows, k)
+
+    def step_work(out, cur_v, cur_i, step):
+        nbrs = lax.dynamic_index_in_dim(r_nbrs, step, 0, keepdims=False)
+        mask = lax.dynamic_index_in_dim(r_mask, step, 0, keepdims=False)
+        tgt = lax.dynamic_index_in_dim(r_tgt, step, 0, keepdims=False)
+        out = out.at[tgt].add(update(gather(cur_v, cur_i, nbrs, mask)))
+        if interleave:
+            ln = lax.dynamic_index_in_dim(l_nbrs_s, step, 0, keepdims=False)
+            lm = lax.dynamic_index_in_dim(l_mask_s, step, 0, keepdims=False)
+            lt = lax.dynamic_index_in_dim(l_tgt_s, step, 0, keepdims=False)
+            out = out.at[lt].add(update(gather(values, idx, ln, lm)))
+        return out
+
+    # Same chunk-major double-buffered rings as the dense body — only the
+    # payload narrows: both halves of the compressed pair ride each rotation.
+    for c in range(dist):
+        cur_v = lax.ppermute(v_tiles[c], axis_name, perm)
+        cur_i = lax.ppermute(i_tiles[c], axis_name, perm)
+
+        def body(s, carry, c=c):
+            cur_v, cur_i, out = carry
+            nxt_v = lax.ppermute(cur_v, axis_name, perm)  # rotation s+2
+            nxt_i = lax.ppermute(cur_i, axis_name, perm)  # — no dep on the
+            out = step_work(out, cur_v, cur_i, s * dist + c)  # aggregation
+            return (nxt_v, nxt_i, out)
+
+        cur_v, cur_i, out = lax.fori_loop(
+            0, n_dev - 2, body, (cur_v, cur_i, out))
+        out = step_work(out, cur_v, cur_i, (n_dev - 2) * dist + c)
+
+    return out.astype(values.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -501,6 +715,223 @@ def _streamed_local_body(x, arrays, w=None, *, axis_name, use_kernel,
 
 
 # ---------------------------------------------------------------------------
+# MGG sparse streamed aggregation: compressed wire + tiered host features
+# ---------------------------------------------------------------------------
+
+def mgg_aggregate_sparse_streamed(
+    fetch_chunk,
+    plan: AggregationPlan,
+    mesh: Mesh,
+    *,
+    k: int,
+    axis_name: str = "ring",
+    use_kernel: bool = False,
+    acc_dtype=jnp.float32,
+    pb: Optional[int] = None,
+    update_w: Optional[jax.Array] = None,
+    stats: Optional[dict] = None,
+    tracer=None,
+) -> jax.Array:
+    """Sparse-payload variant of :func:`mgg_aggregate_streamed`.
+
+    ``fetch_chunk`` keeps the dense contract (it sources rows from the
+    tiered store); each chunk is compressed on device with
+    :func:`topk_activation` right after it lands, so the ring rotations —
+    the part the host prefetch overlaps — carry the narrow
+    ``(values, col_idx)`` pair.  The local pass runs over the assembled
+    compressed shard.  Sum order matches the dense streamed path exactly,
+    so at ``k == D`` the output is bitwise-equal to
+    :func:`mgg_aggregate_streamed` at any cache capacity.
+    """
+    n_dev, dist, tile_rows = plan.n_dev, plan.dist, plan.tile_rows
+    arrays = jax.tree.map(jnp.asarray, plan_device_arrays(plan))
+    if stats is not None:
+        stats.setdefault("prefetch_issued", 0)
+        stats.setdefault("prefetch_inflight", 0)
+    tracing = tracer is not None and tracer.enabled
+
+    fused = update_w is not None
+    extra = (update_w,) if fused else ()
+    v_chunks = []
+    i_chunks = []
+    partials = []
+    compress = None
+    d_feat = None
+
+    def _land(chunk):
+        """Compress a freshly fetched dense chunk on device."""
+        nonlocal compress, d_feat
+        if compress is None:
+            d_feat = int(chunk.shape[1])
+            wire = jnp.dtype(wire_index_dtype(d_feat)).name
+            compress = _sparse_compress_fn(mesh, axis_name,
+                                           int(min(k, d_feat)), wire)
+        return compress(chunk)
+
+    if tracing:
+        t_start = tracer.now()
+        t0 = tracer.now()
+        cur = _land(fetch_chunk(0))
+        t_fill = tracer.now() - t0             # pipeline fill (not hidden)
+        tracer.complete("mgg.stream.fetch", t0, t0 + t_fill,
+                        cat="mgg", args={"chunk": 0, "fill": True})
+    else:
+        cur = _land(fetch_chunk(0))            # pipeline fill (not hidden)
+    for c in range(dist):
+        v_chunks.append(cur[0])
+        i_chunks.append(cur[1])
+        if n_dev > 1:
+            ring = _sparse_streamed_ring_fn(
+                mesh, axis_name, n_dev, dist, c, d_feat,
+                use_kernel, acc_dtype, pb, fused)
+            if tracing:
+                with tracer.span("mgg.stream.ring", cat="mgg", chunk=c,
+                                 dist=dist, n_dev=n_dev, sparse_k=k):
+                    partials.append(ring(cur[0], cur[1], arrays, *extra))
+            else:
+                partials.append(ring(cur[0], cur[1], arrays, *extra))
+        if c + 1 < dist:
+            if tracing:
+                with tracer.span("mgg.stream.fetch", cat="mgg",
+                                 chunk=c + 1, fill=False):
+                    cur = _land(fetch_chunk(c + 1))
+            else:
+                cur = _land(fetch_chunk(c + 1))
+            if stats is not None:
+                stats["prefetch_issued"] += 1
+                last = partials[-1] if partials else None
+                if last is not None and hasattr(last, "is_ready") \
+                        and not last.is_ready():
+                    stats["prefetch_inflight"] += 1
+
+    assemble = _streamed_assemble_fn(mesh, axis_name, n_dev, dist)
+    v_full = assemble(*v_chunks)
+    i_full = assemble(*i_chunks)
+    local = _sparse_streamed_local_fn(mesh, axis_name, d_feat, use_kernel,
+                                      acc_dtype, pb, fused)
+    if tracing:
+        with tracer.span("mgg.stream.local", cat="mgg", dist=dist):
+            out = local(v_full, i_full, arrays, *extra)
+    else:
+        out = local(v_full, i_full, arrays, *extra)
+    for p in partials:                         # fixed order ⇒ deterministic
+        out = out + p
+    out = out.astype(v_chunks[0].dtype)
+    if tracing:
+        t0 = tracer.now()
+        jax.block_until_ready(out)
+        t_drain = tracer.now() - t0
+        tracer.complete("mgg.stream.drain", t0, t0 + t_drain, cat="mgg")
+        total = tracer.now() - t_start
+        exposed = t_fill + t_drain
+        overlap = max(0.0, 1.0 - exposed / total) if total > 0 else 0.0
+        tracer.complete("mgg.stream.aggregate", t_start, t_start + total,
+                        cat="mgg",
+                        args={"dist": dist, "n_dev": n_dev, "sparse_k": k,
+                              "overlap_efficiency": overlap,
+                              "exposed_s": exposed, "total_s": total})
+        if stats is not None:
+            stats["overlap_efficiency"] = overlap
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_compress_fn(mesh, axis_name, k, wire_dtype_name):
+    """jitted per-chunk row-wise top-k compression, sharding-preserving."""
+    def compress(chunk):
+        values, idx = lax.top_k(chunk, k)
+        return values, idx.astype(jnp.dtype(wire_dtype_name))
+
+    sharding = NamedSharding(mesh, P(axis_name))
+    return jax.jit(compress, out_shardings=(sharding, sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_streamed_ring_fn(mesh, axis_name, n_dev, dist, chunk, d_feat,
+                             use_kernel, acc_dtype, pb, fused):
+    body = functools.partial(
+        _sparse_streamed_chunk_body, axis_name=axis_name, n_dev=n_dev,
+        dist=dist, chunk=chunk, d_feat=d_feat, use_kernel=use_kernel,
+        acc_dtype=acc_dtype, pb=pb, fused=fused,
+    )
+    in_specs = [P(axis_name), P(axis_name), _plan_specs(axis_name)]
+    if fused:
+        in_specs.append(P(None, None))
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                                 out_specs=P(axis_name), check_vma=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_streamed_local_fn(mesh, axis_name, d_feat, use_kernel, acc_dtype,
+                              pb, fused):
+    body = functools.partial(
+        _sparse_streamed_local_body, axis_name=axis_name, d_feat=d_feat,
+        use_kernel=use_kernel, acc_dtype=acc_dtype, pb=pb, fused=fused,
+    )
+    in_specs = [P(axis_name), P(axis_name), _plan_specs(axis_name)]
+    if fused:
+        in_specs.append(P(None, None))
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                                 out_specs=P(axis_name), check_vma=False))
+
+
+def _sparse_streamed_chunk_body(v_tile, i_tile, arrays, w=None, *, axis_name,
+                                n_dev, dist, chunk, d_feat, use_kernel,
+                                acc_dtype, pb=None, fused=False):
+    """One chunk's remote ring over the compressed payload."""
+    r_nbrs = arrays["remote_nbrs"][0]       # (S, PR, ps)
+    r_mask = arrays["remote_mask"][0]
+    r_tgt = arrays["remote_targets"][0]
+    rows = dist * v_tile.shape[0]           # shard height = dist · tile_rows
+    update, d_out = _streamed_init(w, d_feat, acc_dtype, fused)
+    out = jnp.zeros((rows, d_out), acc_dtype)
+    if hasattr(lax, "pcast"):
+        out = lax.pcast(out, (axis_name,), to="varying")
+    else:  # older jax
+        out = lax.pvary(out, (axis_name,))
+
+    def step(out, cur_v, cur_i, idx):
+        nbrs = lax.dynamic_index_in_dim(r_nbrs, idx, 0, keepdims=False)
+        mask = lax.dynamic_index_in_dim(r_mask, idx, 0, keepdims=False)
+        tgt = lax.dynamic_index_in_dim(r_tgt, idx, 0, keepdims=False)
+        return out.at[tgt].add(update(_sparse_gather_sum(
+            cur_v, cur_i, nbrs, mask, d_feat, use_kernel, acc_dtype, pb)))
+
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    cur_v = lax.ppermute(v_tile, axis_name, perm)  # rotation 1 (prologue)
+    cur_i = lax.ppermute(i_tile, axis_name, perm)
+
+    def body(s, carry):
+        cur_v, cur_i, out = carry
+        nxt_v = lax.ppermute(cur_v, axis_name, perm)   # rotation s+2 — no dep
+        nxt_i = lax.ppermute(cur_i, axis_name, perm)
+        out = step(out, cur_v, cur_i, s * dist + chunk)
+        return (nxt_v, nxt_i, out)
+
+    cur_v, cur_i, out = lax.fori_loop(0, n_dev - 2, body,
+                                      (cur_v, cur_i, out))
+    out = step(out, cur_v, cur_i, (n_dev - 2) * dist + chunk)
+    return out
+
+
+def _sparse_streamed_local_body(values, idx, arrays, w=None, *, axis_name,
+                                d_feat, use_kernel, acc_dtype, pb=None,
+                                fused=False):
+    """The local pass over the assembled compressed shard (runs last)."""
+    l_nbrs = arrays["local_nbrs"][0]
+    l_mask = arrays["local_mask"][0]
+    l_tgt = arrays["local_targets"][0]
+    update, d_out = _streamed_init(w, d_feat, acc_dtype, fused)
+    out = jnp.zeros((values.shape[0], d_out), acc_dtype)
+    if hasattr(lax, "pcast"):
+        out = lax.pcast(out, (axis_name,), to="varying")
+    else:  # older jax
+        out = lax.pvary(out, (axis_name,))
+    return out.at[l_tgt].add(update(_sparse_gather_sum(
+        values, idx, l_nbrs, l_mask, d_feat, use_kernel, acc_dtype, pb)))
+
+
+# ---------------------------------------------------------------------------
 # Baseline 1: bulk all-gather + local aggregation (DGCL / NCCL pattern)
 # ---------------------------------------------------------------------------
 
@@ -591,3 +1022,15 @@ def collective_bytes(plan: AggregationPlan, d_feat: int, itemsize: int = 4) -> i
     if plan.n_dev <= 1:
         return 0
     return (plan.n_dev - 1) * plan.rows_per_dev * d_feat * itemsize
+
+
+def sparse_collective_bytes(plan: AggregationPlan, d_feat: int, k: int,
+                            itemsize: int = 4) -> int:
+    """Ring bytes of the compressed payload: (n-1) rotations of the
+    ``(values, col_idx)`` pair — ``k`` values plus ``k`` column ids in the
+    wire index dtype (int16 when ``D`` fits) per row."""
+    if plan.n_dev <= 1:
+        return 0
+    idx_itemsize = jnp.dtype(wire_index_dtype(d_feat)).itemsize
+    k = min(int(k), int(d_feat))
+    return (plan.n_dev - 1) * plan.rows_per_dev * k * (itemsize + idx_itemsize)

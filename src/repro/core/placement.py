@@ -286,13 +286,19 @@ class LayerPlan:
     * ``pb``         — the paper's wpb: kernel partition-block height;
     * ``fuse_update`` — run this layer's dense ``·W`` update *inside* the
       ring (one partial matmul per tile), so update FLOPs overlap the next
-      tile's transfer (pipeline.mgg_aggregate ``update_w``).
+      tile's transfer (pipeline.mgg_aggregate ``update_w``);
+    * ``topk``       — top-k activation compression: the ring ppermutes the
+      compressed ``(values, col_idx)`` payload instead of dense tiles
+      (pipeline.mgg_aggregate_sparse).  ``None``/0 = dense.  Model stages
+      honour it for hidden layers only — layer 0's inputs aren't ours to
+      sparsify.
     """
 
     plan: AggregationPlan
     interleave: bool = True
     pb: Optional[int] = None
     fuse_update: bool = False
+    topk: Optional[int] = None
 
     @property
     def config(self) -> Dict[str, int]:
@@ -308,12 +314,13 @@ def build_layer_plans(
     partition: Optional[SharedPartition] = None,
     interleave: bool = True,
     fuse_update: bool = False,
+    topk: Optional[int] = None,
 ) -> List[LayerPlan]:
     """Per-layer plans from ONE shared partition.
 
     ``configs`` is one dict per layer with keys ``ps`` and ``dist`` (and
-    optionally ``pb``, ``interleave``, ``fuse_update`` overriding the
-    call-level defaults).  All plans share the partition's neighbor tables
+    optionally ``pb``, ``interleave``, ``fuse_update``, ``topk`` overriding
+    the call-level defaults).  All plans share the partition's neighbor tables
     and — because shard heights are padded to the lcm of every layer's
     ``dist`` — one PGAS embedding layout, so activations flow between
     layers without re-padding.  Layers with identical ``(ps, dist)`` share
@@ -335,11 +342,13 @@ def build_layer_plans(
             memo[key] = plan_from_partition(part, ps=key[0], dist=key[1],
                                             rows_multiple=lcm)
         pb = cfg.get("pb")
+        tk = cfg.get("topk", topk)
         out.append(LayerPlan(
             plan=memo[key],
             interleave=bool(cfg.get("interleave", interleave)),
             pb=int(pb) if pb is not None else None,
             fuse_update=bool(cfg.get("fuse_update", fuse_update)),
+            topk=int(tk) if tk else None,
         ))
     return out
 

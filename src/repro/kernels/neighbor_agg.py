@@ -27,6 +27,13 @@ Both compute ``out[p] = Σ_j mask[p, j] · buf[nbrs[p, j]]`` in fp32 and are
 validated against ``ref.neighbor_gather_sum_ref`` in interpret mode (CPU)
 across shape/dtype sweeps (tests/test_kernels.py).
 
+A third, sparse design serves the top-k compressed pipeline
+(core/pipeline.py `mgg_aggregate_sparse`): :func:`sparse_gather_sum_call`
+streams each neighbor row's ``(values, col_idx)`` pair — k lanes instead of
+D — through the same scalar-prefetch double buffer and expands it into the
+output column block with a one-hot contraction, so the DMA volume scales
+with k (the MaxK-GNN kernel/sparsity co-design).
+
 VMEM accounting (the SMEM ≤ 164 KB analogue, checked by ops.py):
   pipelined: 2 · (1 · db) · 4  (double-buffered row blocks) + (1 · db) · 4
   blocked:   tile_rows · db · 4 (buffer stripe) + pb · db · 4 + ids in SMEM
@@ -41,7 +48,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gather_sum_pipelined_call", "gather_sum_blocked_call"]
+__all__ = ["gather_sum_pipelined_call", "gather_sum_blocked_call",
+           "sparse_gather_sum_call"]
 
 
 # ---------------------------------------------------------------------------
@@ -99,6 +107,76 @@ def gather_sum_pipelined_call(
         ),
     )
     return fn(nbrs, mask, buf)
+
+
+# ---------------------------------------------------------------------------
+# Variant 3: sparse (top-k compressed) scalar-prefetch gather
+# ---------------------------------------------------------------------------
+
+def _sparse_pipelined_kernel(nbrs_ref, mask_ref, val_blk, idx_blk, out_blk,
+                             *, db):
+    """Grid (P, KD, ps): scatter one neighbor's k live columns per step.
+
+    Each step streams one neighbor row's *compressed* ``(values, col_idx)``
+    pair — ``k`` lanes instead of ``D`` — through the double buffer, and
+    expands the pairs landing in this ``db``-wide output column block with a
+    compare-against-iota one-hot contraction (the decompress runs on the MXU,
+    the DMA only ever moves the k live pairs: the MaxK-GNN co-design).
+    """
+    p = pl.program_id(0)
+    ki = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _zero():
+        out_blk[...] = jnp.zeros_like(out_blk)
+
+    m = mask_ref[p, j].astype(out_blk.dtype)
+    lane = lax.broadcasted_iota(jnp.int32, (1, db), 1) + ki * db
+    idx = idx_blk[...].astype(jnp.int32)               # (1, k)
+    vals = val_blk[...].astype(out_blk.dtype)          # (1, k)
+    onehot = (idx[0, :, None] == lane[0, None, :]).astype(out_blk.dtype)
+    out_blk[...] += m * jnp.dot(vals, onehot)          # (1, k) @ (k, db)
+
+
+def sparse_gather_sum_call(
+    values: jax.Array,  # (T, k)  compressed rows (k lane-padded)
+    idx: jax.Array,     # (T, k)  int32 column ids (pad slots carry value 0)
+    nbrs: jax.Array,    # (P, ps) int32 row ids into values/idx
+    mask: jax.Array,    # (P, ps) int32 validity (0/1)
+    *,
+    d: int,             # dense output width (multiple of db)
+    db: int,
+    acc_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    t, kc = values.shape
+    p, ps = nbrs.shape
+    assert d % db == 0, (d, db)
+    kd = d // db
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(p, kd, ps),
+        in_specs=[
+            # Both halves of the compressed pair gather the same row block,
+            # chosen by the prefetched neighbor table — one full compressed
+            # row per step, reused across the kd output column blocks.
+            pl.BlockSpec((1, kc), lambda pi, ki, ji, nbrs, mask: (nbrs[pi, ji], 0)),
+            pl.BlockSpec((1, kc), lambda pi, ki, ji, nbrs, mask: (nbrs[pi, ji], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, db), lambda pi, ki, ji, nbrs, mask: (pi, ki)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_sparse_pipelined_kernel, db=db),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, d), acc_dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+    )
+    return fn(nbrs, mask, values, idx)
 
 
 # ---------------------------------------------------------------------------

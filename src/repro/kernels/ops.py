@@ -18,9 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import neighbor_agg, ref
+from . import neighbor_agg, ref, rows
 
-__all__ = ["neighbor_gather_sum"]
+__all__ = ["neighbor_gather_sum", "sparse_neighbor_gather_sum",
+           "gather_rows"]
 
 _LANE = 128
 _VMEM_BUDGET = 12 * 2**20  # leave headroom below the ~16 MB/core ceiling
@@ -82,6 +83,89 @@ def _gather_sum_bwd(acc_dtype, pb, db, interpret, buf_rows, buf_dtype,
 
 
 _gather_sum.defvjp(_gather_sum_fwd, _gather_sum_bwd)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8)
+)
+def _sparse_gather_sum(values, idx, nbrs, maski, acc_dtype, d, db,
+                       interpret, val_dtype):
+    t, k = values.shape
+    d_pad = -(-d // _LANE) * _LANE
+    k_pad = -(-k // _LANE) * _LANE
+    # Column-pad the compressed pair: pad slots carry value 0 at column 0,
+    # which contributes nothing to the one-hot accumulation.
+    out = neighbor_agg.sparse_gather_sum_call(
+        _pad_cols(values, k_pad), _pad_cols(idx, k_pad), nbrs, maski,
+        d=d_pad, db=db, acc_dtype=acc_dtype, interpret=interpret,
+    )
+    return out[:, :d]
+
+
+def _sparse_gather_sum_fwd(values, idx, nbrs, maski, acc_dtype, d, db,
+                           interpret, val_dtype):
+    out = _sparse_gather_sum(values, idx, nbrs, maski, acc_dtype, d, db,
+                             interpret, val_dtype)
+    return out, (idx, nbrs, maski)
+
+
+def _sparse_gather_sum_bwd(acc_dtype, d, db, interpret, val_dtype, res, g):
+    (idx, nbrs, maski) = res
+    # d values = the dense scatter-add cotangent (as in _gather_sum_bwd)
+    # re-gathered at each row's k live columns; the column ids are non-diff.
+    gm = g.astype(acc_dtype)[:, None, :] * maski[..., None].astype(acc_dtype)
+    dbuf = jnp.zeros((idx.shape[0], g.shape[-1]), acc_dtype).at[nbrs].add(gm)
+    dval = jnp.take_along_axis(dbuf, idx.astype(jnp.int32), axis=1)
+    return (dval.astype(jnp.dtype(val_dtype)), None, None, None)
+
+
+_sparse_gather_sum.defvjp(_sparse_gather_sum_fwd, _sparse_gather_sum_bwd)
+
+
+def sparse_neighbor_gather_sum(
+    values: jax.Array,   # (T, k) compressed rows (topk_activation)
+    idx: jax.Array,      # (T, k) column ids (any int dtype)
+    nbrs: jax.Array,
+    mask: jax.Array,
+    *,
+    d_feat: int,
+    acc_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``out[p] = Σ_j mask[p, j] · decompress(values, idx)[nbrs[p, j]]``.
+
+    Sparse counterpart of :func:`neighbor_gather_sum`: the kernel's DMA
+    traffic is the k live ``(value, col)`` pairs per neighbor row, not the
+    D-wide dense row.  There is no blocked (``pb``) variant — the
+    compressed row is already narrow enough for the pipelined design.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d_pad = -(-d_feat // _LANE) * _LANE
+    db = _pick_db(d_pad)
+    maski = mask.astype(jnp.int32)
+    return _sparse_gather_sum(values, idx.astype(jnp.int32), nbrs, maski,
+                              jnp.dtype(acc_dtype).name, d_feat, db,
+                              interpret, jnp.dtype(values.dtype).name)
+
+
+def gather_rows(src: jax.Array, idx: jax.Array, *,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """``out[i] = src[idx[i]]`` via the Pallas row-gather kernel.
+
+    The tiered-feature chunk assembly's hot spot (store/tiered.py): a pure
+    row gather with no reduction, so the kernel is the scalar-prefetch
+    pipeline with a copy body — every row lands via the double-buffered DMA
+    engine instead of a host-side per-row scatter.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t, d = src.shape
+    d_pad = -(-d // _LANE) * _LANE
+    db = _pick_db(d_pad)
+    out = rows.gather_rows_call(_pad_cols(src, d_pad), idx.astype(jnp.int32),
+                                db=db, interpret=interpret)
+    return out[:, :d]
 
 
 def neighbor_gather_sum(

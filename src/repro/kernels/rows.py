@@ -1,0 +1,60 @@
+"""Pallas TPU row-gather kernel for tiered-feature chunk assembly.
+
+`TieredFeatures` (store/tiered.py) assembles each ring chunk's device
+buffer from two sources — the device-resident hot cache and a host-gathered
+cold batch.  The seed implementation placed rows with two host-side
+scatter (`.at[pos].set`) passes; this kernel inverts the formulation into
+a *gather*: for every output row, the scalar-prefetched selector table
+names the source row, and the grid streams the rows through the same
+double-buffered DMA pipeline the neighbor-aggregation kernels use — the
+Pallas analogue of the paper's zero-copy row fetch, and the same gather
+the sampled mini-batch path will want (ROADMAP).
+
+The kernel body is a copy; all the work is in the BlockSpec index map,
+which is exactly what makes the DMA engine do the gather.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_rows_call"]
+
+
+def _gather_rows_kernel(idx_ref, src_blk, out_blk):
+    del idx_ref  # consumed by the index maps
+    out_blk[...] = src_blk[...]
+
+
+def gather_rows_call(
+    src: jax.Array,   # (T, D) source table (D multiple of db)
+    idx: jax.Array,   # (B,)   int32 row ids into src
+    *,
+    db: int,
+    interpret: bool = False,
+) -> jax.Array:
+    t, d = src.shape
+    (b,) = idx.shape
+    assert d % db == 0, (d, db)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, d // db),
+        in_specs=[
+            # The gather: source block row chosen by the prefetched selector.
+            pl.BlockSpec((1, db), lambda i, kk, idx: (idx[i], kk)),
+        ],
+        out_specs=pl.BlockSpec((1, db), lambda i, kk, idx: (i, kk)),
+    )
+    fn = pl.pallas_call(
+        _gather_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), src.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )
+    return fn(idx, src)

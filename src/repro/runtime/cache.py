@@ -40,6 +40,11 @@ carries them — previously only the three schedule knobs round-tripped,
 so a re-opened search re-probed capacity and fuse from scratch.  v2
 files are discarded with the same one-time-per-path RuntimeWarning as
 v1 (tuning starts cold, never a crash).
+
+Schema v4 persists the sparsity knob: the top-k compression width
+(``k``, an int — see :func:`repro.core.pipeline.mgg_aggregate_sparse`)
+rides alongside the other knobs when the committed config carries it.
+v3 (and older) files are discarded the same way.
 """
 from __future__ import annotations
 
@@ -62,7 +67,7 @@ from repro.core.autotune import WorkloadShape
 __all__ = ["ConfigCache", "hardware_fingerprint", "shape_fingerprint",
            "layers_fingerprint"]
 
-_VERSION = 3
+_VERSION = 4
 
 _KNOBS = ("ps", "dist", "pb")
 
@@ -77,16 +82,20 @@ def _valid_cfg(cfg: Any) -> bool:
         return False
     if "cap" in cfg and not isinstance(cfg["cap"], int):
         return False
+    if "k" in cfg and not isinstance(cfg["k"], int):
+        return False
     if "fuse" in cfg and not isinstance(cfg["fuse"], bool):
         return False
     return True
 
 
 def _pack_cfg(cfg: Dict[str, Any]) -> Dict[str, Any]:
-    """The persisted knob set: (ps, dist, pb) plus the optional v3 knobs."""
+    """The persisted knob set: (ps, dist, pb) plus the optional v3/v4 knobs."""
     out: Dict[str, Any] = {k: int(cfg[k]) for k in _KNOBS}
     if "cap" in cfg:
         out["cap"] = int(cfg["cap"])
+    if "k" in cfg:
+        out["k"] = int(cfg["k"])
     if "fuse" in cfg:
         out["fuse"] = bool(cfg["fuse"])
     return out

@@ -156,6 +156,7 @@ class DynamicGNNEngine:
         dist_space: Tuple[int, ...] = DEFAULT_DIST,
         pb_space: Tuple[int, ...] = DEFAULT_PB,
         cap_space: Tuple[int, ...] = (),
+        k_space: Tuple[int, ...] = (),
         tune_fuse: bool = False,
         window: ProfileConfig = ProfileConfig(warmup=1, iters=3),
         cache_path: Optional[str] = None,
@@ -181,6 +182,13 @@ class DynamicGNNEngine:
         device-resident by :class:`repro.store.TieredFeatures`) a tuned
         knob — configs then carry a ``cap`` key, surfaced via
         :attr:`feature_capacity` for the storage layer to adopt.
+        ``k_space`` makes the top-k compression width of the sparse ring
+        payload (:func:`repro.core.pipeline.mgg_aggregate_sparse`) a tuned
+        knob — configs then carry a ``k`` key, applied to hidden layers
+        only (layer 0 stays dense; see :meth:`GNNEngine.stage_topk`).
+        Offer only widths whose accuracy the caller has validated: the
+        tuner's objective is latency, so it will take the narrowest
+        candidate that measures fastest.
         ``tune_fuse`` (per-layer mode only) probes flipping each layer's
         fused-update dataflow after its (ps, dist, pb) search settles;
         ``fuse_update`` remains the starting point for every layer."""
@@ -209,7 +217,7 @@ class DynamicGNNEngine:
             warm = cls._clamp_pb(warm, pb_space)
             tuner = PerLayerTuner(
                 len(shapes), ps_space, dist_space, pb_space,
-                cap_space=cap_space,
+                cap_space=cap_space, k_space=k_space,
                 fuse_space=((fuse_update, not fuse_update) if tune_fuse
                             else (fuse_update,)),
                 vmem_checks=[make_vmem_check(s, hw) for s in shapes],
@@ -223,6 +231,7 @@ class DynamicGNNEngine:
             warm = cls._clamp_pb(warm, pb_space)
             tuner = OnlineTuner(
                 ps_space, dist_space, pb_space, cap_space=cap_space,
+                k_space=k_space,
                 vmem_check=make_vmem_check(shape, hw),
                 budget=budget, drift_threshold=drift_threshold,
                 warm_start=warm,
@@ -255,11 +264,14 @@ class DynamicGNNEngine:
     def _build_engine(self, cfg: Dict) -> GNNEngine:
         def _lc(c):
             # "cap" is a storage-layer knob (see feature_capacity) and
-            # never reaches the plan; "fuse" selects the layer's dataflow.
+            # never reaches the plan; "fuse" selects the layer's dataflow;
+            # "k" is the sparse-payload width (0/absent ⇒ dense ring).
             lc = dict(ps=int(c["ps"]), dist=int(c["dist"]),
                       pb=int(c["pb"]) if self.use_kernel else None)
             if "fuse" in c:
                 lc["fuse_update"] = bool(c["fuse"])
+            if c.get("k"):
+                lc["topk"] = int(c["k"])
             return lc
 
         # The node split + locality split depend only on (graph, n_dev):
@@ -278,6 +290,7 @@ class DynamicGNNEngine:
                 self.graph, self.mesh, axis_name=self.axis_name,
                 ps=int(cfg["ps"]), dist=int(cfg["dist"]),
                 pb=int(cfg["pb"]) if self.use_kernel else None,
+                topk=int(cfg["k"]) if cfg.get("k") else None,
                 interleave=self.interleave, use_kernel=self.use_kernel,
                 self_loops=self.self_loops, fuse_update=self.fuse_update,
                 partition=self._partition,
@@ -330,29 +343,34 @@ class DynamicGNNEngine:
     def shard(self, x):
         return self.engine.shard(x)
 
-    def aggregate(self, x, layer: int = 0, update_w=None):
-        return self.engine.aggregate(x, layer=layer, update_w=update_w)
+    def aggregate(self, x, layer: int = 0, update_w=None, topk=None):
+        return self.engine.aggregate(x, layer=layer, update_w=update_w,
+                                     topk=topk)
 
-    def aggregate_update(self, x, w, layer: int = 0):
-        return self.engine.aggregate_update(x, w, layer=layer)
+    def aggregate_update(self, x, w, layer: int = 0, topk=None):
+        return self.engine.aggregate_update(x, w, layer=layer, topk=topk)
 
     def aggregate_streamed(self, tiered, layer: int = 0, update_w=None,
-                           stats=None, tracer=None):
+                           topk=None, stats=None, tracer=None):
         return self.engine.aggregate_streamed(
-            tiered, layer=layer, update_w=update_w, stats=stats,
+            tiered, layer=layer, update_w=update_w, topk=topk, stats=stats,
             tracer=tracer if tracer is not None else self.tracer)
 
-    def gcn_norm_aggregate(self, x, layer: int = 0):
-        return self.engine.gcn_norm_aggregate(x, layer=layer)
+    def stage_topk(self, layer: int):
+        return self.engine.stage_topk(layer)
 
-    def gcn_norm_aggregate_update(self, x, w, layer: int = 0):
-        return self.engine.gcn_norm_aggregate_update(x, w, layer=layer)
+    def gcn_norm_aggregate(self, x, layer: int = 0, topk=None):
+        return self.engine.gcn_norm_aggregate(x, layer=layer, topk=topk)
 
-    def mean_aggregate(self, x, layer: int = 0):
-        return self.engine.mean_aggregate(x, layer=layer)
+    def gcn_norm_aggregate_update(self, x, w, layer: int = 0, topk=None):
+        return self.engine.gcn_norm_aggregate_update(x, w, layer=layer,
+                                                     topk=topk)
 
-    def mean_aggregate_update(self, x, w, layer: int = 0):
-        return self.engine.mean_aggregate_update(x, w, layer=layer)
+    def mean_aggregate(self, x, layer: int = 0, topk=None):
+        return self.engine.mean_aggregate(x, layer=layer, topk=topk)
+
+    def mean_aggregate_update(self, x, w, layer: int = 0, topk=None):
+        return self.engine.mean_aggregate_update(x, w, layer=layer, topk=topk)
 
     # -- observability -------------------------------------------------------
 

@@ -93,7 +93,8 @@ class _AuditMixin:
                 out.append((cfg, lat))
         return out
 
-# (ps, dist, pb) — or (ps, dist, pb, cap) when a cap_space is configured
+# (ps, dist, pb) — extended with cap and/or k when the corresponding
+# spaces are configured: (ps, dist, pb[, cap][, k])
 Key = Tuple[int, ...]
 
 DEFAULT_PS = (1, 2, 4, 8, 16, 32)
@@ -135,6 +136,15 @@ class OnlineTuner(_AuditMixin):
     increase-until-no-improvement shape the paper's climb expects.  With
     a cap_space, config dicts carry a ``cap`` key and table keys are
     4-tuples; without one (the default) behavior is unchanged.
+
+    ``k_space`` (optional, top-k activation-compression widths for the
+    sparse ring payload — pipeline.mgg_aggregate_sparse) adds a further
+    climbed coordinate after ``cap``.  NOTE the tuner minimizes latency
+    alone, and smaller k is (almost) always faster — so the climb lands on
+    the smallest candidate.  ``k_space`` is therefore the caller's
+    *accuracy-approved* candidate set, not a free search dimension: every
+    value in it must already be acceptable accuracy-wise (the fig9 sparsity
+    row is the accuracy/speed evidence).  Config dicts carry a ``k`` key.
     """
 
     def __init__(
@@ -144,6 +154,7 @@ class OnlineTuner(_AuditMixin):
         pb_space: Tuple[int, ...] = DEFAULT_PB,
         *,
         cap_space: Tuple[int, ...] = (),
+        k_space: Tuple[int, ...] = (),
         vmem_check: Optional[Callable[[int, int, int], bool]] = None,
         top_k: int = 3,
         budget: Optional[int] = None,
@@ -155,6 +166,7 @@ class OnlineTuner(_AuditMixin):
         self.dist_space = tuple(sorted(dist_space))
         self.pb_space = tuple(sorted(pb_space))
         self.cap_space = tuple(sorted(cap_space))
+        self.k_space = tuple(sorted(k_space))
         self.vmem_check = vmem_check
         self.top_k = int(top_k)
         self.budget = budget
@@ -169,16 +181,20 @@ class OnlineTuner(_AuditMixin):
         self._init_audit(audit_sink)
         self.reset(warm_start=warm_start)
 
-    # -- knob/key mapping (3 knobs, or 4 with a cap_space) -------------------
+    # -- knob/key mapping (3 knobs, +cap and/or +k when configured) ----------
 
     @property
     def knobs(self) -> Tuple[str, ...]:
-        return ("ps", "dist", "pb") + (("cap",) if self.cap_space else ())
+        return ("ps", "dist", "pb") \
+            + (("cap",) if self.cap_space else ()) \
+            + (("k",) if self.k_space else ())
 
     def _key(self, cfg: Dict[str, int]) -> Key:
         key = (int(cfg["ps"]), int(cfg["dist"]), int(cfg["pb"]))
         if self.cap_space:
             key += (int(cfg.get("cap", self.cap_space[0])),)
+        if self.k_space:
+            key += (int(cfg.get("k", self.k_space[0])),)
         return key
 
     def _cfg(self, key: Key) -> Dict[str, int]:
@@ -313,13 +329,18 @@ class OnlineTuner(_AuditMixin):
         table, traj = self.table, self.trajectory
         caps = self.cap_space
         c0 = caps[0] if caps else None
+        ks = self.k_space
+        k0 = ks[0] if ks else None
 
-        def mget(ps: int, dist: int, pb: int, cap: Optional[int] = c0):
+        def mget(ps: int, dist: int, pb: int, cap: Optional[int] = c0,
+                 k: Optional[int] = k0):
             key = (int(ps), int(dist), int(pb)) \
-                + ((int(cap),) if caps else ())
+                + ((int(cap),) if caps else ()) \
+                + ((int(k),) if ks else ())
             if key not in table:
-                # the cap knob never touches VMEM (the feature cache lives
-                # in HBM), so feasibility is checked on (ps, dist, pb) only
+                # neither cap (feature cache lives in HBM) nor k (narrows
+                # the ring payload) touches VMEM, so feasibility is checked
+                # on (ps, dist, pb) only
                 if self.vmem_check is not None \
                         and not self.vmem_check(*key[:3]):
                     table[key] = math.inf
@@ -347,7 +368,7 @@ class OnlineTuner(_AuditMixin):
             # warm start: the cached optimum is measured first, so it seeds
             # the table (and is the committed answer if nothing beats it).
             yield from mget(warm["ps"], warm["dist"], warm["pb"],
-                            warm.get("cap", c0))
+                            warm.get("cap", c0), warm.get("k", k0))
 
         ps = yield from climb(self.ps_space, p0,
                               lambda v: mget(v, d0, b0))
@@ -360,15 +381,24 @@ class OnlineTuner(_AuditMixin):
             # capacity climbs LAST: it buys bandwidth with memory, so it
             # only moves once the schedule knobs have settled
             cap = yield from climb(caps, c0, lambda v: mget(ps, dist, pb, v))
+        kk = k0
+        if ks:
+            # k climbs after everything else: it trades accuracy for wire
+            # bytes, so it only moves on the settled schedule (and a pure
+            # latency objective keeps it at the space's floor — see the
+            # class docstring on k_space being accuracy-approved).
+            kk = yield from climb(ks, k0,
+                                  lambda v: mget(ps, dist, pb, cap, v))
 
         # Retreat rule: if pb never improved, drop ps one notch and retry pb
-        # (on the climbed cap, so the probes stay on the incumbent's slice).
+        # (on the climbed cap/k, so the probes stay on the incumbent's slice).
         if pb == b0 and ps != p0:
             ps_retreat = self.ps_space[max(0, self.ps_space.index(ps) - 1)]
             pb2 = yield from climb(self.pb_space, b0,
-                                   lambda v: mget(ps_retreat, dist, v, cap))
-            a = yield from mget(ps_retreat, dist, pb2, cap)
-            b = yield from mget(ps, dist, pb, cap)
+                                   lambda v: mget(ps_retreat, dist, v, cap,
+                                                  kk))
+            a = yield from mget(ps_retreat, dist, pb2, cap, kk)
+            b = yield from mget(ps, dist, pb, cap, kk)
             if a < b:
                 self._emit("retreat", ps_from=ps, ps_to=ps_retreat,
                            pb_from=pb, pb_to=pb2, latency=a)
@@ -393,7 +423,8 @@ class OnlineTuner(_AuditMixin):
         """Single-knob ±1-notch moves around ``key`` (deterministic order)."""
         out: List[Key] = []
         spaces = (self.ps_space, self.dist_space, self.pb_space) \
-            + ((self.cap_space,) if self.cap_space else ())
+            + ((self.cap_space,) if self.cap_space else ()) \
+            + ((self.k_space,) if self.k_space else ())
         for dim, space in enumerate(spaces):
             i = space.index(key[dim]) if key[dim] in space else None
             if i is None:
@@ -437,6 +468,12 @@ class PerLayerTuner(_AuditMixin):
     so only the global phase's sub-tuner climbs it; the committed ``cap``
     is then pinned into every layer config for the per-layer phases.
 
+    ``k_space`` does the same for the top-k sparse-ring payload width:
+    the global phase climbs ``k`` (over the caller's accuracy-approved
+    candidates — see :class:`OnlineTuner`) and the committed value is
+    pinned into every layer config.  Model stages apply it to hidden
+    layers only (layer 0 always rides the dense ring).
+
     Every ``observe`` is the latency of the FULL forward under the proposed
     per-layer configs, so each phase's table is a valid surface for its
     free layer.  The measurement ``budget`` is shared across all phases —
@@ -453,6 +490,7 @@ class PerLayerTuner(_AuditMixin):
         pb_space: Tuple[int, ...] = DEFAULT_PB,
         *,
         cap_space: Tuple[int, ...] = (),
+        k_space: Tuple[int, ...] = (),
         fuse_space: Tuple[bool, ...] = (False,),
         vmem_checks=None,   # None | callable | per-layer sequence of callables
         top_k: int = 3,
@@ -469,6 +507,7 @@ class PerLayerTuner(_AuditMixin):
         self.dist_space = tuple(sorted(dist_space))
         self.pb_space = tuple(sorted(pb_space))
         self.cap_space = tuple(sorted(cap_space))
+        self.k_space = tuple(sorted(k_space))
         self.fuse_space = tuple(dict.fromkeys(bool(f) for f in fuse_space))
         if not self.fuse_space:
             self.fuse_space = (False,)
@@ -748,6 +787,9 @@ class PerLayerTuner(_AuditMixin):
                 # capacity is a global resource: only the global phase's
                 # sub-tuner climbs it (pinned for per-layer phases)
                 cap_space=self.cap_space if self._sub_layer is None else (),
+                # k is likewise climbed globally: the paper's accuracy
+                # budget is end-to-end, so per-layer phases keep it pinned
+                k_space=self.k_space if self._sub_layer is None else (),
                 vmem_check=self._layer_check(self._sub_layer),
                 top_k=self.top_k, warm_start=warm,
             )

@@ -105,6 +105,7 @@ class GNNServeEngine:
         cache_capacity: Optional[int] = None,
         feature_store: Optional[FeatureStore] = None,
         feature_capacity: Optional[int] = None,
+        hotset_path: Optional[str] = None,
         log_fn: Callable[[str], None] = lambda _s: None,
         clock: Callable[[], float] = time.perf_counter,
         retune_gate: Optional[
@@ -198,6 +199,21 @@ class GNNServeEngine:
                                         labels=self.obs_labels)
             self.x = store.x   # the store owns the bits; keep a shared view
 
+        # hot-set persistence: the admitted global-id set survives serve
+        # restarts via a JSON sidecar next to the ConfigCache (explicit
+        # ``hotset_path`` overrides; no cache and no override ⇒ off).
+        # Only the IDS persist — the row bits are refetched from the
+        # store at warm admission, so a restart can never serve stale
+        # features.  Concurrent replicas write last-writer-wins, which
+        # is safe for the same reason: the sidecar is a warm-start hint,
+        # never a source of feature bits.
+        self._hotset_path = hotset_path
+        if self._hotset_path is None and self.dynamic \
+                and engine.cache is not None:
+            self._hotset_path = engine.cache.path + ".hotset.json"
+        if self.tiers is not None:
+            self._hotset_load()
+
         self.xp = None
         self._refresh_tables()
         self._build_steps()
@@ -223,6 +239,64 @@ class GNNServeEngine:
     @property
     def rebuilds(self) -> int:
         return self._c_rebuilds.value
+
+    # -- hot-set persistence --------------------------------------------------
+
+    def _hotset_load(self) -> None:
+        """Warm-admit the hot-id set a previous serve process persisted.
+
+        The sidecar is a hint: a missing/corrupt file, or one recorded
+        against a different store shape, is ignored (serving starts with
+        a cold tier, exactly as before this feature)."""
+        if self._hotset_path is None or not self.tiers.capacity:
+            return
+        import json
+
+        try:
+            with open(self._hotset_path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            return
+        if not isinstance(doc, dict) \
+                or doc.get("num_nodes") != self.tiers.store.num_nodes \
+                or doc.get("d_feat") != self.tiers.store.d_feat:
+            return
+        ids = doc.get("ids")
+        if not isinstance(ids, list):
+            return
+        ids = [int(i) for i in ids
+               if 0 <= int(i) < self.tiers.store.num_nodes]
+        if ids:
+            n = self.tiers.admit(ids)
+            self.log(f"[serve.gnn] warm hot set from {self._hotset_path}: "
+                     f"{n} rows admitted")
+
+    def _hotset_dump(self) -> None:
+        """Atomically persist the current admitted-id set (tmp+replace,
+        the ConfigCache discipline — a preempted writer never corrupts
+        the sidecar)."""
+        if self._hotset_path is None or self.tiers is None:
+            return
+        import json
+        import os
+        import tempfile
+
+        doc = dict(num_nodes=self.tiers.store.num_nodes,
+                   d_feat=self.tiers.store.d_feat,
+                   ids=[int(i) for i in self.tiers.cache.resident_ids()])
+        d = os.path.dirname(os.path.abspath(self._hotset_path)) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".hotset-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f)
+            os.replace(tmp, self._hotset_path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     # -- jit / layout management ---------------------------------------------
 
@@ -370,7 +444,10 @@ class GNNServeEngine:
             # this batch's assembly — a capacity-sized list, not the
             # drift-sized snapshot().hot_nodes.  admit() fetches only
             # newly-hot rows, so a stable hot set costs nothing here.
-            self.tiers.admit(self.stats.top_nodes(self.tiers.capacity))
+            if self.tiers.admit(self.stats.top_nodes(self.tiers.capacity)):
+                # admitted set moved: persist it for the next serve
+                # process (no-op write when the hot set is stable)
+                self._hotset_dump()
 
         # lookup() already scanned validity over exactly f_need (with the
         # table-None guard), so zero misses ⇔ the cached pass is safe

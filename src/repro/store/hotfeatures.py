@@ -157,6 +157,17 @@ class HotFeatureCache:
 
     # -- accounting ----------------------------------------------------------
 
+    def resident_ids(self) -> np.ndarray:
+        """Global node ids of the currently valid rows, ascending.
+
+        This is the cache's *admitted set* — what a serving engine
+        persists across restarts so the next process can re-admit the
+        same rows instead of starting cold (the row BITS are refetched
+        from the store at admission; only the ids survive)."""
+        if self.capacity == 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.sort(self._node_at[self._valid])
+
     @property
     def resident_rows(self) -> int:
         return int(self._valid.sum())

@@ -16,10 +16,11 @@ Two consumers:
   ``device_put`` upload overlap the in-flight ring — the double-buffered
   prefetch of the tentpole.
 * The serving engine's full pass calls :meth:`padded_table` to
-  materialize the whole padded table transiently; assembly is chunk-by-
-  chunk, so later chunks' host gathers overlap earlier chunks' device
-  scatters under JAX's async dispatch, and the buffer is dropped after
-  the pass — steady-state device residency is the hot cache alone.
+  materialize the whole padded table transiently; assembly is one
+  combined row *gather* (selector tables built host-side, rows moved by
+  the device — the Pallas DMA kernel in :mod:`repro.kernels.rows` on
+  real TPUs), and the buffer is dropped after the pass — steady-state
+  device residency is the hot cache alone.
 
 **Bitwise guarantee**: every assembled row is the float32 bits of the
 store's current row — whether it traveled via the cache (filled by
@@ -168,31 +169,57 @@ class TieredFeatures:
         self._c_cache_rows.inc(int(hot.sum()))
         return hot, slots
 
-    def _assemble(self, buf, ids, pos):
-        """Scatter rows for ``ids`` into device buffer ``buf`` at ``pos``:
-        cold rows via host gather + device_put (async upload), hot rows
-        via a device-side gather from the cache table."""
+    @staticmethod
+    def _gather(table, sel):
+        """Backend-dispatched device row gather: the Pallas DMA kernel
+        (:func:`repro.kernels.ops.gather_rows`) on real TPUs, ``jnp.take``
+        elsewhere (interpret-mode Pallas would serialize the grid)."""
+        import jax
+        import jax.numpy as jnp
+
+        if jax.default_backend() == "tpu":
+            from repro.kernels import ops as kops
+            return kops.gather_rows(table, sel)
+        return jnp.take(table, sel, axis=0)
+
+    def _assemble(self, rows: int, ids, pos):
+        """Build the ``(rows, d_feat)`` device buffer holding ``ids``'s
+        feature rows at ``pos`` and zeros elsewhere — as a row *gather*,
+        not the seed's per-row scatter: host-side selector tables name,
+        for every output row, its source row in either the uploaded cold
+        batch (whose trailing zero row doubles as the padding source) or
+        the hot-cache table, and the device runs two row gathers plus a
+        per-row select.  Each output row is one source row verbatim, so
+        assembly stays bitwise-identical to the scatter formulation."""
         import jax
         import jax.numpy as jnp
 
         hot, slots = self._source(ids)
-        cold_rows = self.store.gather(ids[~hot])
-        buf = buf.at[jnp.asarray(pos[~hot])].set(jax.device_put(cold_rows))
+        cold = ~hot
+        n_cold = int(cold.sum())
+        cold_rows = self.store.gather(ids[cold])
+        cold_up = jax.device_put(np.concatenate(
+            [cold_rows, np.zeros((1, self.store.d_feat), cold_rows.dtype)]))
+        cold_sel = np.full(rows, n_cold, np.int32)     # default: the pad row
+        cold_sel[pos[cold]] = np.arange(n_cold, dtype=np.int32)
+        out = self._gather(cold_up, jnp.asarray(cold_sel))
         if hot.any():
-            buf = buf.at[jnp.asarray(pos[hot])].set(
-                self.cache.table[jnp.asarray(slots[hot])])
+            hot_sel = np.zeros(rows, np.int32)
+            hot_sel[pos[hot]] = slots[hot]
+            hot_mask = np.zeros(rows, bool)
+            hot_mask[pos[hot]] = True
+            out = jnp.where(jnp.asarray(hot_mask)[:, None],
+                            self._gather(self.cache.table,
+                                         jnp.asarray(hot_sel)),
+                            out)
         self._c_assemblies.inc()
-        return buf
+        return out
 
     def device_chunk(self, c: int):
         """Assemble ring chunk ``c``: the ``(n_dev · tile_rows, d_feat)``
         device array holding every device's chunk-``c`` tile."""
-        import jax.numpy as jnp
-
         ids, pos, _ = self._chunks[c]
-        buf = jnp.zeros((self.plan.n_dev * self.plan.tile_rows,
-                         self.store.d_feat), jnp.float32)
-        buf = self._assemble(buf, ids, pos)
+        buf = self._assemble(self.plan.n_dev * self.plan.tile_rows, ids, pos)
         return self.shard(buf) if self.shard is not None else buf
 
     def chunk_fetcher(self) -> Callable[[int], object]:
@@ -201,15 +228,13 @@ class TieredFeatures:
         return self.device_chunk
 
     def padded_table(self):
-        """Materialize the full padded PGAS table, chunk by chunk (later
-        chunks' host gathers overlap earlier chunks' device scatters via
-        async dispatch).  Transient: callers drop it after the pass."""
-        import jax.numpy as jnp
-
-        buf = jnp.zeros((self.plan.padded_nodes, self.store.d_feat),
-                        jnp.float32)
-        for ids, _, fpos in self._chunks:
-            buf = self._assemble(buf, ids, fpos)
+        """Materialize the full padded PGAS table as ONE combined gather
+        over every chunk's row set (the chunk maps are disjoint and cover
+        all real rows; everything else is padding, served by the zero pad
+        row).  Transient: callers drop it after the pass."""
+        ids = np.concatenate([c[0] for c in self._chunks])
+        fpos = np.concatenate([c[2] for c in self._chunks])
+        buf = self._assemble(self.plan.padded_nodes, ids, fpos)
         return self.shard(buf) if self.shard is not None else buf
 
     # -- accounting ----------------------------------------------------------

@@ -147,6 +147,23 @@ def test_missing_and_new_rows_reported(base_path):
     assert res.compared == 2
 
 
+def test_new_rows_surface_as_findings_with_latency(base_path):
+    """A row only the candidate carries lands in the gate report as a
+    'new' finding with its latency — not a silent footnote — and never
+    trips the gate (a PR adding a benchmark row must pass its own diff)."""
+    base = diff.load_snapshot(base_path)
+    new = copy.deepcopy(base)
+    new["modules"]["fig9"].append(_row("fig9e_sparsity", 77.0))
+    res = diff.compare(base, new)
+    news = [f for f in res.findings if f.kind == "new"]
+    assert [(f.module, f.name, f.new_us) for f in news] == \
+        [("fig9", "fig9e_sparsity", 77.0)]
+    assert res.regressions == []
+    text = diff.render(res)
+    assert "fig9e_sparsity" in text and "77.0us" in text
+    assert "not in baseline" in text
+
+
 def test_render_mentions_findings(base_path):
     base = diff.load_snapshot(base_path)
     new = copy.deepcopy(base)

@@ -53,9 +53,9 @@ def test_two_processes_hammering_same_file_lose_nothing(tmp_path):
         shape = WorkloadShape(n_dev=1, d_feat=i, rows_per_dev=10,
                               local_edges_max=5, remote_edges_max=5)
         assert cache.get(shape) == dict(ps=1, dist=1, pb=1), i
-    # the file on disk is a single valid v3 document
+    # the file on disk is a single valid current-schema document
     with open(path) as f:
-        assert json.load(f)["version"] == 3
+        assert json.load(f)["version"] == 4
 
 
 def test_version_mismatch_discard_warns_exactly_once(tmp_path):
@@ -79,9 +79,9 @@ def test_version_mismatch_discard_warns_exactly_once(tmp_path):
     assert cache.get(shape) == dict(ps=4, dist=1, pb=1)
 
 
-def test_v2_files_discarded_with_one_warning_and_v3_roundtrips_cap_fuse(
+def test_v2_files_discarded_with_one_warning_and_v4_roundtrips_knobs(
         tmp_path):
-    """Schema v3 (this PR): ``cap`` and ``fuse`` persist alongside
+    """``cap``/``fuse`` (v3) and ``k`` (v4) persist alongside
     (ps, dist, pb); v2 files read as empty with the same single
     RuntimeWarning per path that v1 files get."""
     path = str(tmp_path / "v2.json")
@@ -98,16 +98,16 @@ def test_v2_files_discarded_with_one_warning_and_v3_roundtrips_cap_fuse(
         warnings.simplefilter("always")
         assert probe.get(shape) is None           # warned once already
     assert not [w for w in rec if issubclass(w.category, RuntimeWarning)]
-    # v3 round-trips the full knob set, global and per-layer
-    probe.put(shape, dict(ps=4, dist=2, pb=1, cap=128), 1e-3)
-    assert probe.get(shape) == dict(ps=4, dist=2, pb=1, cap=128)
+    # v4 round-trips the full knob set, global and per-layer
+    probe.put(shape, dict(ps=4, dist=2, pb=1, cap=128, k=16), 1e-3)
+    assert probe.get(shape) == dict(ps=4, dist=2, pb=1, cap=128, k=16)
     cfgs = [dict(ps=8, dist=1, pb=1, cap=64, fuse=True),
-            dict(ps=2, dist=1, pb=1, cap=64, fuse=False)]
+            dict(ps=2, dist=1, pb=1, cap=64, k=32, fuse=False)]
     probe.put_layers([shape, shape.with_d_feat(3)], cfgs, 2e-3)
     assert probe.get_layers([shape, shape.with_d_feat(3)]) == cfgs
     with open(path) as f:
         doc = json.load(f)
-    assert doc["version"] == 3
+    assert doc["version"] == 4
     # plain (ps, dist, pb) entries stay exactly three knobs on disk
     probe.put(shape.with_d_feat(9), dict(ps=1, dist=1, pb=1), 1e-3)
     assert probe.get(shape.with_d_feat(9)) == dict(ps=1, dist=1, pb=1)

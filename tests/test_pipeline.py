@@ -9,10 +9,13 @@ import pytest
 from repro.core import (
     build_bulk_plan, build_fetch_plan, build_plan, bulk_aggregate,
     edge_balanced_node_split, fetch_rows_aggregate, mgg_aggregate,
-    pad_embeddings, pad_table, power_law, reference_aggregate,
-    unpad_embeddings, unpad_table, collective_bytes,
+    mgg_aggregate_sparse, pad_embeddings, pad_table, power_law,
+    reference_aggregate, sparse_collective_bytes, topk_activation,
+    topk_decompress, unpad_embeddings, unpad_table, collective_bytes,
+    wire_index_dtype,
 )
 from repro.dist import flat_ring_mesh
+from repro.testing.hypo import given, settings, strategies as st
 
 
 @pytest.fixture(scope="module")
@@ -84,6 +87,99 @@ def test_gradients_flow_through_ring(small):
     grad = jax.grad(f)(xp)
     assert np.isfinite(np.asarray(grad)).all()
     assert float(jnp.abs(grad).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# sparsity-aware aggregation: the top-k payload (single-device unit tests;
+# the 8-device sparse ring runs in tests/multidev/mgg_sparse.py)
+# ---------------------------------------------------------------------------
+
+def _bits(a):
+    return np.asarray(a).view(np.uint32)
+
+
+def test_topk_roundtrip_is_identity_at_full_width():
+    """decompress ∘ compress == id at k == D, bitwise — including -0.0,
+    which only survives because the decompress scatter is .set (an .add
+    against the zero buffer would turn -0.0 into +0.0)."""
+    x = np.random.default_rng(1).normal(size=(37, 24)).astype(np.float32)
+    x[3, 5] = -0.0
+    v, idx = topk_activation(jnp.asarray(x), 24)
+    back = topk_decompress(v, idx, 24)
+    np.testing.assert_array_equal(_bits(back), x.view(np.uint32))
+
+
+@given(st.integers(1, 40), st.integers(1, 64), st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_topk_decompress_invariant_to_column_permutation(rows, d, seed):
+    """Column ids within a row are distinct (top-k guarantee), so every
+    output slot is written at most once: any permutation of the compressed
+    columns reproduces the bits exactly."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, d + 1))
+    x = rng.normal(size=(rows, d)).astype(np.float32)
+    v, idx = topk_activation(jnp.asarray(x), k)
+    perm = rng.permutation(k)
+    a = topk_decompress(v, idx, d)
+    b = topk_decompress(v[:, perm], idx[:, perm], d)
+    np.testing.assert_array_equal(_bits(a), _bits(b))
+
+
+def test_wire_index_dtype_picks_narrowest():
+    assert wire_index_dtype(602) == jnp.int16      # reddit width fits
+    assert wire_index_dtype(32767) == jnp.int16
+    assert wire_index_dtype(32768) == jnp.int32
+
+
+def test_sparse_collective_bytes_model(small):
+    g, _, _ = small
+    plan = build_plan(g, 4, ps=8, dist=2)
+    dense = collective_bytes(plan, d_feat=96)
+    quarter = sparse_collective_bytes(plan, 96, 24)
+    # k = D/4 with int16 ids: 24·(4+2) / 96·4 = 0.375 of the dense wire
+    assert quarter / dense == pytest.approx(0.375)
+    # k == D still pays the index overhead — the model must not pretend
+    # compression is free at full width
+    assert sparse_collective_bytes(plan, 96, 96) / dense \
+        == pytest.approx(1.5)
+    assert sparse_collective_bytes(plan, 96, 10 ** 6) \
+        == sparse_collective_bytes(plan, 96, 96)      # k clamps to D
+    assert sparse_collective_bytes(build_plan(g, 1, ps=8), 96, 24) == 0
+
+
+def test_sparse_full_width_bitwise_matches_dense(small):
+    g, x, _ = small
+    plan = build_plan(g, 1, ps=8, dist=2)
+    mesh = flat_ring_mesh(1)
+    xp = jnp.asarray(pad_embeddings(plan, x))
+    d = x.shape[1]
+    dense = mgg_aggregate(xp, plan, mesh)
+    sparse = mgg_aggregate_sparse(xp, plan, mesh, k=d)
+    np.testing.assert_array_equal(_bits(dense), _bits(sparse))
+    # fused ·W inside the step keeps the equality
+    w = jnp.asarray(np.random.default_rng(2).normal(size=(d, 7))
+                    .astype(np.float32))
+    np.testing.assert_array_equal(
+        _bits(mgg_aggregate(xp, plan, mesh, update_w=w)),
+        _bits(mgg_aggregate_sparse(xp, plan, mesh, k=d, update_w=w)))
+
+
+def test_sparse_below_width_deterministic_and_matches_oracle(small):
+    """k < D drops information by design; the contract is that what remains
+    is the exact dense aggregation OF the compressed activations — i.e.
+    sparse(x) ≡ dense(decompress(compress(x))), bitwise — and that repeated
+    calls reproduce the bits (fixed-order Σ, no nondeterministic scatter)."""
+    g, x, _ = small
+    plan = build_plan(g, 1, ps=8, dist=2)
+    mesh = flat_ring_mesh(1)
+    xp = jnp.asarray(pad_embeddings(plan, x))
+    d, k = x.shape[1], 5
+    a = mgg_aggregate_sparse(xp, plan, mesh, k=k)
+    b = mgg_aggregate_sparse(xp, plan, mesh, k=k)
+    np.testing.assert_array_equal(_bits(a), _bits(b))
+    want = mgg_aggregate(topk_decompress(*topk_activation(xp, k), d),
+                         plan, mesh)
+    np.testing.assert_array_equal(_bits(a), _bits(want))
 
 
 # The 8-device subprocess scripts (tests/multidev/) run through

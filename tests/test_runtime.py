@@ -284,7 +284,7 @@ def test_cache_roundtrip_corruption_and_atomicity():
         cache.put(shape, dict(ps=4, dist=1, pb=2), 1e-3)
         assert cache.get(shape) == dict(ps=4, dist=1, pb=2)
         with open(path) as f:
-            assert json.load(f)["version"] == 3
+            assert json.load(f)["version"] == 4
         # no stray tmp files left behind
         assert all(not fn.endswith(".tmp") for fn in os.listdir(d))
 

@@ -249,3 +249,37 @@ def test_oversized_request_rejected_at_admission():
         srv.submit(np.array([1, 2, 3]))
     with pytest.raises(ValueError):
         srv.submit(np.array([g.num_nodes + 5]))
+
+
+# ---------------------------------------------------------------------------
+# hot-set persistence across serve restarts
+# ---------------------------------------------------------------------------
+
+def test_hot_set_persists_across_restart(tmp_path):
+    import os
+
+    g, x, eng, params, _ = _setup()
+    path = str(tmp_path / "hot.json")
+    phases = [TrafficPhase(requests=40, alpha=1.3, rate=100.0, seeds_max=4)]
+
+    srv = GNNServeEngine(eng, params, "gcn", x, g, slots=4,
+                         feature_capacity=24, hotset_path=path)
+    run_trace(srv, ZipfTraffic(g.num_nodes, x.shape[1], phases, seed=3))
+    ids = srv.tiers.cache.resident_ids()
+    assert ids.size > 0 and os.path.exists(path)
+
+    # a fresh engine warm-loads the same admitted set before any traffic
+    srv2 = GNNServeEngine(eng, params, "gcn", x, g, slots=4,
+                          feature_capacity=24, hotset_path=path)
+    np.testing.assert_array_equal(srv2.tiers.cache.resident_ids(), ids)
+    # ids are a hint, not cached bits: rows were refetched from the store
+    np.testing.assert_array_equal(
+        np.asarray(srv2.tiers.cache.table)[
+            srv2.tiers.cache.slots(ids)], x[ids])
+
+    # corrupt sidecar ⇒ silent cold start, exactly as before the feature
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    srv3 = GNNServeEngine(eng, params, "gcn", x, g, slots=4,
+                          feature_capacity=24, hotset_path=str(bad))
+    assert srv3.tiers.cache.resident_rows == 0

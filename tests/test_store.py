@@ -279,6 +279,62 @@ def test_per_layer_tuner_without_fuse_space_unchanged():
 
 
 # ---------------------------------------------------------------------------
+# tuner knob: k (sparse-payload width)
+# ---------------------------------------------------------------------------
+
+def test_online_tuner_k_dimension_commits_and_warm_starts():
+    # narrower payload ⇒ faster: the climb must land on the smallest k
+    t = _drive(
+        OnlineTuner((256, 512), (1, 2), (16,), k_space=(8, 16, 32)),
+        lambda c: 1.0 / c["ps"] + 0.1 * c["dist"] + 1e-3 * c.get("k", 64))
+    assert t.converged and t.best["k"] == 8
+    # warm start carries the committed k (cache-restart path)
+    t2 = OnlineTuner((256, 512), (1, 2), (16,), k_space=(8, 16, 32),
+                     warm_start=dict(t.best))
+    assert t2.propose()["k"] == 8
+
+
+def test_online_tuner_k_kept_only_if_it_measures_faster():
+    # index overhead makes every sparse candidate slower ⇒ dense k wins
+    t = _drive(
+        OnlineTuner((256, 512), (1, 2), (16,), k_space=(8, 16, 32)),
+        lambda c: 1.0 / c["ps"] + 0.1 * c["dist"] - 1e-3 * c.get("k", 0))
+    assert t.converged and t.best["k"] == 32
+
+
+def test_online_tuner_k_adopt_reopen():
+    """Shared-cache adopt: reopen(mode='adopt') proposes exactly the warm
+    config — k included — and converges on one validation window."""
+    t = _drive(
+        OnlineTuner((256, 512), (1, 2), (16,), k_space=(8, 16, 32)),
+        lambda c: 1.0 / c["ps"] + 0.1 * c["dist"] + 1e-3 * c.get("k", 64))
+    m0 = t.measured
+    warm = dict(ps=512, dist=1, pb=16, k=16)
+    t.reopen(warm_start=warm, mode="adopt")
+    assert not t.converged
+    assert t.propose() == warm
+    t.observe(0.1)
+    assert t.converged and t.best == warm and t.measured - m0 == 1
+
+
+def test_per_layer_tuner_k_pinned_across_layers():
+    """The accuracy budget is end-to-end, so k (like cap) is climbed
+    globally: every layer of the committed config shares one k."""
+    t = _drive(
+        PerLayerTuner(2, (256,), (1, 2), (16,), k_space=(8, 32)),
+        lambda cfgs: sum(1.0 + 0.1 * c["dist"] for c in cfgs)
+        + 1e-3 * cfgs[0].get("k", 64))
+    assert t.converged
+    assert {c["k"] for c in t.best} == {8}
+
+
+def test_online_tuner_without_k_space_unchanged():
+    t = _drive(OnlineTuner((256, 512), (1, 2), (16,)),
+               lambda c: 1.0 / c["ps"] + 0.1 * c["dist"])
+    assert t.converged and "k" not in t.best
+
+
+# ---------------------------------------------------------------------------
 # cost model: host-gather term + fuse calibration
 # ---------------------------------------------------------------------------
 

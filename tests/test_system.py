@@ -29,6 +29,8 @@ def test_dryrun_machinery_small_mesh():
 MULTIDEV_SCRIPTS = [
     "collectives.py",        # ring collectives + EF compression vs dense refs
     "mgg_equivalence.py",    # MGG ring (all knobs, per-layer, fused) vs oracle
+    "mgg_sparse.py",         # sparse payload: k==D bitwise vs dense, ring-size
+                             # determinism property at k<D
     "gnn_training.py",       # end-to-end 8-device GCN training
     "elastic_restore.py",    # 2-dev checkpoint → 8-dev mesh restore
     "collectives_property.py",  # property sweep over 1/2/4/8-dev meshes
