@@ -48,7 +48,7 @@ LOCAL_MODULES = ["gather_fraction", "roofline"]
 QUICK_SKIP = {"fig10_autotune", "fig11_serving", "table5_sampling"}
 # tiny graphs, --smoke arg, 2 devices (CI runs these on every PR)
 SMOKE_MODULES = ["fig8_mgg_vs_uvm", "fig9_ablations", "fig10_autotune",
-                 "fig11_serving"]
+                 "fig11_serving", "table5_sampling"]
 
 
 def _maybe_snapshot(args, rows_by_module: dict) -> None:

@@ -1,17 +1,28 @@
-"""Paper Table 5: accuracy/latency tradeoff, full-graph vs sampled GNN.
+"""Paper Table 5: accuracy/latency tradeoff, full-graph vs sampled GraphSAGE.
 
 Synthetic node classification (class-dependent feature means + homophilous
-edges): train a 2-layer GCN (paper setting) full-graph and with
-neighbor-sampled aggregation (cap each node at k sampled neighbors), then
-compare test accuracy and epoch latency.  Paper: 2–5% accuracy advantage
-for full-graph at ~1.07–1.25× latency.
+edges): train a 2-layer GraphSAGE full-graph on the ring engine, then train
+the same model on the sampled mini-batch path — fanout-bounded k-hop blocks
+(repro.sample) over a planless tiered feature store, with neighbors
+REDRAWN every epoch (sampling as a training-time estimator, not a one-shot
+static sparsification of the graph).  Compare test accuracy and per-epoch
+latency.  Paper: small accuracy edge for full-graph at a latency premium;
+here the sampled epoch touches only ``train_seeds * (fanout + 1) ** layers``
+rows, so it wins on latency while the per-epoch redraw keeps the accuracy
+gap small.
+
+``--smoke`` (wired into ``benchmarks/run.py --smoke`` → CI) shrinks the
+graph/epoch counts and *asserts* that the sampled epoch is faster than the
+full-graph epoch — the headline claim of the sampled path — so the
+benchmark cannot rot silently.
 """
 from __future__ import annotations
 
 import sys
+import time
 
-from benchmarks._common import (emit, force_devices_from_env, sample_fields,
-                                timeit)
+from benchmarks._common import (TimingSample, emit, force_devices_from_env,
+                                sample_fields, timeit)
 
 force_devices_from_env()
 
@@ -21,47 +32,56 @@ import numpy as np  # noqa: E402
 
 import repro.core as C  # noqa: E402
 from repro.dist import flat_ring_mesh  # noqa: E402
-from repro.train.data import graph_features  # noqa: E402
+from repro.sample import block_tree, sample_blocks, seed_batches  # noqa: E402
+from repro.store import FeatureStore, TieredFeatures  # noqa: E402
 from repro.train.optimizer import (AdamWConfig, adamw_init,  # noqa: E402
                                    adamw_update)
 
 
 def _homophilous(n, ncls, deg, seed=0):
+    """Random graph whose edges prefer same-class endpoints (70%).
+
+    The same-class redraw is vectorized: nodes grouped by label via one
+    stable argsort, then every edge draws a random member of its dst's
+    class in one gather (the old per-edge Python loop was O(n*deg)
+    interpreter time and dominated the benchmark's setup).
+    """
     rng = np.random.default_rng(seed)
     labels = rng.integers(0, ncls, n)
     dst = np.repeat(np.arange(n), deg)
     src = rng.integers(0, n, len(dst))
     same = rng.random(len(dst)) < 0.7  # homophily: mostly same-class edges
-    pools = {c: np.where(labels == c)[0] for c in range(ncls)}
-    src_same = np.array([pools[labels[d]][rng.integers(len(pools[labels[d]]))]
-                         for d in dst])
+    order = np.argsort(labels, kind="stable")  # nodes grouped by class
+    counts = np.bincount(labels, minlength=ncls)
+    assert counts.min() > 0, "every class needs at least one member"
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    ld = labels[dst]
+    src_same = order[starts[ld] + rng.integers(0, counts[ld])]
     src = np.where(same, src_same, src)
     from repro.core.graph import _from_edges
     return _from_edges(dst.astype(np.int64), src.astype(np.int64), n), labels
 
 
-def _sampled_graph(g, k, seed=0):
-    rng = np.random.default_rng(seed)
-    dst, src = [], []
-    for v in range(g.num_nodes):
-        nb = g.row(v)
-        if len(nb) > k:
-            nb = rng.choice(nb, size=k, replace=False)
-        dst.extend([v] * len(nb))
-        src.extend(nb.tolist())
-    from repro.core.graph import _from_edges
-    return _from_edges(np.asarray(dst, np.int64), np.asarray(src, np.int64),
-                       g.num_nodes)
+def _features(y, dim, seed=0):
+    """Class-dependent feature means correlated with OUR labels."""
+    n = len(y)
+    ncls = int(y.max()) + 1
+    centers = np.random.default_rng(seed).normal(
+        size=(ncls, dim)).astype(np.float32)
+    x = centers[y] * 0.4 + np.random.default_rng(seed + 1).normal(
+        size=(n, dim)).astype(np.float32)
+    return x
 
 
-def _train(g, x, y, train_mask, mesh, epochs=40, ps=16):
+def _train_full(g, x, y, train_mask, mesh, epochs, ps=16):
+    """Full-graph SAGE on the ring engine; epoch == one step over N nodes."""
     eng = C.GNNEngine.build(g, mesh, ps=ps)
     xp = eng.shard(eng.pad(x))
     pad1 = lambda a: C.pad_table(eng.plan.bounds, eng.plan.rows_per_dev,
                                  a[:, None])[:, 0]
     yp = jnp.asarray(pad1(y.astype(np.int32)))
     mp_train = jnp.asarray(pad1(train_mask.astype(np.float32)))
-    init, apply, kw = C.MODEL_ZOO["gcn"]
+    init, apply, kw = C.MODEL_ZOO["sage"]
     params = init(jax.random.key(0), x.shape[1], int(y.max()) + 1, **kw)
     opt = adamw_init(params)
     ocfg = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=epochs,
@@ -85,28 +105,102 @@ def _train(g, x, y, train_mask, mesh, epochs=40, ps=16):
     return acc, t
 
 
-def run(as_json: bool) -> list:
+def _train_sampled(g, x, y, train_mask, *, fanout, batch, epochs):
+    """Mini-batch SAGE over fanout-bounded blocks, resampled every epoch.
+
+    Features come through a planless TieredFeatures (device hot cache over
+    the host store) — the same assembly path the memory-bound serving
+    regime uses, so this row also exercises gather_rows end to end.
+    """
+    ncls = int(y.max()) + 1
+    init, _, kw = C.MODEL_ZOO["sage"]
+    params = init(jax.random.key(0), x.shape[1], ncls, **kw)
+    n_layers = len(params["layers"])
+    tiers = TieredFeatures(FeatureStore(x), None, capacity=g.num_nodes // 8)
+    tiers.admit(np.argsort(-np.diff(g.indptr))[:g.num_nodes // 8])
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=epochs,
+                       weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, h0, btree, yb, mb):
+        def loss_fn(p):
+            logits = C.apply_blocks("sage", p, h0, btree)
+            return C.masked_cross_entropy(logits, yb, mb)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(grads, opt, params, ocfg)
+        return params, opt, loss
+
+    rng = np.random.default_rng(0)
+    train_ids = np.nonzero(train_mask)[0]
+
+    def epoch(params, opt):
+        loss = None
+        for seeds, valid in seed_batches(train_ids, batch, rng=rng):
+            blocks = sample_blocks(g, seeds, [fanout] * n_layers,
+                                   batch=batch, rng=rng)
+            h0 = tiers.gather_rows(blocks[0].src_ids)
+            yb = jnp.asarray(y[np.clip(seeds, 0, None)].astype(np.int32))
+            params, opt, loss = step(params, opt, h0, block_tree(blocks),
+                                     yb, jnp.asarray(valid))
+        jax.block_until_ready(loss)
+        return params, opt
+
+    times = []
+    for e in range(epochs):  # fresh neighbor draw EVERY epoch
+        t0 = time.perf_counter()
+        params, opt = epoch(params, opt)
+        if e > 0:  # epoch 0 pays jit compile; the rest are steady-state
+            times.append(time.perf_counter() - t0)
+    t = TimingSample(times)
+
+    correct = total = 0
+    test_ids = np.nonzero(~train_mask)[0]
+    for seeds, valid in seed_batches(test_ids, batch, rng=rng, shuffle=False):
+        blocks = sample_blocks(g, seeds, [fanout] * n_layers,
+                               batch=batch, rng=rng)
+        logits = C.apply_blocks("sage", params,
+                                tiers.gather_rows(blocks[0].src_ids),
+                                block_tree(blocks))
+        pred = np.asarray(logits).argmax(-1)
+        live = valid > 0
+        correct += int((pred[live] == y[seeds[live]]).sum())
+        total += int(live.sum())
+    return correct / max(1, total), t
+
+
+def run(as_json: bool, smoke: bool = False) -> list:
     n_dev = len(jax.devices())
     mesh = flat_ring_mesh(n_dev)
-    g, y = _homophilous(1600, ncls=6, deg=24)
-    x, _, train_mask = graph_features(g.num_nodes, 32, 6, seed=2)
-    # overwrite features to correlate with OUR labels
-    centers = np.random.default_rng(0).normal(size=(6, 32)).astype(np.float32)
-    x = centers[y] * 0.4 + np.random.default_rng(1).normal(
-        size=(g.num_nodes, 32)).astype(np.float32)
-    acc_full, t_full = _train(g, x, y, train_mask, mesh, ps=16)
-    gs = _sampled_graph(g, k=4)
-    # fair ps for the sampled graph (max degree 4): the autotuner's layout
-    # knob — ps=16 would pad 75% of every partition
-    acc_samp, t_samp = _train(gs, x, y, train_mask, mesh, ps=4)
-    return [dict(
-        name="table5_full_vs_sampled",
-        us_per_call=round(t_full * 1e6, 1),
-        **sample_fields(t_full),
-        derived=(f"acc_full={acc_full:.3f};acc_sampled={acc_samp:.3f};"
-                 f"acc_gain={(acc_full-acc_samp)*100:.1f}pp;"
-                 f"latency_ratio={t_full/t_samp:.2f}"))]
+    n, deg, epochs = (1200, 16, 8) if smoke else (2400, 24, 30)
+    fanout, batch = 4, 256
+    g, y = _homophilous(n, ncls=6, deg=deg)
+    x = _features(y, 32)
+    # modest train fraction: the sampled epoch's win comes from touching
+    # only the train seeds' fanout-bounded receptive field, not all N nodes
+    train_mask = np.random.default_rng(3).random(n) < 0.15
+    acc_full, t_full = _train_full(g, x, y, train_mask, mesh, epochs, ps=16)
+    acc_samp, t_samp = _train_sampled(g, x, y, train_mask, fanout=fanout,
+                                      batch=batch, epochs=epochs)
+    if smoke:
+        assert t_samp < t_full, (
+            f"smoke: sampled epoch ({t_samp*1e3:.1f} ms) not faster than "
+            f"full-graph epoch ({t_full*1e3:.1f} ms)")
+    return [
+        dict(name="table5_full_graph_epoch",
+             us_per_call=round(t_full * 1e6, 1),
+             **sample_fields(t_full),
+             derived=f"acc={acc_full:.3f};epochs={epochs}"),
+        dict(name="table5_sampled_epoch",
+             us_per_call=round(t_samp * 1e6, 1),
+             **sample_fields(t_samp),
+             derived=(f"acc={acc_samp:.3f};"
+                      f"acc_delta={(acc_full - acc_samp) * 100:+.1f}pp;"
+                      f"speedup={t_full / t_samp:.2f}x;"
+                      f"fanout={fanout};batch={batch}")),
+    ]
 
 
 if __name__ == "__main__":
-    emit(run("--json" in sys.argv), "--json" in sys.argv)
+    emit(run("--json" in sys.argv, smoke="--smoke" in sys.argv),
+         "--json" in sys.argv)

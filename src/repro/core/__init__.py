@@ -32,6 +32,7 @@ from .pipeline import (
     topk_activation,
     topk_decompress,
     wire_index_dtype,
+    block_neighbor_sum,
     bulk_aggregate,
     fetch_rows_aggregate,
     reference_aggregate,
@@ -47,6 +48,6 @@ from .autotune import (
     WorkloadShape,
     layer_workload_shapes,
 )
-from .gnn import (GNNEngine, MODEL_ZOO, MODEL_STAGES, masked_cross_entropy,
-                  num_stages, apply_stage, apply_from_stage,
-                  aggregation_widths)
+from .gnn import (GNNEngine, MODEL_ZOO, MODEL_STAGES, BLOCK_MODELS,
+                  masked_cross_entropy, num_stages, apply_stage,
+                  apply_from_stage, apply_blocks, aggregation_widths)

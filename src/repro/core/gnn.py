@@ -38,11 +38,13 @@ from .graph import CSRGraph
 from .placement import (AggregationPlan, LayerPlan, SharedPartition,
                         build_layer_plans, build_partition, pad_embeddings,
                         pad_table)
-from .pipeline import (mgg_aggregate, mgg_aggregate_sparse,
-                       mgg_aggregate_sparse_streamed, mgg_aggregate_streamed)
+from .pipeline import (block_neighbor_sum, mgg_aggregate,
+                       mgg_aggregate_sparse, mgg_aggregate_sparse_streamed,
+                       mgg_aggregate_streamed)
 
 __all__ = ["GNNEngine", "gcn_init", "gcn_apply", "gin_init", "gin_apply",
            "sage_init", "sage_apply", "gat_init", "gat_apply",
+           "sage_apply_blocks", "apply_blocks", "BLOCK_MODELS",
            "masked_cross_entropy", "MODEL_ZOO", "aggregation_widths",
            "MODEL_STAGES", "num_stages", "apply_stage", "apply_from_stage"]
 
@@ -412,6 +414,52 @@ def sage_apply(params: Dict, engine: GNNEngine, x: jax.Array) -> jax.Array:
     for i in range(len(params["layers"])):
         h = sage_stage(params, engine, h, i)
     return h
+
+
+def sage_apply_blocks(params: Dict, h: jax.Array, blocks,
+                      *, use_kernel: bool = False) -> jax.Array:
+    """GraphSAGE-mean forward over sampled mini-batch blocks.
+
+    ``h`` is the outermost block's source feature table — ``(num_src, D)``
+    rows aligned with ``blocks[0]['nbr']``'s local indices, zeros in the
+    ``-1``-padded slots (see ``TieredFeatures.gather_rows``).  ``blocks``
+    is the jit-traced pytree from ``repro.sample.block_tree``, one entry
+    per layer, outermost hop first.  Destination rows are the leading
+    rows of each source table (dst-first ordering), so the self term is
+    ``h[:num_dst]`` — no second gather.  Returns the ``(batch,
+    num_classes)`` seed logits; rows of padded seeds are garbage and
+    must stay masked in the loss (``masked_cross_entropy``).
+    """
+    layers = params["layers"]
+    if len(blocks) != len(layers):
+        raise ValueError(
+            f"{len(blocks)} blocks for {len(layers)} layers — sample with "
+            f"one fanout per layer")
+    for i, (layer, blk) in enumerate(zip(layers, blocks)):
+        nbr, mask = blk["nbr"], blk["mask"]
+        s = block_neighbor_sum(h, nbr, mask, use_kernel=use_kernel)
+        deg = jnp.maximum(mask.sum(axis=-1), 1.0).astype(h.dtype)[:, None]
+        h = _dense(layer["self"], h[:nbr.shape[0]]) + _dense(
+            layer["nbr"], s / deg)
+        if i < len(layers) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# Block-capable models: the sampled mini-batch path is GraphSAGE-style
+# by construction (per-hop fanout bound == per-layer neighbor sample).
+BLOCK_MODELS = {"sage": sage_apply_blocks}
+
+
+def apply_blocks(model: str, params: Dict, h: jax.Array, blocks,
+                 *, use_kernel: bool = False) -> jax.Array:
+    """Dispatch the sampled-block forward for ``model`` (see
+    ``BLOCK_MODELS``; currently GraphSAGE only)."""
+    if model not in BLOCK_MODELS:
+        raise ValueError(
+            f"model {model!r} has no sampled-block path (have: "
+            f"{sorted(BLOCK_MODELS)})")
+    return BLOCK_MODELS[model](params, h, blocks, use_kernel=use_kernel)
 
 
 def masked_cross_entropy(logits: jax.Array, labels: jax.Array,

@@ -54,6 +54,7 @@ __all__ = [
     "topk_activation",
     "topk_decompress",
     "wire_index_dtype",
+    "block_neighbor_sum",
     "bulk_aggregate",
     "fetch_rows_aggregate",
     "plan_device_arrays",
@@ -86,6 +87,24 @@ def _gather_sum(buf: jax.Array, nbrs: jax.Array, mask: jax.Array,
     return jnp.sum(
         g.astype(acc_dtype) * mask[..., None].astype(acc_dtype), axis=1
     )
+
+
+def block_neighbor_sum(h_src: jax.Array, nbr: jax.Array, mask: jax.Array, *,
+                       use_kernel: bool = False,
+                       acc_dtype=jnp.float32) -> jax.Array:
+    """Masked neighbor sum over one sampled block → ``(num_dst, D)``.
+
+    ``h_src`` is the block's source embedding table; ``nbr``/``mask``
+    are the fixed-shape ``(num_dst, fanout)`` tables from
+    ``repro.sample`` whose padding slots point at local row
+    ``num_src`` — a zero sentinel row appended here — so the sampled
+    path rides the exact same masked gather-sum primitive (Pallas
+    ``neighbor_gather_sum`` or the jnp oracle) as the full-graph ring.
+    """
+    sentinel = jnp.zeros((1, h_src.shape[1]), h_src.dtype)
+    buf = jnp.concatenate([h_src, sentinel], axis=0)
+    return _gather_sum(buf, nbr, mask, use_kernel, acc_dtype).astype(
+        h_src.dtype)
 
 
 # ---------------------------------------------------------------------------

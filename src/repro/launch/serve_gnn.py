@@ -144,6 +144,10 @@ def main() -> None:
                     help="serve tiered: features live in a host store, "
                          "the device holds only this many hot rows "
                          "(0 = stream everything)")
+    ap.add_argument("--frontier-fanout", type=int, default=None,
+                    help="bound the stats-side receptive field with a "
+                         "sampled k-hop frontier of this per-hop fanout "
+                         "(repro.sample); cache gating stays exact")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serving replicas behind the router")
     ap.add_argument("--router", default="locality",
@@ -215,6 +219,8 @@ def main() -> None:
                               min_records=args.min_records,
                               use_cache=not args.no_cache,
                               feature_capacity=args.feature_capacity,
+                              frontier_fanout=args.frontier_fanout,
+                              frontier_seed=args.seed + idx,
                               log_fn=print, tracer=rtr,
                               metrics=registry, obs_labels=labels)
 

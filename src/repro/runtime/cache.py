@@ -45,6 +45,13 @@ Schema v4 persists the sparsity knob: the top-k compression width
 (``k``, an int — see :func:`repro.core.pipeline.mgg_aggregate_sparse`)
 rides alongside the other knobs when the committed config carries it.
 v3 (and older) files are discarded the same way.
+
+Schema v5 persists the sampled mini-batch geometry: the per-hop
+neighbor bound (``fanout``) and seed-batch size (``batch``) of the
+sampled path (:mod:`repro.sample`) round-trip when the committed config
+carries them, so a warm-started search re-validates the tuned sampling
+geometry instead of re-climbing it.  v4 (and older) files are discarded
+the same way.
 """
 from __future__ import annotations
 
@@ -67,9 +74,12 @@ from repro.core.autotune import WorkloadShape
 __all__ = ["ConfigCache", "hardware_fingerprint", "shape_fingerprint",
            "layers_fingerprint"]
 
-_VERSION = 4
+_VERSION = 5
 
 _KNOBS = ("ps", "dist", "pb")
+
+# optional integer knobs persisted when the committed config carries them
+_OPT_INT_KNOBS = ("cap", "k", "fanout", "batch")
 
 # paths whose version-mismatch discard has already been reported (once per
 # process, not once per read — replicas poll the cache constantly)
@@ -80,22 +90,21 @@ def _valid_cfg(cfg: Any) -> bool:
     if not isinstance(cfg, dict) \
             or not all(isinstance(cfg.get(k), int) for k in _KNOBS):
         return False
-    if "cap" in cfg and not isinstance(cfg["cap"], int):
-        return False
-    if "k" in cfg and not isinstance(cfg["k"], int):
-        return False
+    for k in _OPT_INT_KNOBS:
+        if k in cfg and not isinstance(cfg[k], int):
+            return False
     if "fuse" in cfg and not isinstance(cfg["fuse"], bool):
         return False
     return True
 
 
 def _pack_cfg(cfg: Dict[str, Any]) -> Dict[str, Any]:
-    """The persisted knob set: (ps, dist, pb) plus the optional v3/v4 knobs."""
+    """The persisted knob set: (ps, dist, pb) plus the optional knobs the
+    committed config carries (cap/k v3-v4, fanout/batch v5, fuse bool)."""
     out: Dict[str, Any] = {k: int(cfg[k]) for k in _KNOBS}
-    if "cap" in cfg:
-        out["cap"] = int(cfg["cap"])
-    if "k" in cfg:
-        out["k"] = int(cfg["k"])
+    for k in _OPT_INT_KNOBS:
+        if k in cfg:
+            out[k] = int(cfg[k])
     if "fuse" in cfg:
         out["fuse"] = bool(cfg["fuse"])
     return out

@@ -157,6 +157,8 @@ class DynamicGNNEngine:
         pb_space: Tuple[int, ...] = DEFAULT_PB,
         cap_space: Tuple[int, ...] = (),
         k_space: Tuple[int, ...] = (),
+        fanout_space: Tuple[int, ...] = (),
+        batch_space: Tuple[int, ...] = (),
         tune_fuse: bool = False,
         window: ProfileConfig = ProfileConfig(warmup=1, iters=3),
         cache_path: Optional[str] = None,
@@ -189,6 +191,13 @@ class DynamicGNNEngine:
         Offer only widths whose accuracy the caller has validated: the
         tuner's objective is latency, so it will take the narrowest
         candidate that measures fastest.
+        ``fanout_space`` / ``batch_space`` make the sampled mini-batch
+        geometry (:mod:`repro.sample`) tuned knobs — configs then carry
+        ``fanout``/``batch`` keys, surfaced via :attr:`sample_fanout` /
+        :attr:`sample_batch` for the sampling loop to adopt (they never
+        reach the ring plans).  Same accuracy caveat as ``k_space``, and
+        feed per-seed latencies (``dt / batch``) to ``observe_step`` if
+        batch should optimize throughput (see :class:`OnlineTuner`).
         ``tune_fuse`` (per-layer mode only) probes flipping each layer's
         fused-update dataflow after its (ps, dist, pb) search settles;
         ``fuse_update`` remains the starting point for every layer."""
@@ -218,6 +227,7 @@ class DynamicGNNEngine:
             tuner = PerLayerTuner(
                 len(shapes), ps_space, dist_space, pb_space,
                 cap_space=cap_space, k_space=k_space,
+                fanout_space=fanout_space, batch_space=batch_space,
                 fuse_space=((fuse_update, not fuse_update) if tune_fuse
                             else (fuse_update,)),
                 vmem_checks=[make_vmem_check(s, hw) for s in shapes],
@@ -232,6 +242,7 @@ class DynamicGNNEngine:
             tuner = OnlineTuner(
                 ps_space, dist_space, pb_space, cap_space=cap_space,
                 k_space=k_space,
+                fanout_space=fanout_space, batch_space=batch_space,
                 vmem_check=make_vmem_check(shape, hw),
                 budget=budget, drift_threshold=drift_threshold,
                 warm_start=warm,
@@ -263,9 +274,11 @@ class DynamicGNNEngine:
 
     def _build_engine(self, cfg: Dict) -> GNNEngine:
         def _lc(c):
-            # "cap" is a storage-layer knob (see feature_capacity) and
-            # never reaches the plan; "fuse" selects the layer's dataflow;
-            # "k" is the sparse-payload width (0/absent ⇒ dense ring).
+            # "cap" (storage layer — see feature_capacity) and
+            # "fanout"/"batch" (sampling loop — see sample_fanout /
+            # sample_batch) never reach the plan; "fuse" selects the
+            # layer's dataflow; "k" is the sparse-payload width
+            # (0/absent ⇒ dense ring).
             lc = dict(ps=int(c["ps"]), dist=int(c["dist"]),
                       pb=int(c["pb"]) if self.use_kernel else None)
             if "fuse" in c:
@@ -323,19 +336,37 @@ class DynamicGNNEngine:
     def config(self) -> Dict:
         return dict(self._config)
 
+    def _global_knob(self, key: str) -> Optional[int]:
+        """A globally-pinned optional knob's live value (per-layer configs
+        pin one value across layers, so the first carrier is THE value)."""
+        cfg = self._config
+        if "layers" in cfg:
+            for c in cfg["layers"]:
+                if key in c:
+                    return int(c[key])
+            return None
+        return int(cfg[key]) if key in cfg else None
+
     @property
     def feature_capacity(self) -> Optional[int]:
         """The live config's tiered-cache capacity (``cap`` knob), or
         None when capacity is not being tuned.  Per-layer configs pin one
         cap across layers (the feature table is shared), so the first
         layer's value is THE value."""
-        cfg = self._config
-        if "layers" in cfg:
-            for c in cfg["layers"]:
-                if "cap" in c:
-                    return int(c["cap"])
-            return None
-        return int(cfg["cap"]) if "cap" in cfg else None
+        return self._global_knob("cap")
+
+    @property
+    def sample_fanout(self) -> Optional[int]:
+        """The live config's sampled-path per-hop neighbor bound
+        (``fanout`` knob), or None when sampling is not being tuned.
+        Global like ``cap`` — one block pipeline feeds every layer."""
+        return self._global_knob("fanout")
+
+    @property
+    def sample_batch(self) -> Optional[int]:
+        """The live config's sampled-path seed-batch size (``batch``
+        knob), or None when sampling is not being tuned."""
+        return self._global_knob("batch")
 
     def pad(self, x: np.ndarray) -> np.ndarray:
         return self.engine.pad(x)

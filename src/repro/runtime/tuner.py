@@ -93,8 +93,9 @@ class _AuditMixin:
                 out.append((cfg, lat))
         return out
 
-# (ps, dist, pb) — extended with cap and/or k when the corresponding
-# spaces are configured: (ps, dist, pb[, cap][, k])
+# (ps, dist, pb) — extended with cap / k / fanout / batch when the
+# corresponding spaces are configured:
+# (ps, dist, pb[, cap][, k][, fanout][, batch])
 Key = Tuple[int, ...]
 
 DEFAULT_PS = (1, 2, 4, 8, 16, 32)
@@ -145,6 +146,16 @@ class OnlineTuner(_AuditMixin):
     *accuracy-approved* candidate set, not a free search dimension: every
     value in it must already be acceptable accuracy-wise (the fig9 sparsity
     row is the accuracy/speed evidence).  Config dicts carry a ``k`` key.
+
+    ``fanout_space`` / ``batch_space`` (optional, the sampled mini-batch
+    path's per-hop neighbor bound and seed-batch size — ``repro.sample``)
+    climb after ``k``, in that order.  Both carry the same caveat as
+    ``k``: fanout trades accuracy for work (the space must be
+    accuracy-approved), and batch trades steps-per-epoch for step time —
+    feed the tuner a *per-seed* latency (``dt / batch``) if you want the
+    batch climb to optimize throughput rather than raw step time (the
+    sampled training loop does).  Config dicts carry ``fanout`` /
+    ``batch`` keys.
     """
 
     def __init__(
@@ -155,6 +166,8 @@ class OnlineTuner(_AuditMixin):
         *,
         cap_space: Tuple[int, ...] = (),
         k_space: Tuple[int, ...] = (),
+        fanout_space: Tuple[int, ...] = (),
+        batch_space: Tuple[int, ...] = (),
         vmem_check: Optional[Callable[[int, int, int], bool]] = None,
         top_k: int = 3,
         budget: Optional[int] = None,
@@ -167,6 +180,8 @@ class OnlineTuner(_AuditMixin):
         self.pb_space = tuple(sorted(pb_space))
         self.cap_space = tuple(sorted(cap_space))
         self.k_space = tuple(sorted(k_space))
+        self.fanout_space = tuple(sorted(fanout_space))
+        self.batch_space = tuple(sorted(batch_space))
         self.vmem_check = vmem_check
         self.top_k = int(top_k)
         self.budget = budget
@@ -181,13 +196,15 @@ class OnlineTuner(_AuditMixin):
         self._init_audit(audit_sink)
         self.reset(warm_start=warm_start)
 
-    # -- knob/key mapping (3 knobs, +cap and/or +k when configured) ----------
+    # -- knob/key mapping (3 knobs, + cap/k/fanout/batch when configured) ----
 
     @property
     def knobs(self) -> Tuple[str, ...]:
         return ("ps", "dist", "pb") \
             + (("cap",) if self.cap_space else ()) \
-            + (("k",) if self.k_space else ())
+            + (("k",) if self.k_space else ()) \
+            + (("fanout",) if self.fanout_space else ()) \
+            + (("batch",) if self.batch_space else ())
 
     def _key(self, cfg: Dict[str, int]) -> Key:
         key = (int(cfg["ps"]), int(cfg["dist"]), int(cfg["pb"]))
@@ -195,6 +212,10 @@ class OnlineTuner(_AuditMixin):
             key += (int(cfg.get("cap", self.cap_space[0])),)
         if self.k_space:
             key += (int(cfg.get("k", self.k_space[0])),)
+        if self.fanout_space:
+            key += (int(cfg.get("fanout", self.fanout_space[0])),)
+        if self.batch_space:
+            key += (int(cfg.get("batch", self.batch_space[0])),)
         return key
 
     def _cfg(self, key: Key) -> Dict[str, int]:
@@ -331,16 +352,23 @@ class OnlineTuner(_AuditMixin):
         c0 = caps[0] if caps else None
         ks = self.k_space
         k0 = ks[0] if ks else None
+        fos = self.fanout_space
+        f0 = fos[0] if fos else None
+        bts = self.batch_space
+        bt0 = bts[0] if bts else None
 
         def mget(ps: int, dist: int, pb: int, cap: Optional[int] = c0,
-                 k: Optional[int] = k0):
+                 k: Optional[int] = k0, fanout: Optional[int] = f0,
+                 batch: Optional[int] = bt0):
             key = (int(ps), int(dist), int(pb)) \
                 + ((int(cap),) if caps else ()) \
-                + ((int(k),) if ks else ())
+                + ((int(k),) if ks else ()) \
+                + ((int(fanout),) if fos else ()) \
+                + ((int(batch),) if bts else ())
             if key not in table:
-                # neither cap (feature cache lives in HBM) nor k (narrows
-                # the ring payload) touches VMEM, so feasibility is checked
-                # on (ps, dist, pb) only
+                # cap (feature cache in HBM), k (ring payload width) and
+                # fanout/batch (host-side sampling geometry) never touch
+                # VMEM, so feasibility is checked on (ps, dist, pb) only
                 if self.vmem_check is not None \
                         and not self.vmem_check(*key[:3]):
                     table[key] = math.inf
@@ -350,6 +378,18 @@ class OnlineTuner(_AuditMixin):
                     table[key] = float(lat)
                     traj.append((self._cfg(key), table[key]))
             return table[key]
+
+        def mget_key(key: Key):
+            # keys lay out as self.knobs (ps, dist, pb, then only the
+            # CONFIGURED extras) — positional unpacking into mget's full
+            # parameter list would misassign extras when some spaces are
+            # absent (e.g. a fanout landing in the cap slot), probing a
+            # cached key forever instead of the intended neighbor
+            cfg = self._cfg(key)
+            return (yield from mget(cfg["ps"], cfg["dist"], cfg["pb"],
+                                    cfg.get("cap", c0), cfg.get("k", k0),
+                                    cfg.get("fanout", f0),
+                                    cfg.get("batch", bt0)))
 
         def climb(values, cur, f):
             best, best_lat = cur, (yield from f(cur))
@@ -368,7 +408,8 @@ class OnlineTuner(_AuditMixin):
             # warm start: the cached optimum is measured first, so it seeds
             # the table (and is the committed answer if nothing beats it).
             yield from mget(warm["ps"], warm["dist"], warm["pb"],
-                            warm.get("cap", c0), warm.get("k", k0))
+                            warm.get("cap", c0), warm.get("k", k0),
+                            warm.get("fanout", f0), warm.get("batch", bt0))
 
         ps = yield from climb(self.ps_space, p0,
                               lambda v: mget(v, d0, b0))
@@ -383,22 +424,38 @@ class OnlineTuner(_AuditMixin):
             cap = yield from climb(caps, c0, lambda v: mget(ps, dist, pb, v))
         kk = k0
         if ks:
-            # k climbs after everything else: it trades accuracy for wire
-            # bytes, so it only moves on the settled schedule (and a pure
-            # latency objective keeps it at the space's floor — see the
-            # class docstring on k_space being accuracy-approved).
+            # k climbs after the schedule knobs: it trades accuracy for
+            # wire bytes, so it only moves on the settled schedule (and a
+            # pure latency objective keeps it at the space's floor — see
+            # the class docstring on k_space being accuracy-approved).
             kk = yield from climb(ks, k0,
                                   lambda v: mget(ps, dist, pb, cap, v))
+        fo = f0
+        if fos:
+            # sampling geometry climbs last of all: fanout bounds per-hop
+            # work (accuracy-approved space, like k) ...
+            fo = yield from climb(fos, f0,
+                                  lambda v: mget(ps, dist, pb, cap, kk, v))
+        bt = bt0
+        if bts:
+            # ... and batch amortizes fixed per-step cost over more seeds —
+            # it only climbs when the caller feeds per-seed latencies
+            # (dt / batch), under which larger batches win until the
+            # device saturates.
+            bt = yield from climb(bts, bt0,
+                                  lambda v: mget(ps, dist, pb, cap, kk, fo,
+                                                 v))
 
         # Retreat rule: if pb never improved, drop ps one notch and retry pb
-        # (on the climbed cap/k, so the probes stay on the incumbent's slice).
+        # (on the climbed cap/k/fanout/batch, so the probes stay on the
+        # incumbent's slice).
         if pb == b0 and ps != p0:
             ps_retreat = self.ps_space[max(0, self.ps_space.index(ps) - 1)]
             pb2 = yield from climb(self.pb_space, b0,
                                    lambda v: mget(ps_retreat, dist, v, cap,
-                                                  kk))
-            a = yield from mget(ps_retreat, dist, pb2, cap, kk)
-            b = yield from mget(ps, dist, pb, cap, kk)
+                                                  kk, fo, bt))
+            a = yield from mget(ps_retreat, dist, pb2, cap, kk, fo, bt)
+            b = yield from mget(ps, dist, pb, cap, kk, fo, bt)
             if a < b:
                 self._emit("retreat", ps_from=ps, ps_to=ps_retreat,
                            pb_from=pb, pb_to=pb2, latency=a)
@@ -415,7 +472,7 @@ class OnlineTuner(_AuditMixin):
             if not cands:
                 return
             cut = sorted(finite.values())[:self.top_k][-1]
-            lat = yield from mget(*cands[0])
+            lat = yield from mget_key(cands[0])
             if lat > cut:
                 return
 
@@ -424,7 +481,9 @@ class OnlineTuner(_AuditMixin):
         out: List[Key] = []
         spaces = (self.ps_space, self.dist_space, self.pb_space) \
             + ((self.cap_space,) if self.cap_space else ()) \
-            + ((self.k_space,) if self.k_space else ())
+            + ((self.k_space,) if self.k_space else ()) \
+            + ((self.fanout_space,) if self.fanout_space else ()) \
+            + ((self.batch_space,) if self.batch_space else ())
         for dim, space in enumerate(spaces):
             i = space.index(key[dim]) if key[dim] in space else None
             if i is None:
@@ -474,6 +533,13 @@ class PerLayerTuner(_AuditMixin):
     pinned into every layer config.  Model stages apply it to hidden
     layers only (layer 0 always rides the dense ring).
 
+    ``fanout_space`` / ``batch_space`` make the sampled mini-batch
+    geometry (``repro.sample``) tuned knobs.  One block pipeline feeds
+    every layer — sampling geometry is global like capacity — so only
+    the global phase's sub-tuner climbs them; the committed values are
+    pinned into every layer config (see :class:`OnlineTuner` for the
+    per-seed-latency caveat on ``batch``).
+
     Every ``observe`` is the latency of the FULL forward under the proposed
     per-layer configs, so each phase's table is a valid surface for its
     free layer.  The measurement ``budget`` is shared across all phases —
@@ -491,6 +557,8 @@ class PerLayerTuner(_AuditMixin):
         *,
         cap_space: Tuple[int, ...] = (),
         k_space: Tuple[int, ...] = (),
+        fanout_space: Tuple[int, ...] = (),
+        batch_space: Tuple[int, ...] = (),
         fuse_space: Tuple[bool, ...] = (False,),
         vmem_checks=None,   # None | callable | per-layer sequence of callables
         top_k: int = 3,
@@ -508,6 +576,8 @@ class PerLayerTuner(_AuditMixin):
         self.pb_space = tuple(sorted(pb_space))
         self.cap_space = tuple(sorted(cap_space))
         self.k_space = tuple(sorted(k_space))
+        self.fanout_space = tuple(sorted(fanout_space))
+        self.batch_space = tuple(sorted(batch_space))
         self.fuse_space = tuple(dict.fromkeys(bool(f) for f in fuse_space))
         if not self.fuse_space:
             self.fuse_space = (False,)
@@ -790,6 +860,12 @@ class PerLayerTuner(_AuditMixin):
                 # k is likewise climbed globally: the paper's accuracy
                 # budget is end-to-end, so per-layer phases keep it pinned
                 k_space=self.k_space if self._sub_layer is None else (),
+                # sampling geometry (one block pipeline feeds all layers)
+                # is global too
+                fanout_space=(self.fanout_space
+                              if self._sub_layer is None else ()),
+                batch_space=(self.batch_space
+                             if self._sub_layer is None else ()),
                 vmem_check=self._layer_check(self._sub_layer),
                 top_k=self.top_k, warm_start=warm,
             )

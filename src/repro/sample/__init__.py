@@ -1,0 +1,15 @@
+"""Host-side fanout-bounded neighbor sampling (fixed-shape blocks).
+
+See :mod:`repro.sample.blocks` for the block format and padding
+contract, and ``docs/sampling.md`` for the end-to-end picture.
+"""
+from .blocks import (Block, block_tree, sample_blocks, sampled_khop_frontier,
+                     seed_batches)
+
+__all__ = [
+    "Block",
+    "sample_blocks",
+    "block_tree",
+    "seed_batches",
+    "sampled_khop_frontier",
+]

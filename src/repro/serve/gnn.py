@@ -56,6 +56,7 @@ from repro.core.graph import CSRGraph, khop_in_frontier, neighbors_of
 from repro.core.placement import pgas_rows
 from repro.obs import MetricsRegistry, NULL_TRACER
 from repro.runtime.engine import DynamicGNNEngine
+from repro.sample import sampled_khop_frontier
 from repro.serve.hotcache import HotNodeCache
 from repro.serve.stats import TrafficSnapshot, WorkloadStats
 from repro.serve.traffic import TrafficEvent
@@ -106,6 +107,8 @@ class GNNServeEngine:
         feature_store: Optional[FeatureStore] = None,
         feature_capacity: Optional[int] = None,
         hotset_path: Optional[str] = None,
+        frontier_fanout: Optional[int] = None,
+        frontier_seed: int = 0,
         log_fn: Callable[[str], None] = lambda _s: None,
         clock: Callable[[], float] = time.perf_counter,
         retune_gate: Optional[
@@ -132,6 +135,16 @@ class GNNServeEngine:
         self.min_records = int(min_records)
         self.use_cache = bool(use_cache)
         self.cache = HotNodeCache(graph.num_nodes, capacity=cache_capacity)
+        # fanout-bounded frontier accounting (repro.sample): when set, the
+        # per-batch receptive-field size fed to WorkloadStats (and hence
+        # hot-admission pressure) comes from a sampled k-hop frontier —
+        # bounded by slots·(fanout+1)^k instead of the full BFS fan-out,
+        # which on power-law graphs is the whole graph within 2 hops.
+        # Cache GATING stays exact: a fanout-bounded frontier may miss a
+        # dirty row, and correctness gates on the exact (k-1)-hop set.
+        self.frontier_fanout = (None if frontier_fanout is None
+                                else int(frontier_fanout))
+        self._frontier_rng = np.random.default_rng(frontier_seed)
         self.log = log_fn
         self.clock = clock
         # coordinator hook: called with (self, drift_score) when traffic
@@ -204,13 +217,20 @@ class GNNServeEngine:
         # ``hotset_path`` overrides; no cache and no override ⇒ off).
         # Only the IDS persist — the row bits are refetched from the
         # store at warm admission, so a restart can never serve stale
-        # features.  Concurrent replicas write last-writer-wins, which
-        # is safe for the same reason: the sidecar is a warm-start hint,
-        # never a source of feature bits.
+        # features.  The derived path is per-REPLICA: cluster replicas
+        # share one ConfigCache (that is the point — search once, adopt
+        # cheaply) but each replica's hot set reflects ITS routed
+        # traffic slice, so a shared sidecar would be last-writer-wins
+        # across replicas and every restart would warm-load whichever
+        # replica dumped last.  The ``replica`` obs label (set by
+        # launch/serve_gnn.py and the cluster) suffixes the path.
         self._hotset_path = hotset_path
         if self._hotset_path is None and self.dynamic \
                 and engine.cache is not None:
-            self._hotset_path = engine.cache.path + ".hotset.json"
+            rep = self.obs_labels.get("replica")
+            suffix = ".hotset.json" if rep is None \
+                else f".hotset.r{rep}.json"
+            self._hotset_path = engine.cache.path + suffix
         if self.tiers is not None:
             self._hotset_load()
 
@@ -393,6 +413,19 @@ class GNNServeEngine:
         dirty = self.rev.row(int(node))
         return self.cache.invalidate(dirty)
 
+    def sampled_frontier(self, seeds: np.ndarray) -> np.ndarray:
+        """Fanout-bounded k-hop receptive field of ``seeds`` (sorted
+        unique global ids) — the sampled counterpart of the exact BFS
+        frontier, composing :mod:`repro.sample` with the serving path.
+        Always a subset of the exact frontier; size bounded by
+        ``len(seeds) * (frontier_fanout + 1) ** k_hops``.  Duplicate
+        seeds (two requests for one node in a batch) are deduped."""
+        if self.frontier_fanout is None:
+            raise ValueError("serve engine built without frontier_fanout")
+        return sampled_khop_frontier(
+            self.g_full, np.unique(np.asarray(seeds, dtype=np.int64)),
+            [self.frontier_fanout] * self.k_hops, rng=self._frontier_rng)
+
     # -- the serving loop ----------------------------------------------------
 
     def step(self) -> List[ServeResult]:
@@ -431,9 +464,19 @@ class GNNServeEngine:
                               n_seeds=int(n_seeds)):
             f_need = khop_in_frontier(self.g_full, seeds,
                                       max(0, self.k_hops - 1))
-            fk_size = np.unique(np.concatenate(
-                [f_need, neighbors_of(self.g_full, f_need).astype(np.int64)])
-            ).size if self.k_hops > 0 else f_need.size
+            if self.frontier_fanout is not None and self.k_hops > 0:
+                # stats-side receptive field via the sampled frontier:
+                # bounded work per batch, and the Zipfian head still
+                # dominates the histogram (hub nodes appear in most
+                # samples), so hot admission sees the same head.
+                fk_size = self.sampled_frontier(seeds).size
+            elif self.k_hops > 0:
+                fk_size = np.unique(np.concatenate(
+                    [f_need,
+                     neighbors_of(self.g_full, f_need).astype(np.int64)])
+                ).size
+            else:
+                fk_size = f_need.size
             misses = self.cache.lookup(f_need)
         if self.record_stats:
             self.stats.record(batch[-1].t_arrival, seeds, fk_size,

@@ -7,7 +7,7 @@ feature *chunks* — one ring tile per device — sourcing each row from the
 device hot cache when resident and from the host
 :class:`~repro.store.FeatureStore` otherwise.
 
-Two consumers:
+Three consumers:
 
 * :func:`repro.core.pipeline.mgg_aggregate_streamed` pulls chunks one at
   a time through :meth:`chunk_fetcher`; the pipeline dispatches chunk
@@ -21,6 +21,10 @@ Two consumers:
   the device — the Pallas DMA kernel in :mod:`repro.kernels.rows` on
   real TPUs), and the buffer is dropped after the pass — steady-state
   device residency is the hot cache alone.
+* The sampled mini-batch path (``repro.sample``) calls
+  :meth:`gather_rows` with each block's ``src_ids`` — arbitrary row
+  sets, no plan required (``plan=None`` builds a planless store view):
+  Zipfian-head seeds hit the hot cache, tail rows ride one host gather.
 
 **Bitwise guarantee**: every assembled row is the float32 bits of the
 store's current row — whether it traveled via the cache (filled by
@@ -52,7 +56,7 @@ __all__ = ["TieredFeatures"]
 class TieredFeatures:
     """Tiered (host store + device hot cache) view of one PGAS layout."""
 
-    def __init__(self, store: FeatureStore, plan: AggregationPlan,
+    def __init__(self, store: FeatureStore, plan: Optional[AggregationPlan],
                  capacity: int,
                  shard: Optional[Callable] = None,
                  metrics: Optional[MetricsRegistry] = None,
@@ -76,7 +80,12 @@ class TieredFeatures:
             "store.cache_rows_served", **self.labels)
         self._c_assemblies = self.metrics.counter(
             "store.assemblies", **self.labels)
-        self.set_plan(plan)
+        # plan=None: planless mode for the sampled mini-batch path — only
+        # gather_rows() is usable (no ring chunk maps to build).
+        self.plan = None
+        self._chunks = []
+        if plan is not None:
+            self.set_plan(plan)
 
     @property
     def host_rows_streamed(self) -> int:
@@ -187,20 +196,28 @@ class TieredFeatures:
         feature rows at ``pos`` and zeros elsewhere — as a row *gather*,
         not the seed's per-row scatter: host-side selector tables name,
         for every output row, its source row in either the uploaded cold
-        batch (whose trailing zero row doubles as the padding source) or
+        batch (whose trailing zero rows double as the padding source) or
         the hot-cache table, and the device runs two row gathers plus a
         per-row select.  Each output row is one source row verbatim, so
-        assembly stays bitwise-identical to the scatter formulation."""
+        assembly stays bitwise-identical to the scatter formulation.
+
+        The cold upload is padded to the next power-of-two row count:
+        the cold miss count varies call to call (sampling draws, cache
+        churn), and every distinct shape would otherwise compile a fresh
+        un-jitted gather executable — with the bucket there are at most
+        log2(rows) shapes, so steady state always hits the op cache."""
         import jax
         import jax.numpy as jnp
 
         hot, slots = self._source(ids)
         cold = ~hot
         n_cold = int(cold.sum())
+        bucket = 1 << max(n_cold - 1, 0).bit_length()  # ≥ n_cold, pow2
         cold_rows = self.store.gather(ids[cold])
         cold_up = jax.device_put(np.concatenate(
-            [cold_rows, np.zeros((1, self.store.d_feat), cold_rows.dtype)]))
-        cold_sel = np.full(rows, n_cold, np.int32)     # default: the pad row
+            [cold_rows, np.zeros((bucket + 1 - n_cold, self.store.d_feat),
+                                 cold_rows.dtype)]))
+        cold_sel = np.full(rows, bucket, np.int32)     # default: a pad row
         cold_sel[pos[cold]] = np.arange(n_cold, dtype=np.int32)
         out = self._gather(cold_up, jnp.asarray(cold_sel))
         if hot.any():
@@ -218,6 +235,9 @@ class TieredFeatures:
     def device_chunk(self, c: int):
         """Assemble ring chunk ``c``: the ``(n_dev · tile_rows, d_feat)``
         device array holding every device's chunk-``c`` tile."""
+        if self.plan is None:
+            raise ValueError("TieredFeatures built without a plan — only "
+                             "gather_rows() is available")
         ids, pos, _ = self._chunks[c]
         buf = self._assemble(self.plan.n_dev * self.plan.tile_rows, ids, pos)
         return self.shard(buf) if self.shard is not None else buf
@@ -232,10 +252,37 @@ class TieredFeatures:
         over every chunk's row set (the chunk maps are disjoint and cover
         all real rows; everything else is padding, served by the zero pad
         row).  Transient: callers drop it after the pass."""
+        if self.plan is None:
+            raise ValueError("TieredFeatures built without a plan — only "
+                             "gather_rows() is available")
         ids = np.concatenate([c[0] for c in self._chunks])
         fpos = np.concatenate([c[2] for c in self._chunks])
         buf = self._assemble(self.plan.padded_nodes, ids, fpos)
         return self.shard(buf) if self.shard is not None else buf
+
+    def gather_rows(self, ids, rows: Optional[int] = None):
+        """Assemble an arbitrary row set — the sampled mini-batch path's
+        source feature tables (``Block.src_ids``).
+
+        ``ids`` is a 1-D global-id array; ``ids[i] < 0`` is the sentinel
+        -padding contract of ``repro.sample`` and yields a zero row, as
+        do rows beyond ``len(ids)`` when ``rows`` over-allocates.  Hot
+        rows come off the device cache, cold rows ride one host gather —
+        the same :meth:`_assemble` as the ring chunks, so the result is
+        bitwise-identical to an all-resident ``x[ids]`` at ANY capacity
+        (including 0).  Buffers are replicated (mini-batch working sets
+        are mesh-small), so ``shard`` is not applied."""
+        ids = np.asarray(ids, dtype=np.int64).ravel()
+        n = ids.shape[0] if rows is None else int(rows)
+        if n < ids.shape[0]:
+            raise ValueError(f"rows={n} cannot hold {ids.shape[0]} ids")
+        pos = np.nonzero(ids >= 0)[0]
+        live = ids[pos]
+        if live.size and int(live.max()) >= self.store.num_nodes:
+            raise ValueError(
+                f"node id {int(live.max())} out of range for store of "
+                f"{self.store.num_nodes} rows")
+        return self._assemble(n, live, pos.astype(np.int32))
 
     # -- accounting ----------------------------------------------------------
 

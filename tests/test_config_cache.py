@@ -55,7 +55,7 @@ def test_two_processes_hammering_same_file_lose_nothing(tmp_path):
         assert cache.get(shape) == dict(ps=1, dist=1, pb=1), i
     # the file on disk is a single valid current-schema document
     with open(path) as f:
-        assert json.load(f)["version"] == 4
+        assert json.load(f)["version"] == 5
 
 
 def test_version_mismatch_discard_warns_exactly_once(tmp_path):
@@ -79,11 +79,11 @@ def test_version_mismatch_discard_warns_exactly_once(tmp_path):
     assert cache.get(shape) == dict(ps=4, dist=1, pb=1)
 
 
-def test_v2_files_discarded_with_one_warning_and_v4_roundtrips_knobs(
+def test_v2_files_discarded_with_one_warning_and_v5_roundtrips_knobs(
         tmp_path):
-    """``cap``/``fuse`` (v3) and ``k`` (v4) persist alongside
-    (ps, dist, pb); v2 files read as empty with the same single
-    RuntimeWarning per path that v1 files get."""
+    """``cap``/``fuse`` (v3), ``k`` (v4) and ``fanout``/``batch`` (v5)
+    persist alongside (ps, dist, pb); v2 files read as empty with the
+    same single RuntimeWarning per path that v1 files get."""
     path = str(tmp_path / "v2.json")
     shape = WorkloadShape(n_dev=1, d_feat=7, rows_per_dev=10,
                           local_edges_max=5, remote_edges_max=5)
@@ -98,16 +98,20 @@ def test_v2_files_discarded_with_one_warning_and_v4_roundtrips_knobs(
         warnings.simplefilter("always")
         assert probe.get(shape) is None           # warned once already
     assert not [w for w in rec if issubclass(w.category, RuntimeWarning)]
-    # v4 round-trips the full knob set, global and per-layer
-    probe.put(shape, dict(ps=4, dist=2, pb=1, cap=128, k=16), 1e-3)
-    assert probe.get(shape) == dict(ps=4, dist=2, pb=1, cap=128, k=16)
+    # v5 round-trips the full knob set, global and per-layer
+    probe.put(shape, dict(ps=4, dist=2, pb=1, cap=128, k=16,
+                          fanout=8, batch=256), 1e-3)
+    assert probe.get(shape) == dict(ps=4, dist=2, pb=1, cap=128, k=16,
+                                    fanout=8, batch=256)
     cfgs = [dict(ps=8, dist=1, pb=1, cap=64, fuse=True),
-            dict(ps=2, dist=1, pb=1, cap=64, k=32, fuse=False)]
-    probe.put_layers([shape, shape.with_d_feat(3)], cfgs, 2e-3)
-    assert probe.get_layers([shape, shape.with_d_feat(3)]) == cfgs
+            dict(ps=2, dist=1, pb=1, cap=64, k=32, fuse=False),
+            dict(ps=2, dist=1, pb=1, fanout=4, batch=128)]
+    shapes = [shape, shape.with_d_feat(3), shape.with_d_feat(5)]
+    probe.put_layers(shapes, cfgs, 2e-3)
+    assert probe.get_layers(shapes) == cfgs
     with open(path) as f:
         doc = json.load(f)
-    assert doc["version"] == 4
+    assert doc["version"] == 5
     # plain (ps, dist, pb) entries stay exactly three knobs on disk
     probe.put(shape.with_d_feat(9), dict(ps=1, dist=1, pb=1), 1e-3)
     assert probe.get(shape.with_d_feat(9)) == dict(ps=1, dist=1, pb=1)

@@ -449,7 +449,7 @@ def test_cache_v1_files_discarded_with_one_warning():
         cache.put(shape, dict(ps=4, dist=1, pb=1), 1e-3)
         assert cache.get(shape) == dict(ps=4, dist=1, pb=1)
         with open(path) as f:
-            assert json.load(f)["version"] == 4
+            assert json.load(f)["version"] == 5
 
 
 def test_per_layer_warm_starts_from_global_cache_entry():

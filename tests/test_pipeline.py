@@ -131,6 +131,29 @@ def test_wire_index_dtype_picks_narrowest():
     assert wire_index_dtype(32768) == jnp.int32
 
 
+@pytest.mark.parametrize("d", [32767, 32768])
+def test_topk_roundtrip_through_wire_dtype_at_boundary(d):
+    """The int16→int32 wire boundary: column ids at the top of the width
+    (D-1, D-2, ...) must survive the cast to wire dtype and back.  At
+    D = 32767 the wire is int16 and the largest id is 32766 (fits); at
+    D = 32768 the wire widens to int32.  An off-by-one in either
+    direction shows up as values landing in wrapped-around columns."""
+    k = 4
+    rng = np.random.default_rng(7)
+    x = -np.abs(rng.normal(size=(3, d))).astype(np.float32)
+    hot = np.array([d - 1, d - 2, d // 2, 0])
+    for r in range(3):
+        x[r, hot] = np.float32([4.0, 3.0, 2.0, 1.0])
+    v, idx = topk_activation(jnp.asarray(x), k)
+    wire = idx.astype(wire_index_dtype(d))         # what rides the ring
+    assert int(jnp.max(wire)) == d - 1             # no wraparound
+    back = topk_decompress(v, wire, d)
+    want = np.zeros_like(x)
+    for r in range(3):
+        want[r, hot] = x[r, hot]
+    np.testing.assert_array_equal(_bits(back), want.view(np.uint32))
+
+
 def test_sparse_collective_bytes_model(small):
     g, _, _ = small
     plan = build_plan(g, 4, ps=8, dist=2)

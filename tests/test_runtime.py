@@ -284,7 +284,7 @@ def test_cache_roundtrip_corruption_and_atomicity():
         cache.put(shape, dict(ps=4, dist=1, pb=2), 1e-3)
         assert cache.get(shape) == dict(ps=4, dist=1, pb=2)
         with open(path) as f:
-            assert json.load(f)["version"] == 4
+            assert json.load(f)["version"] == 5
         # no stray tmp files left behind
         assert all(not fn.endswith(".tmp") for fn in os.listdir(d))
 
@@ -410,6 +410,55 @@ def test_dynamic_engine_warm_starts_from_cache():
             g, mesh, d_feat=x.shape[1], ps_space=(1, 2, 4),
             dist_space=(1, 2), pb_space=(1, 2), cache_path=path)
         assert e2.config == best
+
+
+def test_tuner_climbs_fanout_and_batch_on_per_seed_latency():
+    """The sampling-geometry knobs ride the same hill-climb as cap/k:
+    fanout climbs after k, batch last, each retreating on a worse probe.
+    The surface is per-seed latency, so a bigger batch that amortizes
+    fixed overhead genuinely wins."""
+
+    def surface(c):
+        # fixed 2ms dispatch amortized over the batch + per-seed cost
+        # that grows with fanout; optimum at (fanout=4, batch=256)
+        return 2.0 / c["batch"] + 0.001 * c["fanout"] ** 2
+
+    t = OnlineTuner((4,), (1,), (1,), fanout_space=(4, 8, 16),
+                    batch_space=(64, 128, 256))
+    while not t.converged:
+        t.observe(surface(t.propose()))
+    assert t.best == dict(ps=4, dist=1, pb=1, fanout=4, batch=256)
+    assert t.measured <= 12, t.measured
+
+
+def test_dynamic_engine_roundtrips_fanout_batch_via_cache():
+    g, x, *_ = _gnn_setup(seed=9)
+    mesh = flat_ring_mesh(1)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tuned.json")
+        e1 = DynamicGNNEngine.build(
+            g, mesh, d_feat=x.shape[1], ps_space=(4,), dist_space=(1,),
+            pb_space=(1,), fanout_space=(4, 8), batch_space=(64, 128),
+            window=ProfileConfig(warmup=0, iters=1), cache_path=path)
+        fake = lambda c: 0.5 / c["batch"] + 0.01 * c["fanout"]
+        for _ in range(40):
+            e1.observe_step(fake(e1.config))
+            if e1.committed:
+                break
+        assert e1.committed
+        best = e1.config
+        assert best["fanout"] == 4 and best["batch"] == 128
+        assert e1.sample_fanout == 4 and e1.sample_batch == 128
+        assert ConfigCache(path).get(e1.shape) == best
+        # the ring plan never sees the sampling knobs
+        assert not hasattr(e1.plan, "fanout")
+        # second engine warm-starts on the full 5-knob config
+        e2 = DynamicGNNEngine.build(
+            g, mesh, d_feat=x.shape[1], ps_space=(4,), dist_space=(1,),
+            pb_space=(1,), fanout_space=(4, 8), batch_space=(64, 128),
+            cache_path=path)
+        assert e2.config == best
+        assert e2.sample_fanout == 4 and e2.sample_batch == 128
 
 
 def test_dynamic_engine_drift_retune():

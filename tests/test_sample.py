@@ -1,0 +1,179 @@
+"""repro.sample — fanout-bounded block sampling (single device).
+
+Property checks on the sampler (no replacement, real edges, exact
+padding), the block format contract (dst-first chaining, fixed shapes),
+planless TieredFeatures.gather_rows, and apply_blocks against a dense
+oracle.  The 8-device bitwise/retrace run lives in
+tests/multidev/sampled_blocks.py via test_system.py."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.core as C
+from repro.sample import (block_tree, sample_blocks,
+                          sampled_khop_frontier, seed_batches)
+from repro.store import FeatureStore, TieredFeatures
+
+
+@pytest.fixture(scope="module")
+def g():
+    return C.power_law(300, avg_degree=7.0, locality=0.4, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# sampler properties
+# ---------------------------------------------------------------------------
+
+def test_block_shapes_fixed_by_batch_and_fanouts(g):
+    rng = np.random.default_rng(0)
+    for n_seeds in (3, 17, 32):   # shapes must NOT depend on the seed count
+        seeds = rng.choice(g.num_nodes, n_seeds, replace=False)
+        b2, b1 = sample_blocks(g, seeds, [5, 3], batch=32, rng=rng)
+        assert b1.nbr.shape == (32, 3) and b1.src_ids.shape == (32 * 4,)
+        assert b2.nbr.shape == (32 * 4, 5)
+        assert b2.src_ids.shape == (32 * 4 * 6,)
+
+
+def test_sampled_neighbors_are_real_edges_without_replacement(g):
+    rng = np.random.default_rng(1)
+    seeds = rng.choice(g.num_nodes, 24, replace=False)
+    (blk,) = sample_blocks(g, seeds, [6], batch=24, rng=rng)
+    for r in range(blk.num_dst):
+        dst = blk.src_ids[r]
+        live = blk.nbr[r][blk.mask[r] > 0]
+        if dst < 0:
+            assert live.size == 0
+            continue
+        nb_global = blk.src_ids[live]
+        assert len(set(nb_global.tolist())) == live.size, "replacement"
+        row = set(g.row(int(dst)).tolist())
+        assert set(nb_global.tolist()) <= row
+        assert live.size == min(len(row), 6), "under-drew available nbrs"
+
+
+def test_pad_slots_point_at_sentinel_row(g):
+    rng = np.random.default_rng(2)
+    seeds = rng.choice(g.num_nodes, 8, replace=False)
+    (blk,) = sample_blocks(g, seeds, [4], batch=16, rng=rng)
+    pad = blk.mask == 0.0
+    assert (blk.nbr[pad] == blk.num_src).all(), \
+        "masked slots must index the appended zero sentinel row"
+
+
+def test_blocks_chain_dst_first(g):
+    rng = np.random.default_rng(3)
+    seeds = rng.choice(g.num_nodes, 16, replace=False)
+    blocks = sample_blocks(g, seeds, [4, 4, 4], batch=16, rng=rng)
+    for outer, inner in zip(blocks, blocks[1:]):
+        np.testing.assert_array_equal(outer.src_ids[:outer.num_dst],
+                                      inner.src_ids)
+    # innermost dst prefix is the seed vector itself, original order
+    np.testing.assert_array_equal(blocks[-1].src_ids[:len(seeds)], seeds)
+
+
+def test_sample_blocks_validates_inputs(g):
+    with pytest.raises(ValueError):
+        sample_blocks(g, np.array([1, 1]), [4], batch=8)   # dup seeds
+    with pytest.raises(ValueError):
+        sample_blocks(g, np.arange(9), [4], batch=8)       # over batch cap
+
+
+def test_seed_batches_cover_all_ids_exactly_once():
+    ids = np.arange(50)
+    seen = []
+    for seeds, valid in seed_batches(ids, 16, rng=np.random.default_rng(0)):
+        assert seeds.shape == (16,) and valid.shape == (16,)
+        assert ((seeds >= 0) == (valid > 0)).all()
+        seen.extend(seeds[seeds >= 0].tolist())
+    assert sorted(seen) == list(range(50))
+
+
+def test_sampled_frontier_is_subset_of_exact(g):
+    rng = np.random.default_rng(4)
+    seeds = rng.choice(g.num_nodes, 6, replace=False)
+    samp = sampled_khop_frontier(g, seeds, [3, 3], rng=rng)
+    exact = C.khop_in_frontier(g, seeds, 2)
+    assert set(samp.tolist()) <= set(exact.tolist())
+    assert set(seeds.tolist()) <= set(samp.tolist())
+
+
+# ---------------------------------------------------------------------------
+# planless gather_rows
+# ---------------------------------------------------------------------------
+
+def test_gather_rows_bitwise_any_capacity(g):
+    x = np.random.default_rng(5).normal(
+        size=(g.num_nodes, 9)).astype(np.float32)
+    ids = np.array([4, -1, 17, 250, -1, 0], np.int64)
+    want = np.where((ids >= 0)[:, None], x[np.clip(ids, 0, None)],
+                    np.float32(0.0))
+    for cap in (0, 40, g.num_nodes):
+        tiers = TieredFeatures(FeatureStore(x), None, capacity=cap)
+        if cap:
+            tiers.admit(np.argsort(-g.degrees)[:cap])
+        got = np.asarray(tiers.gather_rows(ids))
+        np.testing.assert_array_equal(got.view(np.uint32),
+                                      want.view(np.uint32))
+    # rows= pads the buffer beyond the id list
+    got = np.asarray(tiers.gather_rows(ids, rows=10))
+    assert got.shape == (10, 9) and (got[6:] == 0).all()
+
+
+def test_gather_rows_rejects_bad_ids_and_planless_chunks(g):
+    x = np.zeros((g.num_nodes, 4), np.float32)
+    tiers = TieredFeatures(FeatureStore(x), None, capacity=8)
+    with pytest.raises(ValueError):
+        tiers.gather_rows(np.array([g.num_nodes]))     # out of range
+    with pytest.raises(ValueError):
+        tiers.gather_rows(np.array([1, 2, 3]), rows=2)  # rows < ids
+    with pytest.raises(ValueError):
+        tiers.device_chunk(0)                           # needs a plan
+    with pytest.raises(ValueError):
+        tiers.padded_table()
+
+
+# ---------------------------------------------------------------------------
+# block aggregation vs dense oracle
+# ---------------------------------------------------------------------------
+
+def test_apply_blocks_matches_dense_oracle_bitwise(g):
+    import jax
+
+    rng = np.random.default_rng(6)
+    x = rng.normal(size=(g.num_nodes, 12)).astype(np.float32)
+    init, _, kw = C.MODEL_ZOO["sage"]
+    params = init(jax.random.key(1), 12, 4, **kw)
+    seeds = rng.choice(g.num_nodes, 20, replace=False)
+    blocks = sample_blocks(g, seeds, [4] * len(params["layers"]),
+                           batch=32, rng=rng)
+    h = jnp.asarray(np.where((blocks[0].src_ids >= 0)[:, None],
+                             x[np.clip(blocks[0].src_ids, 0, None)],
+                             np.float32(0.0)))
+    got = C.apply_blocks("sage", params, h, block_tree(blocks))
+
+    for i, (layer, b) in enumerate(zip(params["layers"], blocks)):
+        buf = jnp.concatenate([h, jnp.zeros((1, h.shape[1]), h.dtype)], 0)
+        nb = jnp.take(buf, jnp.asarray(b.nbr), axis=0)
+        s = (nb * jnp.asarray(b.mask)[..., None]).sum(axis=1)
+        deg = jnp.maximum(jnp.asarray(b.mask).sum(-1), 1.0)[:, None]
+        dense = lambda p, v: v @ p["w"] + p["b"]
+        h = dense(layer["self"], h[:b.num_dst]) + dense(layer["nbr"], s / deg)
+        if i < len(params["layers"]) - 1:
+            h = jax.nn.relu(h)
+    np.testing.assert_array_equal(np.asarray(got).view(np.uint32),
+                                  np.asarray(h).view(np.uint32))
+
+
+def test_apply_blocks_rejects_non_sage_and_layer_mismatch(g):
+    import jax
+
+    init, _, kw = C.MODEL_ZOO["sage"]
+    params = init(jax.random.key(0), 8, 3, **kw)
+    seeds = np.arange(4)
+    blocks = sample_blocks(g, seeds, [2], batch=4,
+                           rng=np.random.default_rng(0))
+    h = jnp.zeros((blocks[0].num_src, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        C.apply_blocks("gcn", params, h, block_tree(blocks))
+    with pytest.raises(ValueError):
+        C.apply_blocks("sage", params, h, block_tree(blocks))  # 1 blk, 2 lyr

@@ -283,3 +283,89 @@ def test_hot_set_persists_across_restart(tmp_path):
     srv3 = GNNServeEngine(eng, params, "gcn", x, g, slots=4,
                           feature_capacity=24, hotset_path=str(bad))
     assert srv3.tiers.cache.resident_rows == 0
+
+
+def test_sampled_frontier_bounded_and_subset_of_exact():
+    """``frontier_fanout`` swaps the *stats-side* frontier measurement to
+    the fanout-bounded sampled one (size ≤ slots·(fanout+1)^k) while the
+    cache-gating frontier stays exact — a sampled frontier may miss a
+    dirty row, so correctness never rides on it."""
+    g, x, eng, params, _ = _setup(model="gcn")
+    srv = GNNServeEngine(eng, params, "gcn", x, g, slots=4,
+                         frontier_fanout=3, frontier_seed=7)
+    seeds = np.array([1, 2, 7, 2])          # duplicates must be deduped
+    f = srv.sampled_frontier(seeds)
+    exact = C.khop_in_frontier(srv.g_full, np.unique(seeds), srv.k_hops)
+    assert set(f.tolist()) <= set(exact.tolist())
+    assert set(np.unique(seeds).tolist()) <= set(f.tolist())
+    assert f.size <= 3 * (3 + 1) ** srv.k_hops
+    np.testing.assert_array_equal(f, np.unique(f))   # sorted unique ids
+
+    # served answers are untouched by the sampled measurement
+    srv.submit(np.array([1, 2]))
+    (res,) = srv.step()
+    srv_exact = GNNServeEngine(eng, params, "gcn", x, g, slots=4)
+    srv_exact.submit(np.array([1, 2]))
+    (res_exact,) = srv_exact.step()
+    np.testing.assert_array_equal(res.logits, res_exact.logits)
+    # the recorded frontier size is the bounded sampled one
+    _t, _n, fk, _ids, _r = srv.stats._events[-1]
+    assert fk <= 2 * (3 + 1) ** srv.k_hops
+
+    # without the knob the method is an explicit error, not a silent 0
+    with pytest.raises(ValueError):
+        srv_exact.sampled_frontier(seeds)
+
+
+def test_replicas_get_distinct_hotset_sidecars(tmp_path):
+    """Regression: N replicas share ONE ConfigCache path (by design — the
+    tuned config is per-workload, not per-replica), and the hotset sidecar
+    used to be derived from it verbatim, so every replica clobbered the
+    same ``<cache>.hotset.json``.  The sidecar must be per-replica: each
+    replica's traffic shapes its own hot set."""
+    import os
+
+    g, x, _eng, params, _ = _setup(dynamic=True)
+    cache_path = str(tmp_path / "tuned.json")
+
+    def mk(replica, seed):
+        geng = DynamicGNNEngine.build(
+            g, flat_ring_mesh(1), d_feat=x.shape[1], ps_space=(4, 8),
+            dist_space=(1,), pb_space=(1,),
+            window=ProfileConfig(warmup=1, iters=1), cache_path=cache_path)
+        labels = {} if replica is None else {"replica": replica}
+        srv = GNNServeEngine(geng, params, "gcn", x, g, slots=4,
+                             feature_capacity=24, obs_labels=labels)
+        phases = [TrafficPhase(requests=40, alpha=1.3, rate=100.0,
+                               seeds_max=4)]
+        run_trace(srv, ZipfTraffic(g.num_nodes, x.shape[1], phases,
+                                   seed=seed))
+        return srv
+
+    srv0, srv1 = mk(0, seed=3), mk(1, seed=11)
+    assert srv0._hotset_path == cache_path + ".hotset.r0.json"
+    assert srv1._hotset_path == cache_path + ".hotset.r1.json"
+    assert os.path.exists(srv0._hotset_path)
+    assert os.path.exists(srv1._hotset_path)
+    ids0 = srv0.tiers.cache.resident_ids()
+    ids1 = srv1.tiers.cache.resident_ids()
+    assert ids0.size and ids1.size
+
+    # round-trip: each fresh replica warm-loads ITS OWN persisted set,
+    # untouched by the other replica's traffic
+    def warm(replica):
+        geng = DynamicGNNEngine.build(
+            g, flat_ring_mesh(1), d_feat=x.shape[1], ps_space=(4, 8),
+            dist_space=(1,), pb_space=(1,),
+            window=ProfileConfig(warmup=1, iters=1), cache_path=cache_path)
+        return GNNServeEngine(geng, params, "gcn", x, g, slots=4,
+                              feature_capacity=24,
+                              obs_labels={"replica": replica})
+    np.testing.assert_array_equal(
+        np.sort(warm(0).tiers.cache.resident_ids()), np.sort(ids0))
+    np.testing.assert_array_equal(
+        np.sort(warm(1).tiers.cache.resident_ids()), np.sort(ids1))
+
+    # unlabeled (single-replica) deployments keep the pre-fix path
+    srv_solo = mk(None, seed=3)
+    assert srv_solo._hotset_path == cache_path + ".hotset.json"

@@ -41,6 +41,8 @@ MULTIDEV_SCRIPTS = [
     "feature_store.py",      # tiered host store + hot cache: streamed ring
                              # bitwise across capacities, prefetch overlap,
                              # tiered serving ≡ resident serving
+    "sampled_blocks.py",     # fanout-bounded blocks: bitwise vs dense
+                             # oracle at any capacity, zero retraces
 ]
 
 # dryrun_lite.py runs via test_dryrun_machinery_small_mesh above
